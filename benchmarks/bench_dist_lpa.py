@@ -1,0 +1,57 @@
+"""Distributed LPA shard-count scaling on host devices (subprocess): label
+all-gather volume per iteration (THE collective of the design) and
+equivalence to the single-device result."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CODE = """
+import json, time
+import numpy as np, jax
+from repro.graphs.generators import powerlaw_communities
+from repro.core.distributed import build_dist_workspace, dist_lpa
+from repro.core.lpa import lpa, LPAConfig
+from repro.core.modularity import modularity
+
+g, _ = powerlaw_communities(8192, p_in=0.5, mix=0.02, seed=1)
+ref = lpa(g, LPAConfig(method="mg", rho=2))
+out = []
+for p in (1, 2, 4, 8):
+    mesh = jax.make_mesh((p,), ("shard",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    ws = build_dist_workspace(g, p)
+    t0 = time.time()
+    labels, iters = dist_lpa(mesh, ws, rho=2)
+    dt = time.time() - t0
+    out.append({
+        "shards": p,
+        "iterations": iters,
+        "runtime_s": round(dt, 3),
+        "matches_single_device": bool(
+            (np.asarray(labels) == np.asarray(ref.labels)).all()),
+        "allgather_bytes_per_iter_per_dev": int(4 * ws.v_pad * p),
+        "modularity": round(float(modularity(g, labels)), 4),
+    })
+print(json.dumps(out))
+"""
+
+
+def run(scale: str = "small"):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(_CODE)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    if res.returncode != 0:
+        return [{"bench": "dist_lpa_scaling", "error": res.stderr[-400:]}]
+    rows = json.loads(res.stdout.strip().splitlines()[-1])
+    for r in rows:
+        r["bench"] = "dist_lpa_scaling"
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 2: runtime and modularity of νMG-LPA for k in 2..32.
+
+Reproduces the paper's trade-off: larger k -> better quality, more work
+per entry; the paper picks k = 8. Work volume (padded entries x k slot
+ops) is reported alongside wall clock since the TPU cost of the fold is
+k vector ops per entry.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import fold_work_volume, suite
+from repro.core.lpa import LPAConfig, lpa
+from repro.core.modularity import modularity
+
+KS = (2, 4, 8, 16, 32)
+
+
+def run(scale: str = "small"):
+    rows = []
+    graphs = suite(scale)
+    for gname, g in graphs.items():
+        for k in KS:
+            cfg = LPAConfig(method="mg", k=k, chunk=128, rho=2)
+            t0 = time.perf_counter()
+            res = lpa(g, cfg)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "bench": "fig2_k_sweep", "graph": gname, "k": k,
+                "runtime_s": round(dt, 3),
+                "iterations": res.iterations,
+                "modularity": round(float(modularity(g, res.labels)), 4),
+                "slot_ops_per_iter": fold_work_volume(g, cfg) * k,
+            })
+    return rows

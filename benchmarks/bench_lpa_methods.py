@@ -1,0 +1,48 @@
+"""Paper Fig. 7(a,b,c,d): runtime, speedup, modularity, and memory of
+exact (ν-LPA analogue) vs νMG8 vs νBM across the four graph families.
+
+CPU wall-clock measures the XLA-CPU lowering of the same programs that
+target TPU; the memory columns are the real story being reproduced
+(exact = O(|E|) vs sketch = O(k|V|) / O(|V|)).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (lpa_working_set_bytes, measured_step_temp_bytes,
+                               suite)
+from repro.core.lpa import LPAConfig, lpa
+from repro.core.modularity import modularity
+
+METHODS = ("exact", "mg", "bm")
+
+
+def run(scale: str = "small"):
+    rows = []
+    graphs = suite(scale)
+    for gname, g in graphs.items():
+        base = None
+        for method in METHODS:
+            cfg = LPAConfig(method=method, rho=2)
+            import time
+            t0 = time.perf_counter()
+            res = lpa(g, cfg)
+            dt = time.perf_counter() - t0
+            q = float(modularity(g, res.labels))
+            ws = lpa_working_set_bytes(method, g, cfg)
+            temp = measured_step_temp_bytes(g, cfg)
+            if method == "exact":
+                base = dt
+            rows.append({
+                "bench": "fig7_methods", "graph": gname, "method": method,
+                "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                "runtime_s": round(dt, 3),
+                "speedup_vs_exact": round(base / dt, 2) if base else 1.0,
+                "iterations": res.iterations,
+                "modularity": round(q, 4),
+                "algo_bytes": int(ws["algo_bytes"]),
+                "xla_temp_bytes": int(temp),
+                "bytes_per_edge": round(ws["algo_bytes"] / max(g.n_edges, 1),
+                                        2),
+            })
+    return rows

@@ -1,0 +1,32 @@
+"""Framework integration benchmark: LPA-community partitioning vs the
+naive contiguous split — edge-cut fraction drives the cross-device
+message/label traffic of distributed LPA and full-graph GNN training."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import suite
+from repro.graphs.partition import (contiguous_parts, edge_cut_fraction,
+                                    lpa_partition)
+
+
+def run(scale: str = "small"):
+    rows = []
+    graphs = suite(scale)
+    for gname in ("web", "social", "road"):
+        g = graphs[gname]
+        for p in (8, 64):
+            t0 = time.perf_counter()
+            part = lpa_partition(g, p)
+            dt = time.perf_counter() - t0
+            cut_naive = edge_cut_fraction(g, contiguous_parts(g, p))
+            rows.append({
+                "bench": "lpa_partition", "graph": gname, "n_parts": p,
+                "edge_cut_lpa": round(part.edge_cut, 4),
+                "edge_cut_contiguous": round(cut_naive, 4),
+                "cut_reduction": round(cut_naive / max(part.edge_cut, 1e-9),
+                                       2),
+                "n_communities": part.n_communities,
+                "partition_time_s": round(dt, 3),
+            })
+    return rows

@@ -1,0 +1,33 @@
+"""Paper §4.5: Pick-Less cadence rho sweep — convergence iterations and
+modularity. rho=1 is PL-always (most conservative); large rho approaches
+PL-once-at-start. The paper chose rho=8 for async GPU; the synchronous
+JAX schedule relies on PL more (DESIGN.md §8), benchmarked here."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import suite
+from repro.core.lpa import LPAConfig, lpa
+from repro.core.modularity import modularity
+
+RHOS = (1, 2, 4, 8, 1000)
+
+
+def run(scale: str = "small"):
+    rows = []
+    graphs = suite(scale)
+    for gname, g in graphs.items():
+        for rho in RHOS:
+            cfg = LPAConfig(method="mg", rho=rho)
+            t0 = time.perf_counter()
+            res = lpa(g, cfg)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "bench": "pickless_rho", "graph": gname,
+                "rho": rho if rho < 1000 else "inf",
+                "iterations": res.iterations,
+                "converged": res.converged,
+                "runtime_s": round(dt, 3),
+                "modularity": round(float(modularity(g, res.labels)), 4),
+            })
+    return rows

@@ -1,0 +1,134 @@
+"""Paper Figs. 3/4/5 — the engineering-ablation trio, re-interpreted for
+TPU where the CUDA mechanism has no analogue (DESIGN.md §2):
+
+  Fig. 3 (shared-variable vs warp-vote slot selection) -> two slot-select
+     implementations of the same vectorized accumulate: argmax-over-mask
+     (branchless compare tree) vs min-over-iota (select + min reduce).
+  Fig. 4 (one shared sketch vs partial sketches + merge) -> chunked
+     virtual-vertex fold + merge rounds (chunk=128) vs a single row padded
+     to the full neighborhood width (the 'one sketch per vertex' limit).
+     The padded work volume is the load-balance story.
+  Fig. 5 (single vs double scan) -> rescan=False vs rescan=True.
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fold_work_volume, suite, time_fn
+from repro.core.lpa import LPAConfig, build_workspace, lpa
+from repro.core.modularity import modularity
+from repro.core import sketch as sketch_lib
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3 analogue: slot-select micro-variants of the accumulate step
+# ---------------------------------------------------------------------------
+
+def mg_fold_tile_minselect(labels, weights, k):
+    """Same fold, min-over-iota free-slot select (the kernel's idiom)."""
+    r, d = labels.shape
+    slot_iota = jnp.arange(k, dtype=jnp.int32)
+
+    def step(carry, xs):
+        s_k, s_v = carry
+        c, w = xs
+        valid = (w > 0) & (c >= 0)
+        occupied = s_v > 0
+        match = occupied & (s_k == c[:, None]) & valid[:, None]
+        any_match = match.any(axis=1)
+        s_v = s_v + jnp.where(match, w[:, None], 0.0)
+        free = ~occupied
+        first_free = jnp.min(jnp.where(free, slot_iota[None, :], k), axis=1)
+        has_free = first_free < k
+        claim_row = valid & ~any_match & has_free
+        claim = claim_row[:, None] & (slot_iota[None, :] == first_free[:, None])
+        s_k = jnp.where(claim, c[:, None], s_k)
+        s_v = jnp.where(claim, w[:, None], s_v)
+        dec_row = valid & ~any_match & ~has_free
+        s_v = jnp.maximum(s_v - jnp.where(dec_row[:, None], w[:, None], 0.0),
+                          0.0)
+        return (s_k, s_v), None
+
+    init = (jnp.full((r, k), -1, dtype=jnp.int32),
+            jnp.zeros((r, k), dtype=jnp.float32))
+    (s_k, s_v), _ = jax.lax.scan(step, init, (labels.T, weights.T))
+    return s_k, s_v
+
+
+def _fig3_rows(scale):
+    rows = []
+    rng = np.random.default_rng(0)
+    r, d, k = 4096, 128, 8
+    labels = jnp.asarray(rng.integers(0, 64, (r, d)).astype(np.int32))
+    weights = jnp.asarray(rng.random((r, d)).astype(np.float32) + 0.1)
+    f_argmax = jax.jit(lambda l, w: sketch_lib.mg_fold_tile(l, w, k))
+    f_minsel = jax.jit(lambda l, w: mg_fold_tile_minselect(l, w, k))
+    t_a = time_fn(f_argmax, labels, weights)
+    t_m = time_fn(f_minsel, labels, weights)
+    same = bool(jnp.array_equal(f_argmax(labels, weights)[0],
+                                f_minsel(labels, weights)[0]))
+    for name, t in (("argmax_select", t_a), ("min_iota_select", t_m)):
+        rows.append({"bench": "fig3_slot_select", "variant": name,
+                     "tile": f"{r}x{d}", "k": k,
+                     "runtime_s": round(t, 4),
+                     "relative": round(t / min(t_a, t_m), 2),
+                     "identical_output": same})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 analogue: chunked partial sketches + merge vs full-width rows
+# ---------------------------------------------------------------------------
+
+def _fig4_rows(scale):
+    rows = []
+    graphs = suite(scale)
+    for gname in ("web", "social"):
+        g = graphs[gname]
+        dmax = int(np.asarray(g.degrees).max())
+        full_width = 1 << (dmax - 1).bit_length()
+        for variant, chunk in (("partial_merge_c128", 128),
+                               ("single_sketch_fullwidth", full_width)):
+            cfg = LPAConfig(method="mg", chunk=chunk, rho=2)
+            t0 = time.perf_counter()
+            res = lpa(g, cfg)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "bench": "fig4_sketch_layout", "graph": gname,
+                "variant": variant, "chunk": chunk,
+                "runtime_s": round(dt, 3),
+                "padded_entries": fold_work_volume(g, cfg),
+                "modularity": round(float(modularity(g, res.labels)), 4),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: single vs double scan
+# ---------------------------------------------------------------------------
+
+def _fig5_rows(scale):
+    rows = []
+    graphs = suite(scale)
+    for gname, g in graphs.items():
+        for variant, rescan in (("single_scan", False), ("double_scan", True)):
+            cfg = LPAConfig(method="mg", rescan=rescan, rho=2)
+            t0 = time.perf_counter()
+            res = lpa(g, cfg)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "bench": "fig5_scan", "graph": gname, "variant": variant,
+                "runtime_s": round(dt, 3),
+                "iterations": res.iterations,
+                "modularity": round(float(modularity(g, res.labels)), 4),
+            })
+    return rows
+
+
+def run(scale: str = "small"):
+    return _fig3_rows(scale) + _fig4_rows(scale) + _fig5_rows(scale)

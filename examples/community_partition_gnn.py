@@ -1,0 +1,57 @@
+"""The paper's technique as a framework feature: νMG8-LPA communities drive
+the graph partitioner; the resulting locality-aware order feeds (a) the
+distributed LPA itself (halo label exchange shrinks with the edge cut) and
+(b) full-graph GNN training.
+
+  PYTHONPATH=src python examples/community_partition_gnn.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.distributed import build_dist_workspace, dist_lpa  # noqa: E402
+from repro.core.modularity import modularity  # noqa: E402
+from repro.data.synthetic import gnn_full_batch  # noqa: E402
+from repro.graphs.generators import powerlaw_communities  # noqa: E402
+from repro.graphs.partition import (contiguous_parts, edge_cut_fraction,  # noqa: E402
+                                    lpa_partition)
+
+P_SHARDS = 8
+graph, _ = powerlaw_communities(8192, p_in=0.5, mix=0.02, seed=1)
+print(f"graph: {graph.n_nodes} vertices / {graph.n_edges} edges; "
+      f"{P_SHARDS} devices\n")
+
+# 1. partition by vMG8-LPA communities
+part = lpa_partition(graph, P_SHARDS)
+cut_naive = edge_cut_fraction(graph, contiguous_parts(graph, P_SHARDS))
+print(f"edge cut: contiguous {cut_naive:.1%} -> LPA-partitioned "
+      f"{part.edge_cut:.1%} ({part.n_communities} communities)")
+
+# 2. distributed LPA with halo label exchange on the partitioned layout
+mesh = jax.make_mesh((P_SHARDS,), ("shard",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+ws_full = build_dist_workspace(graph, P_SHARDS, order=part.order)
+ws_halo = build_dist_workspace(graph, P_SHARDS, order=part.order, halo=True)
+labels_full, _ = dist_lpa(mesh, ws_full, rho=2)
+labels_halo, _ = dist_lpa(mesh, ws_halo, rho=2)
+assert (np.asarray(labels_full) == np.asarray(labels_halo)).all()
+full_b = 4 * ws_full.v_pad * P_SHARDS
+halo_b = 4 * (ws_halo.h_pad + ws_halo.hub_pad) * P_SHARDS
+print(f"label exchange/iter/device: full gather {full_b/1e3:.1f}KB -> "
+      f"hub+halo {halo_b/1e3:.1f}KB ({full_b/halo_b:.2f}x less), "
+      f"labels bit-identical; Q={float(modularity(graph, labels_halo)):.3f}")
+
+# 3. one full-graph PNA step on the same (partition-ordered) graph
+from repro.configs.registry import get_arch  # noqa: E402
+from repro.models.gnn.pna import init_pna, pna_forward  # noqa: E402
+
+cfg = get_arch("pna").smoke
+batch = gnn_full_batch(0, graph, d_feat=cfg.d_in or 8, n_classes=4)
+params = init_pna(jax.random.PRNGKey(0), cfg)
+out = jax.jit(lambda p, b: pna_forward(p, b, cfg))(params, batch)
+print(f"\nfull-graph PNA forward on the partitioned graph: out "
+      f"{out.shape}, finite={bool(jnp.isfinite(out).all())}")

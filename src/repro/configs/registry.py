@@ -1,0 +1,100 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+LPA workloads, each with its exact full config, a reduced smoke config, and
+its assigned input-shape cells.
+
+Select with ``--arch <id>`` in launch/dryrun.py and launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (architecture x input-shape) dry-run cell."""
+
+    name: str
+    kind: str          # train | prefill | decode | gnn_full | gnn_sampled |
+                       # recsys_train | recsys_serve | retrieval | lpa
+    params: Dict[str, Any]
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str        # lm | gnn | recsys | lpa
+    config: Any        # full production config
+    smoke: Any         # reduced CPU-testable config
+    cells: List[ShapeCell]
+    notes: str = ""
+
+
+def _lm_cells(decode_note: str = "") -> List[ShapeCell]:
+    return [
+        ShapeCell("train_4k", "train", dict(seq=4096, batch=256)),
+        ShapeCell("prefill_32k", "prefill", dict(seq=32768, batch=32)),
+        ShapeCell("decode_32k", "decode", dict(seq=32768, batch=128)),
+        ShapeCell("long_500k", "decode", dict(seq=524288, batch=1),
+                  note="full-attn(flagged): decode vs 500k KV is O(S)/token; "
+                       "cell runs, flagged per the assignment rule"
+                       + decode_note),
+    ]
+
+
+def _gnn_cells() -> List[ShapeCell]:
+    return [
+        ShapeCell("full_graph_sm", "gnn_full",
+                  dict(n_nodes=2708, n_edges=10556, d_feat=1433)),
+        ShapeCell("minibatch_lg", "gnn_sampled",
+                  dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+                       fanouts=(15, 10))),
+        ShapeCell("ogb_products", "gnn_full",
+                  dict(n_nodes=2449029, n_edges=61859140, d_feat=100)),
+        ShapeCell("molecule", "gnn_full",
+                  dict(n_nodes=30 * 128, n_edges=64 * 128, d_feat=16,
+                       batched=128)),
+    ]
+
+
+def _recsys_cells() -> List[ShapeCell]:
+    return [
+        ShapeCell("train_batch", "recsys_train", dict(batch=65536)),
+        ShapeCell("serve_p99", "recsys_serve", dict(batch=512)),
+        ShapeCell("serve_bulk", "recsys_serve", dict(batch=262144)),
+        ShapeCell("retrieval_cand", "retrieval",
+                  dict(batch=1, n_candidates=1000000)),
+    ]
+
+
+ARCHS: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    ARCHS[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        # populate on first use
+        import repro.configs.qwen3_moe_235b_a22b  # noqa: F401
+        import repro.configs.deepseek_v2_lite_16b  # noqa: F401
+        import repro.configs.granite_34b  # noqa: F401
+        import repro.configs.qwen3_1p7b  # noqa: F401
+        import repro.configs.glm4_9b  # noqa: F401
+        import repro.configs.pna  # noqa: F401
+        import repro.configs.meshgraphnet  # noqa: F401
+        import repro.configs.egnn  # noqa: F401
+        import repro.configs.equiformer_v2  # noqa: F401
+        import repro.configs.dcn_v2  # noqa: F401
+        import repro.configs.lpa_graphs  # noqa: F401
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_arch_ids() -> List[str]:
+    get_arch("dcn-v2")  # trigger population
+    return sorted(ARCHS)

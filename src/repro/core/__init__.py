@@ -1,0 +1,13 @@
+"""Core paper contribution: memory-efficient sketch-based LPA for community
+detection — weighted Misra-Gries (νMG-LPA) and Boyer-Moore (νBM-LPA) folds,
+the exact O(|E|) baseline, Pick-Less symmetry breaking, and modularity/NMI
+quality metrics."""
+from repro.core.lpa import (LPAConfig, LPAResult, LPAWorkspace,
+                            build_workspace, lpa, lpa_move, lpa_step_fn)
+from repro.core.modularity import modularity, nmi
+from repro.core import sketch, exact
+
+__all__ = [
+    "LPAConfig", "LPAResult", "LPAWorkspace", "build_workspace", "lpa",
+    "lpa_move", "lpa_step_fn", "modularity", "nmi", "sketch", "exact",
+]

@@ -1,0 +1,390 @@
+"""Multi-device LPA: vertex-sharded shard_map with explicit label all-gather.
+
+Distribution model (DESIGN.md §4):
+
+  * vertices are split into P contiguous, edge-balanced ranges (optionally
+    after a locality reorder from ``repro.graphs.partition``);
+  * every shard owns its CSR rows, a single-width virtual-vertex fold plan
+    (width = ``chunk``), and its slice of the label vector;
+  * per iteration the only collective is one ``all_gather`` of the label
+    vector (4·|V| bytes per device) — sketches, folds, selection and the
+    Pick-Less/hash-tie move rule are entirely shard-local;
+  * ΔN convergence uses a ``psum``.
+
+Label *values* are real global vertex ids (so Pick-Less comparisons agree
+across shards); label *positions* live in a padded global layout
+[P · V_pad], which is what the all-gather produces and what the remapped
+neighbor ids index into.
+
+All per-shard arrays are padded to the max across shards so the stacked
+[P, ...] pytree has uniform shapes — the price is pad lanes that fold to
+empty sketches (weight 0 entries are no-ops by construction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sketch as sketch_lib
+
+PAD = -1
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DistLPAWorkspace:
+    """Stacked per-shard arrays (leading axis P).
+
+    Two label-exchange modes (EXPERIMENTS.md §Perf hillclimb — LPA):
+      full gather (send_idx None): nbr_pos indexes the padded-global label
+        layout produced by one all_gather of 4·|V| bytes per iteration.
+      halo (send_idx set): nbr_pos indexes a LOCAL table [own labels ++
+        halo slots]; per iteration each shard sends only the labels its
+        peers actually reference (all_to_all of [P, H_pad]), cutting the
+        exchanged bytes by the boundary fraction of the partition.
+    """
+
+    nbr_pos: jnp.ndarray       # [P, M_pad] int32 — label positions (see above)
+    weights: jnp.ndarray       # [P, M_pad] float32
+    round_gathers: Tuple[jnp.ndarray, ...]  # per round: [P, R_pad_r, chunk] int32
+    final_row_vertex: jnp.ndarray  # [P, R_last] int32 — local vertex per final row (-1 pad)
+    init_labels: jnp.ndarray   # [P, V_pad] int32 — real global ids (-1 on pad slots)
+    n_nodes: int
+    v_pad: int
+    k: int
+    chunk: int
+    send_idx: jnp.ndarray | None = None  # [P(owner), P(dest), H_pad] local slots
+    h_pad: int = 0
+    hub_idx: jnp.ndarray | None = None   # [P, HUB_pad] local slots of hubs
+    hub_pad: int = 0
+
+    def tree_flatten(self):
+        children = (self.nbr_pos, self.weights, self.round_gathers,
+                    self.final_row_vertex, self.init_labels, self.send_idx,
+                    self.hub_idx)
+        return children, (self.n_nodes, self.v_pad, self.k, self.chunk,
+                          self.h_pad, self.hub_pad)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children[:5], *aux[:4], send_idx=children[5],
+                   h_pad=aux[4], hub_idx=children[6], hub_pad=aux[5])
+
+    @property
+    def n_shards(self) -> int:
+        return self.nbr_pos.shape[0]
+
+
+def _edge_balanced_ranges(degrees: np.ndarray, p: int) -> np.ndarray:
+    """[P+1] vertex range boundaries with roughly equal edge counts."""
+    cum = np.concatenate([[0], np.cumsum(degrees)])
+    targets = np.linspace(0, cum[-1], p + 1)
+    bounds = np.searchsorted(cum, targets[1:-1])
+    return np.concatenate([[0], bounds, [len(degrees)]]).astype(np.int64)
+
+
+def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
+                         order: np.ndarray | None = None,
+                         halo: bool = False) -> DistLPAWorkspace:
+    """Host-side construction of the stacked distributed workspace.
+
+    ``order`` optionally renumbers vertices first (e.g. the LPA-community
+    locality order from repro.graphs.partition) — new_id = order[old_id].
+    ``halo=True`` builds the halo-exchange tables (see DistLPAWorkspace).
+    """
+    offsets = np.asarray(graph.offsets, dtype=np.int64)
+    indices = np.asarray(graph.indices, dtype=np.int64)
+    weights = np.asarray(graph.weights, dtype=np.float32)
+    n = graph.n_nodes
+    if order is not None:
+        inv = np.empty(n, dtype=np.int64)
+        inv[order] = np.arange(n)
+        # rebuild CSR under the new numbering
+        degrees_old = offsets[1:] - offsets[:-1]
+        new_deg = degrees_old[inv]
+        new_off = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(new_deg, out=new_off[1:])
+        new_idx = np.empty_like(indices)
+        new_wgt = np.empty_like(weights)
+        for v_new in range(n):  # pragma: no cover - exercised via partition tests
+            v_old = inv[v_new]
+            s, e = offsets[v_old], offsets[v_old + 1]
+            ns = new_off[v_new]
+            new_idx[ns:ns + e - s] = order[indices[s:e]]
+            new_wgt[ns:ns + e - s] = weights[s:e]
+        offsets, indices, weights = new_off, new_idx, new_wgt
+
+    degrees = offsets[1:] - offsets[:-1]
+    bounds = _edge_balanced_ranges(degrees, n_shards)
+    v_pad = int(np.max(bounds[1:] - bounds[:-1])) if n else 1
+    # map global vertex id -> padded-global position p * v_pad + local slot
+    shard_of = np.repeat(np.arange(n_shards), bounds[1:] - bounds[:-1])
+    local_slot = np.arange(n) - bounds[shard_of]
+    padded_pos = shard_of * v_pad + local_slot
+
+    m_pad = int(max(offsets[bounds[p + 1]] - offsets[bounds[p]]
+                    for p in range(n_shards))) if n else 1
+
+    # per-shard, per-round row counts (single width = chunk)
+    shard_counts = []
+    for p in range(n_shards):
+        shard_counts.append(degrees[bounds[p]:bounds[p + 1]])
+    n_rounds = 1
+    tmp = [c.copy() for c in shard_counts]
+    while True:
+        chunks = [np.ceil(c / chunk).astype(np.int64) for c in tmp]
+        if all((ch <= 1).all() for ch in chunks):
+            break
+        tmp = [ch * k for ch in chunks]
+        n_rounds += 1
+
+    nbr_pos = np.full((n_shards, m_pad), PAD, dtype=np.int32)
+    wgts = np.zeros((n_shards, m_pad), dtype=np.float32)
+    init_labels = np.full((n_shards, v_pad), PAD, dtype=np.int32)
+    per_round_gathers = [[] for _ in range(n_rounds)]
+    per_round_rows = np.zeros((n_shards, n_rounds), dtype=np.int64)
+
+    shard_plans = []
+    for p in range(n_shards):
+        lo, hi = bounds[p], bounds[p + 1]
+        e0, e1 = offsets[lo], offsets[hi]
+        nbr_pos[p, :e1 - e0] = padded_pos[indices[e0:e1]]
+        wgts[p, :e1 - e0] = weights[e0:e1]
+        init_labels[p, :hi - lo] = np.arange(lo, hi)
+        counts = degrees[lo:hi].copy()
+        starts = np.zeros(hi - lo, dtype=np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        plan_rounds = []
+        for r in range(n_rounds):
+            n_chunks = np.ceil(counts / chunk).astype(np.int64)
+            total_rows = int(n_chunks.sum())
+            row_vertex = np.repeat(np.arange(hi - lo, dtype=np.int64), n_chunks)
+            row_rank = np.arange(total_rows) - np.repeat(
+                np.cumsum(n_chunks) - n_chunks, n_chunks)
+            row_start = starts[row_vertex] + row_rank * chunk
+            row_count = np.minimum(counts[row_vertex] - row_rank * chunk, chunk)
+            gather = row_start[:, None] + np.arange(chunk)[None, :]
+            gather = np.where(np.arange(chunk)[None, :] < row_count[:, None],
+                              gather, PAD).astype(np.int32)
+            plan_rounds.append((gather, row_vertex.astype(np.int32)))
+            per_round_rows[p, r] = total_rows
+            counts = n_chunks * k
+            starts = np.zeros(hi - lo, dtype=np.int64)
+            starts[1:] = np.cumsum(counts)[:-1]
+        shard_plans.append(plan_rounds)
+
+    r_pads = per_round_rows.max(axis=0).clip(min=1)
+    round_gathers = []
+    final_row_vertex = np.full((n_shards, int(r_pads[-1])), PAD, dtype=np.int32)
+    for r in range(n_rounds):
+        g = np.full((n_shards, int(r_pads[r]), chunk), PAD, dtype=np.int32)
+        for p in range(n_shards):
+            gather, row_vertex = shard_plans[p][r]
+            g[p, :len(gather)] = gather
+            if r == n_rounds - 1:
+                final_row_vertex[p, :len(row_vertex)] = row_vertex
+        round_gathers.append(jnp.asarray(g))
+
+    send_idx = hub_idx_arr = None
+    h_pad = hub_pad = 0
+    if halo:
+        # reference count: how many shards' edge lists touch each vertex
+        ref = np.zeros(n, dtype=np.int32)
+        needs = []
+        for p in range(n_shards):
+            lo, hi = bounds[p], bounds[p + 1]
+            idx_p = indices[offsets[lo]:offsets[hi]]
+            owners = shard_of[idx_p]
+            remote = np.unique(idx_p[owners != p])
+            ref[remote] += 1
+            needs.append(remote)
+        # hubs (referenced by >= P/4 shards) go through a small all-gather;
+        # per-pair a2a padding would otherwise be dominated by them
+        hub_min = max(3, n_shards // 2)
+        is_hub = ref >= hub_min
+        hub_pad = max(int(np.bincount(shard_of[is_hub],
+                                      minlength=n_shards).max())
+                      if is_hub.any() else 0, 1)
+        hub_idx_arr = np.full((n_shards, hub_pad), PAD, dtype=np.int32)
+        hub_rank = np.full(n, -1, dtype=np.int64)
+        for p in range(n_shards):
+            hubs_p = np.nonzero(is_hub & (shard_of == p))[0]
+            hub_idx_arr[p, :len(hubs_p)] = local_slot[hubs_p]
+            hub_rank[hubs_p] = np.arange(len(hubs_p))
+        # need[p][q] = sorted q-local slots (non-hub) shard p references
+        need = [[np.zeros(0, np.int64)] * n_shards for _ in range(n_shards)]
+        for p in range(n_shards):
+            remote = needs[p]
+            remote = remote[~is_hub[remote]]
+            owners = shard_of[remote]
+            for q in np.unique(owners):
+                need[p][q] = np.sort(local_slot[remote[owners == q]])
+        h_pad = max((len(need[p][q]) for p in range(n_shards)
+                     for q in range(n_shards)), default=0)
+        h_pad = max(int(h_pad), 1)
+        send_idx = np.full((n_shards, n_shards, h_pad), PAD, dtype=np.int32)
+        for p in range(n_shards):
+            for q in range(n_shards):
+                if len(need[p][q]):
+                    send_idx[q, p, :len(need[p][q])] = need[p][q]
+        # remap nbr_pos to the local table
+        # [v_pad own ++ P*hub_pad hubs ++ P*h_pad halo]
+        hub_base = v_pad
+        halo_base = v_pad + n_shards * hub_pad
+        for p in range(n_shards):
+            lo, hi = bounds[p], bounds[p + 1]
+            e0, e1 = offsets[lo], offsets[hi]
+            idx_p = indices[e0:e1]
+            owners = shard_of[idx_p]
+            pos = np.empty(e1 - e0, dtype=np.int32)
+            own = owners == p
+            pos[own] = local_slot[idx_p[own]]
+            hub_sel = is_hub[idx_p] & ~own
+            pos[hub_sel] = (hub_base + owners[hub_sel] * hub_pad
+                            + hub_rank[idx_p[hub_sel]])
+            for q in range(n_shards):
+                if q == p or not len(need[p][q]):
+                    continue
+                sel = (owners == q) & ~is_hub[idx_p] & ~own
+                rank = np.searchsorted(need[p][q], local_slot[idx_p[sel]])
+                pos[sel] = halo_base + q * h_pad + rank
+            nbr_pos[p, :e1 - e0] = pos
+
+    return DistLPAWorkspace(
+        nbr_pos=jnp.asarray(nbr_pos), weights=jnp.asarray(wgts),
+        round_gathers=tuple(round_gathers),
+        final_row_vertex=jnp.asarray(final_row_vertex),
+        init_labels=jnp.asarray(init_labels),
+        n_nodes=int(n), v_pad=int(v_pad), k=int(k), chunk=int(chunk),
+        send_idx=None if send_idx is None else jnp.asarray(send_idx),
+        h_pad=int(h_pad),
+        hub_idx=None if hub_idx_arr is None else jnp.asarray(hub_idx_arr),
+        hub_pad=int(hub_pad))
+
+
+def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
+                pick_less, seed, *, k, v_pad, axis_names, fold_tile,
+                send_idx=None, hub_idx=None):
+    """Per-shard body of one distributed LPA iteration (runs inside shard_map).
+
+    Shapes here are the *local* block shapes (leading P axis stripped).
+    """
+    nbr_pos = nbr_pos[0]          # [M_pad]
+    edge_w = edge_w[0]
+    round_gathers = [g[0] for g in round_gathers]
+    final_row_vertex = final_row_vertex[0]
+    labels = labels[0]            # [V_pad]
+
+    if send_idx is None:
+        # THE collective: one label all-gather per iteration.
+        label_table = jax.lax.all_gather(labels, axis_names, tiled=True)
+    else:
+        # hub labels: small all-gather (vertices referenced by many shards)
+        hidx = hub_idx[0]         # [HUB_pad]
+        hub_buf = jnp.where(hidx >= 0, labels[jnp.maximum(hidx, 0)], -1)
+        hub_all = jax.lax.all_gather(hub_buf, axis_names,
+                                     tiled=False).reshape(-1)
+        # halo exchange: send each peer exactly the labels it references.
+        sidx = send_idx[0]        # [P, H_pad]
+        buf = jnp.where(sidx >= 0, labels[jnp.maximum(sidx, 0)], -1)
+        recv = jax.lax.all_to_all(buf, axis_names, split_axis=0,
+                                  concat_axis=0, tiled=True)  # [P, H_pad]
+        label_table = jnp.concatenate([labels, hub_all, recv.reshape(-1)])
+
+    safe = jnp.maximum(nbr_pos, 0)
+    entry_labels = jnp.where(nbr_pos >= 0, label_table[safe], -1)
+    entry_weights = jnp.where(nbr_pos >= 0, edge_w, 0.0)
+
+    for r, gather in enumerate(round_gathers):
+        gl, gw = sketch_lib._gather_entries(gather, entry_labels, entry_weights)
+        s_k, s_v = fold_tile(gl, gw, k)
+        entry_labels, entry_weights = s_k.reshape(-1), s_v.reshape(-1)
+
+    # scatter final sketches to local vertices (+1 dump slot for pad rows)
+    dump = v_pad
+    row_v = jnp.where(final_row_vertex >= 0, final_row_vertex, dump)
+    cand_c = jnp.full((v_pad + 1, k), -1, jnp.int32).at[row_v].set(s_k)[:v_pad]
+    cand_w = jnp.zeros((v_pad + 1, k), jnp.float32).at[row_v].set(s_v)[:v_pad]
+    cand_c = jnp.where(cand_w > 0, cand_c, -1)
+
+    want = sketch_lib.choose_from_candidates(cand_c, cand_w, labels, seed)
+    allowed = jnp.where(pick_less, want < labels, want != labels)
+    is_real = labels >= 0
+    new_labels = jnp.where(allowed & is_real, want, labels)
+    changed = (new_labels != labels) & is_real
+    delta = jax.lax.psum(jnp.sum(changed.astype(jnp.int32)), axis_names)
+    return new_labels[None], delta
+
+
+def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
+                  fold_tile=None):
+    """Build the shard_map'd single-iteration function for ``mesh``.
+
+    Returns step(ws_arrays..., labels [P, V_pad], pick_less, seed) ->
+    (labels, delta_n). The caller jits it (dryrun lowers it).
+    """
+    axis_names = tuple(mesh.axis_names) if axis_names is None else axis_names
+    fold_tile = fold_tile or sketch_lib.mg_fold_tile
+    spec = P(axis_names)
+    n_rounds = len(ws.round_gathers)
+    halo = ws.send_idx is not None
+
+    def step(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
+             pick_less, seed, send_idx=None, hub_idx=None):
+        body = partial(_shard_move, k=ws.k, v_pad=ws.v_pad,
+                       axis_names=axis_names, fold_tile=fold_tile)
+        in_specs = [spec, spec, tuple([spec] * n_rounds), spec, spec,
+                    P(), P()]
+        args = [nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
+                pick_less, seed]
+        if send_idx is not None:
+            in_specs += [spec, spec]
+            args += [send_idx, hub_idx]
+
+            def body(*a):  # noqa: F811 — halo-threading wrapper
+                *rest, sidx, hidx = a
+                return _shard_move(*rest, k=ws.k, v_pad=ws.v_pad,
+                                   axis_names=axis_names,
+                                   fold_tile=fold_tile, send_idx=sidx,
+                                   hub_idx=hidx)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=tuple(in_specs),
+            out_specs=(spec, P()),
+            check_vma=False,
+        )(*args)
+
+    if halo:
+        return lambda *a: step(*a[:7],
+                               send_idx=a[7] if len(a) > 7 else ws.send_idx,
+                               hub_idx=a[8] if len(a) > 8 else ws.hub_idx)
+    return step
+
+
+def dist_lpa(mesh, ws: DistLPAWorkspace, rho: int = 8, tau: float = 0.05,
+             max_iters: int = 20):
+    """Run distributed LPA to convergence. Returns (labels [N], iterations)."""
+    step = jax.jit(dist_lpa_step(mesh, ws))
+    labels = ws.init_labels
+    n = ws.n_nodes
+    it = 0
+    for it in range(max_iters):
+        pl_on = (it % rho) == 0
+        labels, delta = step(ws.nbr_pos, ws.weights, ws.round_gathers,
+                             ws.final_row_vertex, labels,
+                             jnp.asarray(pl_on), jnp.int32(it + 1))
+        if not pl_on and int(delta) / max(n, 1) < tau:
+            break
+    flat = np.asarray(labels).reshape(-1)
+    slots = np.asarray(ws.init_labels).reshape(-1)
+    out = np.empty(n, dtype=np.int32)
+    real = slots >= 0
+    out[slots[real]] = flat[real]
+    return jnp.asarray(out), it + 1

@@ -1,0 +1,177 @@
+"""Label Propagation driver — the paper's Algorithms 1/3/4 on TPU-native JAX.
+
+Methods:
+  * ``exact`` — sort+segment exact aggregation (ν-LPA / GVE-LPA analogue,
+    O(|E|) working set).
+  * ``mg``    — weighted Misra-Gries k-slot sketches (νMG-LPA, O(k|V|)).
+  * ``bm``    — weighted Boyer-Moore majority vote (νBM-LPA, O(|V|)).
+
+Shared machinery (paper Alg. 1): unique initial labels; per-iteration move
+step; Pick-Less (PL) symmetry breaking every ``rho`` iterations starting at
+iteration 0 (a vertex may only adopt a *smaller* label while PL is active);
+convergence when the changed fraction drops below ``tau`` in a non-PL
+iteration; hard cap ``max_iters``.
+
+Deviation from the paper (documented in DESIGN.md §8): iterations are
+synchronous (pure-functional JAX) rather than asynchronous in-place, and the
+dense vector pipeline recomputes every vertex rather than gating on the
+unprocessed-frontier — the frontier is still tracked for convergence
+accounting and diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sketch_lib
+from repro.core.exact import exact_choose
+from repro.graphs.csr import CSRGraph, FoldPlan, build_fold_plan
+
+Method = Literal["exact", "mg", "bm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LPAConfig:
+    method: Method = "mg"
+    k: int = 8                 # MG sketch slots (paper: 8)
+    chunk: int = 128           # virtual-vertex chunk width (paper D_H: 128)
+    rho: int = 8               # Pick-Less cadence (paper: 8)
+    tau: float = 0.05          # convergence tolerance (paper: 0.05)
+    max_iters: int = 20        # paper: 20
+    rescan: bool = False       # double-scan mode (paper Fig. 5 ablation)
+    fold_backend: str = "jnp"  # "jnp" | "pallas"
+    mg_variant: str = "paper"  # "paper" | "exact_weighted" (DESIGN.md §8.4)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LPAWorkspace:
+    """Graph + static fold plan + CSR-expanded edge sources."""
+
+    graph: CSRGraph
+    plan: FoldPlan
+    edge_src: jnp.ndarray  # [M] int32
+
+    def tree_flatten(self):
+        return (self.graph, self.plan, self.edge_src), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build_workspace(graph: CSRGraph, config: LPAConfig) -> LPAWorkspace:
+    import numpy as np
+    plan = build_fold_plan(np.asarray(graph.degrees), k=config.k,
+                           chunk=config.chunk)
+    return LPAWorkspace(graph=graph, plan=plan, edge_src=graph.sources())
+
+
+def _fold_tiles(config: LPAConfig):
+    """Resolve tile-fold implementations for the chosen backend."""
+    if config.fold_backend == "pallas":
+        from repro.kernels.mg_sketch import ops as kops
+        return kops.mg_fold_tile_pallas, kops.bm_fold_tile_pallas
+    if config.mg_variant == "exact_weighted":
+        return sketch_lib.mg_fold_tile_exact_weighted, sketch_lib.bm_fold_tile
+    return sketch_lib.mg_fold_tile, sketch_lib.bm_fold_tile
+
+
+def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
+             seed: jnp.ndarray, config: LPAConfig
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One LPA iteration: returns (new_labels, changed_mask).
+
+    ``pick_less`` and ``seed`` are traced so the jitted step is reused
+    across PL-on/off iterations; ``seed`` varies per iteration and drives
+    the hash tie-breaking (DESIGN.md §8 — the synchronous stand-in for the
+    async/hashtable-order tie randomness of the GPU implementation).
+    """
+    graph, plan = ws.graph, ws.plan
+    nbr_labels = labels[graph.indices]
+    mg_tile, bm_tile = _fold_tiles(config)
+
+    if config.method == "exact":
+        want = exact_choose(ws.edge_src, nbr_labels, graph.weights,
+                            graph.n_nodes, labels, seed)
+    elif config.method == "mg":
+        s_k, s_v = sketch_lib.run_mg_plan(plan, nbr_labels, graph.weights,
+                                          fold_tile=mg_tile)
+        if config.rescan:
+            want = sketch_lib.rescan_candidates(plan, s_k, nbr_labels,
+                                                graph.weights, labels, seed)
+        else:
+            want = sketch_lib.select_best(plan, s_k, s_v, labels, seed)
+    elif config.method == "bm":
+        # incumbency is built into the fold's initial carry (Alg. 3 l. 13)
+        best, _ = sketch_lib.run_bm_plan(plan, nbr_labels, graph.weights,
+                                         labels, fold_tile=bm_tile)
+        want = jnp.where(best >= 0, best, labels)
+    else:
+        raise ValueError(f"unknown method {config.method!r}")
+
+    allowed = jnp.where(pick_less, want < labels, want != labels)
+    new_labels = jnp.where(allowed, want, labels)
+    changed = new_labels != labels
+    return new_labels, changed
+
+
+def mark_frontier(ws: LPAWorkspace, changed: jnp.ndarray) -> jnp.ndarray:
+    """Mark neighbors of changed vertices as unprocessed (paper Alg. 1 l. 31)."""
+    n = ws.graph.n_nodes
+    src_changed = changed[ws.edge_src].astype(jnp.int32)
+    marked = jax.ops.segment_max(src_changed, ws.graph.indices, num_segments=n)
+    return marked > 0
+
+
+@dataclasses.dataclass
+class LPAResult:
+    labels: jnp.ndarray
+    iterations: int
+    changed_history: list
+    converged: bool
+
+
+def lpa(graph: CSRGraph, config: LPAConfig = LPAConfig(),
+        ws: Optional[LPAWorkspace] = None, jit: bool = True) -> LPAResult:
+    """Run LPA to convergence (host loop; jitted move step)."""
+    ws = ws if ws is not None else build_workspace(graph, config)
+    move = lpa_move
+    if jit:
+        move = jax.jit(functools.partial(lpa_move, config=config))
+    n = graph.n_nodes
+    labels = jnp.arange(n, dtype=jnp.int32)
+    history = []
+    converged = False
+    it = 0
+    for it in range(config.max_iters):
+        pl = (it % config.rho) == 0
+        seed = jnp.int32(it + 1)
+        if jit:
+            labels, changed = move(ws, labels, jnp.asarray(pl), seed)
+        else:
+            labels, changed = lpa_move(ws, labels, jnp.asarray(pl), seed, config)
+        delta = int(jnp.sum(changed))
+        history.append(delta)
+        if not pl and delta / max(n, 1) < config.tau:
+            converged = True
+            break
+    return LPAResult(labels=labels, iterations=it + 1,
+                     changed_history=history, converged=converged)
+
+
+def lpa_step_fn(config: LPAConfig) -> Callable:
+    """A (ws, labels, iteration) -> (labels, delta_n) single-step function —
+    the unit the dry-run lowers and the roofline analyses."""
+
+    def step(ws: LPAWorkspace, labels: jnp.ndarray, iteration: jnp.ndarray):
+        pick_less = (iteration % config.rho) == 0
+        seed = iteration.astype(jnp.int32) + 1
+        new_labels, changed = lpa_move(ws, labels, pick_less, seed, config)
+        return new_labels, jnp.sum(changed.astype(jnp.int32))
+
+    return step

@@ -1,0 +1,302 @@
+"""Vectorized weighted Misra-Gries / Boyer-Moore sketch folds (pure JAX).
+
+This is the TPU adaptation of the paper's Section 4: instead of k CUDA
+threads cooperating on one sketch via warp ballots, every vector *lane* owns
+one whole sketch (lane-per-vertex layout). The k slots live on an unrolled
+trailing axis, so one accumulate step is ~6 vectorized ops over a tile of
+rows at once — no intra-sketch communication, no atomics, no retries.
+
+High-degree vertices are split into chunk-sized "virtual vertex" rows whose
+partial sketches are merged in later fold rounds (MG summaries are
+mergeable — paper §4.3); the multi-round plan comes from
+``repro.graphs.csr.build_fold_plan``.
+
+Functions here are the *reference* dense-JAX implementations; the Pallas
+kernels in ``repro.kernels.mg_sketch`` compute the same folds with explicit
+VMEM tiling and are validated against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import FoldPlan
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+UINT_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def hash_mix(x: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Cheap per-iteration label hash (Knuth multiplicative + xorshift).
+
+    Deterministic tie-breaking that *varies across iterations*: the TPU
+    stand-in for the effectively arbitrary tie order of the GPU hashtable /
+    async schedule. Prevents both min-label flooding and keep-on-tie
+    freezing in the synchronous schedule.
+    """
+    h = x.astype(jnp.uint32) * jnp.uint32(2654435761)
+    h = h ^ (seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x85EBCA77)
+    return h ^ (h >> 13)
+
+
+def _gather_entries(gather: jnp.ndarray, labels: jnp.ndarray,
+                    weights: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather [R, D] padded (label, weight) tiles from flat entry arrays."""
+    safe = jnp.maximum(gather, 0)
+    valid = gather >= 0
+    gl = jnp.where(valid, labels[safe], -1)
+    gw = jnp.where(valid, weights[safe], 0.0)
+    return gl, gw
+
+
+def mg_fold_tile(labels: jnp.ndarray, weights: jnp.ndarray, k: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold a padded [R, D] (label, weight) tile into [R, k] MG sketches.
+
+    Implements the paper's sketchAccumulate (Alg. 2) with lane-per-row
+    parallelism: matching slot += w; else claim first free slot; else
+    decrement every slot by w (clamped at 0 so the slot frees — equal to the
+    paper's integer arithmetic for unit weights, well-defined for real w).
+    """
+    r, d = labels.shape
+    slot_iota = jnp.arange(k, dtype=jnp.int32)
+
+    def step(carry, xs):
+        s_k, s_v = carry
+        c, w = xs  # [R]
+        valid = (w > 0) & (c >= 0)
+        occupied = s_v > 0
+        match = occupied & (s_k == c[:, None]) & valid[:, None]
+        any_match = match.any(axis=1)
+        s_v = s_v + jnp.where(match, w[:, None], 0.0)
+        free = ~occupied
+        has_free = free.any(axis=1)
+        first_free = jnp.argmax(free, axis=1).astype(jnp.int32)
+        claim_row = valid & ~any_match & has_free
+        claim = claim_row[:, None] & (slot_iota[None, :] == first_free[:, None])
+        s_k = jnp.where(claim, c[:, None], s_k)
+        s_v = jnp.where(claim, w[:, None], s_v)
+        dec_row = valid & ~any_match & ~has_free
+        s_v = jnp.maximum(s_v - jnp.where(dec_row[:, None], w[:, None], 0.0), 0.0)
+        return (s_k, s_v), None
+
+    init = (jnp.full((r, k), -1, dtype=jnp.int32),
+            jnp.zeros((r, k), dtype=jnp.float32))
+    (s_k, s_v), _ = jax.lax.scan(step, init, (labels.T, weights.T))
+    return s_k, s_v
+
+
+def mg_fold_tile_exact_weighted(labels: jnp.ndarray, weights: jnp.ndarray,
+                                k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Beyond-paper variant: the *exact* weighted Misra-Gries fold.
+
+    The paper's eviction rule (subtract the full incoming w from every
+    slot, drop the incoming item) loses the MG guarantee for arbitrary
+    weights — property testing found a majority-weight label being evicted
+    (DESIGN.md §8.4). The textbook weighted MG instead subtracts
+    m = min(min-slot weight, w) from all slots AND the incoming item, then
+    inserts the remainder into the freed slot; any label with total weight
+    > W/(k+1) provably survives for arbitrary positive weights
+    (tests/test_sketch.py::test_exact_weighted_mg_guarantee).
+    """
+    r, d = labels.shape
+    slot_iota = jnp.arange(k, dtype=jnp.int32)
+
+    def step(carry, xs):
+        s_k, s_v = carry
+        c, w = xs  # [R]
+        valid = (w > 0) & (c >= 0)
+        occupied = s_v > 0
+        match = occupied & (s_k == c[:, None]) & valid[:, None]
+        any_match = match.any(axis=1)
+        s_v = s_v + jnp.where(match, w[:, None], 0.0)
+        free = ~occupied
+        has_free = free.any(axis=1)
+        first_free = jnp.argmax(free, axis=1).astype(jnp.int32)
+        claim_row = valid & ~any_match & has_free
+        claim = claim_row[:, None] & (slot_iota[None, :] == first_free[:, None])
+        s_k = jnp.where(claim, c[:, None], s_k)
+        s_v = jnp.where(claim, w[:, None], s_v)
+        # exact weighted eviction: subtract m = min(min slot, w) from all
+        # slots and from w; insert the remainder into the freed min slot
+        dec_row = valid & ~any_match & ~has_free
+        min_v = jnp.min(s_v, axis=1)
+        m = jnp.minimum(min_v, w)
+        s_v = jnp.maximum(
+            s_v - jnp.where(dec_row[:, None], m[:, None], 0.0), 0.0)
+        leftover = w - m
+        min_slot = jnp.argmin(
+            jnp.where(dec_row[:, None], s_v, jnp.inf), axis=1
+        ).astype(jnp.int32)
+        take = dec_row & (leftover > 0)
+        claim2 = take[:, None] & (slot_iota[None, :] == min_slot[:, None])
+        s_k = jnp.where(claim2, c[:, None], s_k)
+        s_v = jnp.where(claim2, leftover[:, None], s_v)
+        return (s_k, s_v), None
+
+    init = (jnp.full((r, k), -1, dtype=jnp.int32),
+            jnp.zeros((r, k), dtype=jnp.float32))
+    (s_k, s_v), _ = jax.lax.scan(step, init, (labels.T, weights.T))
+    return s_k, s_v
+
+
+def bm_fold_tile(labels: jnp.ndarray, weights: jnp.ndarray,
+                 init_label: jnp.ndarray | None = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold a padded [R, D] tile into [R] weighted Boyer-Moore states.
+
+    Paper Alg. 3 lines 13-18: the carry starts as (C[i], 0) — the incumbent
+    label with zero votes — then match += w; else if w# > w: w# -= w; else
+    replace candidate.
+    """
+    r, d = labels.shape
+
+    def step(carry, xs):
+        ck, wk = carry
+        c, w = xs
+        valid = (w > 0) & (c >= 0)
+        same = valid & (c == ck)
+        bigger = valid & ~same & (wk > w)
+        replace = valid & ~same & ~bigger
+        wk = wk + jnp.where(same, w, 0.0) - jnp.where(bigger, w, 0.0)
+        ck = jnp.where(replace, c, ck)
+        wk = jnp.where(replace, w, wk)
+        return (ck, wk), None
+
+    if init_label is None:
+        init_label = jnp.full((r,), -1, dtype=jnp.int32)
+    init = (init_label, jnp.zeros((r,), jnp.float32))
+    (ck, wk), _ = jax.lax.scan(step, init, (labels.T, weights.T))
+    return ck, wk
+
+
+def run_mg_plan(plan: FoldPlan, entry_labels: jnp.ndarray,
+                entry_weights: jnp.ndarray, *, fold_tile=mg_fold_tile
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the full multi-round MG fold.
+
+    ``entry_labels/_weights`` are the round-0 entry arrays: the neighbor
+    community labels C[graph.indices] and edge weights, in CSR order.
+    Returns ([final_rows, k] sketch labels, weights); final rows map to
+    vertices via ``plan.row_to_vertex``.
+
+    ``fold_tile`` is injectable so the Pallas kernel backend can reuse the
+    identical plan-walking logic (see repro.kernels.mg_sketch.ops).
+    """
+    k = plan.k
+    labels, weights = entry_labels, entry_weights
+    for rnd in plan.rounds:
+        out_k = jnp.zeros((rnd.n_rows_total, k), dtype=jnp.int32)
+        out_v = jnp.zeros((rnd.n_rows_total, k), dtype=jnp.float32)
+        for bucket in rnd.buckets:
+            gl, gw = _gather_entries(bucket.gather, labels, weights)
+            s_k, s_v = fold_tile(gl, gw, k)
+            out_k = out_k.at[bucket.out_pos].set(s_k)
+            out_v = out_v.at[bucket.out_pos].set(s_v)
+        labels, weights = out_k.reshape(-1), out_v.reshape(-1)
+    return out_k, out_v
+
+
+def run_bm_plan(plan: FoldPlan, entry_labels: jnp.ndarray,
+                entry_weights: jnp.ndarray, cur_labels: jnp.ndarray,
+                *, fold_tile=bm_fold_tile) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run the BM fold + the paper's max-reduce merge across partial states.
+
+    Every partial carry starts as the vertex's incumbent label with zero
+    votes (paper Alg. 3 l. 13), giving keep-on-tie semantics. Only round 0
+    of the plan is folded; partial (c#, w#) states of a vertex are merged
+    with a pairwise-max reduce (paper §4.7), ties toward the incumbent and
+    then the smaller label. Returns per-vertex (label [N], weight [N]);
+    vertices with no entries get label -1.
+    """
+    n = plan.n_nodes
+    best_w = jnp.full((n,), -1.0, dtype=jnp.float32)
+    rnd = plan.rounds[0]
+    parts = []
+    for bucket in rnd.buckets:
+        gl, gw = _gather_entries(bucket.gather, entry_labels, entry_weights)
+        ck, wk = fold_tile(gl, gw, cur_labels[bucket.vertex])
+        parts.append((bucket.vertex, ck, wk))
+        best_w = jnp.maximum(best_w, jnp.full((n,), -1.0).at[bucket.vertex].max(wk))
+    # prefer the incumbent among max-weight partials, then the smaller label
+    keep = jnp.zeros((n,), dtype=jnp.bool_)
+    for vertex, ck, wk in parts:
+        keep = keep.at[vertex].max((wk >= best_w[vertex]) & (ck == cur_labels[vertex]))
+    best_c = jnp.full((n,), INT_MAX, dtype=jnp.int32)
+    for vertex, ck, wk in parts:
+        is_best = (wk >= best_w[vertex]) & (ck >= 0) & ~keep[vertex]
+        best_c = best_c.at[vertex].min(jnp.where(is_best, ck, INT_MAX))
+    best_c = jnp.where(keep, cur_labels, best_c)
+    has = best_c != INT_MAX
+    return jnp.where(has, best_c, -1), jnp.where(has, jnp.maximum(best_w, 0.0), 0.0)
+
+
+def choose_from_candidates(cand_c: jnp.ndarray, cand_w: jnp.ndarray,
+                           labels: jnp.ndarray, seed: jnp.ndarray
+                           ) -> jnp.ndarray:
+    """Unified move selection over per-vertex candidate sets [N, S].
+
+    The incumbent label (with its candidate-set weight, 0 if absent) always
+    competes. Winner = max weight, ties broken by the per-iteration hash,
+    then by smaller label. Returns the chosen label per vertex (== current
+    label when the vertex should not move).
+    """
+    n, _ = cand_c.shape
+    cur_w = jnp.max(jnp.where((cand_c == labels[:, None]) & (cand_w > 0),
+                              cand_w, 0.0), axis=1)
+    cand_c = jnp.concatenate([cand_c, labels[:, None]], axis=1)
+    cand_w = jnp.concatenate([cand_w, cur_w[:, None]], axis=1)
+    valid = cand_c >= 0
+    w = jnp.where(valid, cand_w, -1.0)
+    w_best = jnp.max(w, axis=1)
+    tied = valid & (w >= w_best[:, None])
+    h = hash_mix(cand_c, seed)
+    h = jnp.where(tied, h, UINT_MAX)
+    h_best = jnp.min(h, axis=1)
+    # resolve identical hashes toward the smaller label
+    in_hash = tied & (h <= h_best[:, None])
+    c_best = jnp.min(jnp.where(in_hash, cand_c, INT_MAX), axis=1)
+    return jnp.where(c_best == INT_MAX, labels, c_best)
+
+
+def scatter_rows(plan: FoldPlan, s_k: jnp.ndarray, s_v: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter final-round sketches [rows, k] to per-vertex [N, k]."""
+    n, k = plan.n_nodes, plan.k
+    cand_c = jnp.full((n, k), -1, jnp.int32).at[plan.row_to_vertex].set(s_k)
+    cand_w = jnp.zeros((n, k), jnp.float32).at[plan.row_to_vertex].set(s_v)
+    return cand_c, cand_w
+
+
+def select_best(plan: FoldPlan, s_k: jnp.ndarray, s_v: jnp.ndarray,
+                labels: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Pick the new label per vertex from final sketches (single-scan mode)."""
+    cand_c, cand_w = scatter_rows(plan, s_k, s_v)
+    cand_c = jnp.where(cand_w > 0, cand_c, -1)
+    return choose_from_candidates(cand_c, cand_w, labels, seed)
+
+
+def rescan_candidates(plan: FoldPlan, s_k: jnp.ndarray,
+                      entry_labels: jnp.ndarray, entry_weights: jnp.ndarray,
+                      labels: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
+    """Double-scan mode (paper §4.4 / Alg. 4): recompute the *exact* linking
+    weight of each of the k candidate labels by re-reading the neighborhood,
+    then pick the heaviest. Costs a second full pass over the edges — kept
+    for the Fig. 5 ablation; single-scan is the production default.
+    """
+    n, k = plan.n_nodes, plan.k
+    # Broadcast each vertex's consolidated candidate set to its chunk rows.
+    cand = jnp.full((n, k), -1, dtype=jnp.int32).at[plan.row_to_vertex].set(s_k)
+    acc = jnp.zeros((n, k), dtype=jnp.float32)
+    rnd = plan.rounds[0]
+    for bucket in rnd.buckets:
+        gl, gw = _gather_entries(bucket.gather, entry_labels, entry_weights)
+        row_cand = cand[bucket.vertex]  # [R, k]
+        hit = (gl[:, :, None] == row_cand[:, None, :]) & (row_cand[:, None, :] >= 0)
+        part = jnp.sum(jnp.where(hit, gw[:, :, None], 0.0), axis=1)  # [R, k]
+        acc = acc.at[bucket.vertex].add(part)
+    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc, labels, seed)

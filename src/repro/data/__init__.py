@@ -1,0 +1,2 @@
+from repro.data.synthetic import (token_batch, dcn_batch, gnn_full_batch,
+                                  gnn_sampled_batch)

@@ -1,0 +1,244 @@
+"""CSR graph container and sketch fold-plan construction.
+
+The fold plan is the host-side preprocessing that turns a power-law CSR
+adjacency into dense, padded, statically-shaped tiles suitable for the
+vectorized (lane-per-vertex) weighted Misra-Gries / Boyer-Moore folds — the
+TPU analogue of the paper's low/high-degree kernel split:
+
+  * every vertex's neighbor list is chunked into rows of at most ``chunk``
+    entries ("virtual vertices"; chunk = the paper's D_H = 128 by default);
+  * each row is assigned to a power-of-two width bucket so low-degree
+    vertices (road networks, k-mer graphs: deg ~ 2) don't pad to 128;
+  * a row folds into one k-slot partial sketch; rows of the same vertex are
+    merged in later rounds (MG summaries are mergeable) — each round reduces
+    per-vertex entries by ~chunk/k, so rounds are O(log_{chunk/k} D_max).
+
+All plan arrays are static per graph (they depend only on the degree
+structure, never on labels), so the whole multi-round fold jits cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+PAD = np.int32(-1)  # gather sentinel for padded entries
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSRGraph:
+    """Symmetric weighted graph in CSR form (device arrays)."""
+
+    offsets: jnp.ndarray  # [N+1] int32 — row offsets
+    indices: jnp.ndarray  # [M] int32 — neighbor ids (both directions stored)
+    weights: jnp.ndarray  # [M] float32 — edge weights (w_ij == w_ji)
+    n_nodes: int
+    n_edges: int  # directed edge slots == len(indices)
+
+    def tree_flatten(self):
+        return (self.offsets, self.indices, self.weights), (self.n_nodes, self.n_edges)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def degrees(self) -> jnp.ndarray:
+        return self.offsets[1:] - self.offsets[:-1]
+
+    @property
+    def total_weight(self) -> jnp.ndarray:
+        """m = half the sum of all directed edge weights."""
+        return 0.5 * jnp.sum(self.weights)
+
+    def sources(self) -> jnp.ndarray:
+        """Per-directed-edge source vertex id (expanded CSR rows)."""
+        return jnp.asarray(np.repeat(np.arange(self.n_nodes, dtype=np.int32),
+                                     np.asarray(self.degrees)))
+
+
+def build_csr(edges: np.ndarray, n_nodes: int, weights: np.ndarray | None = None,
+              symmetrize: bool = True, dedupe: bool = True) -> CSRGraph:
+    """Build a CSRGraph from an [E, 2] int array of (possibly directed) edges.
+
+    Self-loops are dropped (the paper's LPA skips j == i during voting).
+    Duplicate edges have their weights accumulated.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if weights is None:
+        weights = np.ones(len(edges), dtype=np.float32)
+    weights = np.asarray(weights, dtype=np.float32)
+    keep = edges[:, 0] != edges[:, 1]
+    edges, weights = edges[keep], weights[keep]
+    if symmetrize and len(edges):
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+        weights = np.concatenate([weights, weights], axis=0)
+    if len(edges):
+        key = edges[:, 0] * n_nodes + edges[:, 1]
+        order = np.argsort(key, kind="stable")
+        key, edges, weights = key[order], edges[order], weights[order]
+        if dedupe:
+            first = np.concatenate([[True], key[1:] != key[:-1]])
+            group = np.cumsum(first) - 1
+            weights = np.bincount(group, weights=weights,
+                                  minlength=int(group[-1]) + 1).astype(np.float32)
+            edges = edges[first]
+    counts = np.bincount(edges[:, 0], minlength=n_nodes) if len(edges) else \
+        np.zeros(n_nodes, dtype=np.int64)
+    offsets = np.zeros(n_nodes + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return CSRGraph(
+        offsets=jnp.asarray(offsets, dtype=jnp.int32),
+        indices=jnp.asarray(edges[:, 1], dtype=jnp.int32),
+        weights=jnp.asarray(weights, dtype=jnp.float32),
+        n_nodes=int(n_nodes),
+        n_edges=int(len(edges)),
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FoldBucket:
+    """One statically-shaped padded tile group inside a fold round."""
+
+    width: int           # D — entries per row (power of two, <= chunk)
+    gather: jnp.ndarray  # [R, D] int32 — indices into the round's entry arrays (PAD = -1)
+    out_pos: jnp.ndarray  # [R] int32 — canonical (vertex, chunk-rank) row position
+    vertex: jnp.ndarray  # [R] int32 — owning vertex of each row
+    n_rows: int
+
+    def tree_flatten(self):
+        return (self.gather, self.out_pos, self.vertex), (self.width, self.n_rows)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], *children, aux[1])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FoldRound:
+    buckets: Tuple[FoldBucket, ...]
+    n_entries_in: int    # length of the entry arrays this round consumes
+    n_rows_total: int    # number of partial sketches produced (canonical rows)
+
+    def tree_flatten(self):
+        return (self.buckets,), (self.n_entries_in, self.n_rows_total)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FoldPlan:
+    """Static multi-round reduction plan for the sketch folds."""
+
+    rounds: Tuple[FoldRound, ...]
+    row_to_vertex: jnp.ndarray  # [final n_rows] — owning vertex of each final sketch
+    n_nodes: int
+    k: int
+    chunk: int
+
+    def tree_flatten(self):
+        return (self.rounds, self.row_to_vertex), (self.n_nodes, self.k, self.chunk)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+
+def _bucket_widths(chunk: int, min_width: int = 4) -> List[int]:
+    widths, w = [], min_width
+    while w < chunk:
+        widths.append(w)
+        w *= 2
+    widths.append(chunk)
+    return widths
+
+
+def _plan_round(counts: np.ndarray, starts: np.ndarray, chunk: int,
+                widths: Sequence[int]):
+    """Chunk per-vertex entry ranges [starts, starts+counts) into bucketed rows.
+
+    Row order before bucketing is canonical: grouped by vertex, then chunk
+    rank. Returns (buckets, n_chunks_per_vertex, row_vertex_canonical) where
+    each bucket is (width, gather[R, D], out_pos[R], vertex[R]).
+    """
+    n = len(counts)
+    n_chunks = ((counts + chunk - 1) // chunk).astype(np.int64)
+    total_rows = int(n_chunks.sum())
+    row_vertex = np.repeat(np.arange(n, dtype=np.int64), n_chunks)
+    row_rank = np.arange(total_rows, dtype=np.int64) - np.repeat(
+        np.cumsum(n_chunks) - n_chunks, n_chunks)
+    row_start = starts[row_vertex] + row_rank * chunk
+    row_count = np.minimum(counts[row_vertex] - row_rank * chunk, chunk)
+
+    buckets = []
+    widths_arr = np.asarray(widths)
+    which = np.searchsorted(widths_arr, row_count)  # smallest width >= count
+    for wi, width in enumerate(widths):
+        sel = np.nonzero(which == wi)[0]
+        if sel.size == 0:
+            continue
+        rs, rc, rv = row_start[sel], row_count[sel], row_vertex[sel]
+        gather = rs[:, None] + np.arange(width)[None, :]
+        mask = np.arange(width)[None, :] < rc[:, None]
+        gather = np.where(mask, gather, PAD).astype(np.int32)
+        buckets.append((int(width), gather, sel.astype(np.int32),
+                        rv.astype(np.int32)))
+    return buckets, n_chunks, row_vertex
+
+
+def build_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
+                    min_width: int = 4) -> FoldPlan:
+    """Construct the static multi-round fold plan from the degree sequence."""
+    degrees = np.asarray(degrees, dtype=np.int64)
+    n = len(degrees)
+    if chunk <= k:
+        raise ValueError(f"chunk ({chunk}) must exceed sketch slots k ({k})")
+    widths = _bucket_widths(chunk, min_width)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(degrees, out=offsets[1:])
+
+    rounds: List[FoldRound] = []
+    counts, starts = degrees, offsets[:-1].copy()
+    n_entries = int(degrees.sum())
+    while True:
+        np_buckets, n_chunks, row_vertex = _plan_round(counts, starts, chunk, widths)
+        n_rows = int(n_chunks.sum())
+        rounds.append(FoldRound(
+            buckets=tuple(
+                FoldBucket(width=w, gather=jnp.asarray(g), out_pos=jnp.asarray(p),
+                           vertex=jnp.asarray(v), n_rows=len(v))
+                for (w, g, p, v) in np_buckets),
+            n_entries_in=n_entries,
+            n_rows_total=n_rows,
+        ))
+        if np.all(n_chunks <= 1):
+            final_row_vertex = row_vertex
+            break
+        # Next round consumes the flattened [n_rows, k] canonical sketches;
+        # vertex i's entries are contiguous at k * [chunk-row span of i].
+        counts = n_chunks * k
+        starts = np.zeros(n, dtype=np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        n_entries = n_rows * k
+
+    return FoldPlan(rounds=tuple(rounds),
+                    row_to_vertex=jnp.asarray(final_row_vertex, dtype=jnp.int32),
+                    n_nodes=n, k=k, chunk=chunk)
+
+
+def plan_padded_entries(plan: FoldPlan) -> int:
+    """Total padded entry slots across all rounds (the fold's compute volume)."""
+    return sum(b.width * b.n_rows for r in plan.rounds for b in r.buckets)

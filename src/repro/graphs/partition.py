@@ -1,0 +1,83 @@
+"""LPA-community-driven graph partitioning (the paper's technique as a
+first-class framework feature).
+
+Label propagation is a standard partitioning primitive (paper's refs [4, 57,
+82]); here the memory-efficient νMG-LPA detects communities and a greedy
+balanced bin-packer assigns whole communities to devices, giving a
+locality-aware contiguous vertex order for the distributed LPA / full-graph
+GNN shards. Reduces the edge-cut (= cross-device neighbor-label /
+message-passing traffic) versus the naive contiguous split.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.lpa import LPAConfig, lpa
+from repro.graphs.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class PartitionResult:
+    order: np.ndarray        # new_id = order[old_id]
+    parts: np.ndarray        # device id per (old) vertex
+    bounds: np.ndarray       # [P+1] new-id range boundaries per device
+    edge_cut: float          # fraction of edges crossing devices
+    n_communities: int
+
+
+def edge_cut_fraction(graph: CSRGraph, parts: np.ndarray) -> float:
+    src = np.asarray(graph.sources())
+    dst = np.asarray(graph.indices)
+    if len(src) == 0:
+        return 0.0
+    return float(np.mean(parts[src] != parts[dst]))
+
+
+def contiguous_parts(graph: CSRGraph, n_parts: int) -> np.ndarray:
+    """Baseline: contiguous edge-balanced split in the original order."""
+    degrees = np.asarray(graph.degrees, dtype=np.int64)
+    cum = np.concatenate([[0], np.cumsum(degrees)])
+    targets = np.linspace(0, cum[-1], n_parts + 1)
+    bounds = np.concatenate([[0], np.searchsorted(cum, targets[1:-1]),
+                             [graph.n_nodes]])
+    parts = np.zeros(graph.n_nodes, dtype=np.int32)
+    for p in range(n_parts):
+        parts[bounds[p]:bounds[p + 1]] = p
+    return parts
+
+
+def lpa_partition(graph: CSRGraph, n_parts: int,
+                  config: LPAConfig | None = None) -> PartitionResult:
+    """Detect communities with νMG-LPA, pack them onto devices, and emit a
+    locality-preserving contiguous renumbering."""
+    config = config or LPAConfig(method="mg")
+    result = lpa(graph, config)
+    labels = np.asarray(result.labels)
+    comm_ids, comm_inverse = np.unique(labels, return_inverse=True)
+    n_comm = len(comm_ids)
+    degrees = np.asarray(graph.degrees, dtype=np.int64)
+    comm_load = np.bincount(comm_inverse, weights=degrees + 1,
+                            minlength=n_comm)
+
+    # greedy: biggest community first onto the least-loaded device
+    device_load = np.zeros(n_parts)
+    comm_device = np.zeros(n_comm, dtype=np.int32)
+    for ci in np.argsort(comm_load)[::-1]:
+        d = int(np.argmin(device_load))
+        comm_device[ci] = d
+        device_load[d] += comm_load[ci]
+
+    parts = comm_device[comm_inverse]
+    # new order: sort vertices by (device, community, old id)
+    key = parts.astype(np.int64) * n_comm + comm_inverse
+    new_of_old = np.argsort(np.argsort(key, kind="stable"), kind="stable")
+    order = new_of_old.astype(np.int64)
+    counts = np.bincount(parts, minlength=n_parts)
+    bounds = np.zeros(n_parts + 1, dtype=np.int64)
+    np.cumsum(counts, out=bounds[1:])
+    return PartitionResult(order=order, parts=parts, bounds=bounds,
+                           edge_cut=edge_cut_fraction(graph, parts),
+                           n_communities=n_comm)

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the weighted Misra-Gries / Boyer-Moore sketch folds."""
+from repro.kernels.mg_sketch.ops import (mg_fold_tile_pallas,
+                                         bm_fold_tile_pallas)
+
+__all__ = ["mg_fold_tile_pallas", "bm_fold_tile_pallas"]

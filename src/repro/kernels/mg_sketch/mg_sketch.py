@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: lane-per-vertex weighted Misra-Gries sketch fold.
+
+TPU adaptation of the paper's sketchAccumulate (Alg. 2). One grid step
+processes a [TILE_R, D] tile of padded neighbor (label, weight) entries held
+in VMEM; each of the TILE_R rows (vertices / virtual-vertex chunks) owns a
+private k-slot sketch carried through an on-chip fori_loop — the k slots are
+an unrolled trailing axis, so a single accumulate step is ~8 vectorized VPU
+ops across the whole tile. There is no cross-lane traffic, no atomics, and
+no retry loops (the warp machinery of the CUDA version has no TPU analogue
+and is replaced by this layout — DESIGN.md §2).
+
+VMEM budget per grid step (defaults TILE_R=512, D=128, k=8):
+  in  tiles: 512*128*(4+4)   = 512 KiB
+  out tiles: 512*8*(4+4)     =  32 KiB
+  carries:   registers/VMEM scratch, 32 KiB
+comfortably inside the ~16 MiB VMEM of a TPU v5e core; the MXU is idle (the
+fold is a pure VPU workload) — the roofline term that matters is HBM bytes,
+which this kernel reads exactly once per entry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mg_kernel(labels_ref, weights_ref, out_k_ref, out_v_ref, *, k: int):
+    labels = labels_ref[...]    # [TILE_R, D] int32
+    weights = weights_ref[...]  # [TILE_R, D] float32
+    tile_r, d = labels.shape
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_r, k), 1)
+
+    def body(i, carry):
+        s_k, s_v = carry
+        c = jax.lax.dynamic_slice(labels, (0, i), (tile_r, 1))    # [R, 1]
+        w = jax.lax.dynamic_slice(weights, (0, i), (tile_r, 1))   # [R, 1]
+        valid = (w > 0) & (c >= 0)                                # [R, 1]
+        occupied = s_v > 0                                        # [R, k]
+        match = occupied & (s_k == c) & valid
+        any_match = match.any(axis=1, keepdims=True)
+        s_v = s_v + jnp.where(match, w, 0.0)
+        free = ~occupied
+        has_free = free.any(axis=1, keepdims=True)
+        # first free slot: smallest slot index among free ones
+        first_free = jnp.min(jnp.where(free, slot_iota, k), axis=1, keepdims=True)
+        claim = (valid & ~any_match & has_free) & (slot_iota == first_free)
+        s_k = jnp.where(claim, c, s_k)
+        s_v = jnp.where(claim, w, s_v)
+        dec = valid & ~any_match & ~has_free
+        s_v = jnp.maximum(s_v - jnp.where(dec, w, 0.0), 0.0)
+        return s_k, s_v
+
+    init = (jnp.full((tile_r, k), -1, jnp.int32), jnp.zeros((tile_r, k), jnp.float32))
+    s_k, s_v = jax.lax.fori_loop(0, d, body, init)
+    out_k_ref[...] = s_k
+    out_v_ref[...] = s_v
+
+
+def _bm_kernel(labels_ref, weights_ref, init_ref, out_k_ref, out_v_ref):
+    labels = labels_ref[...]     # [TILE_R, D]
+    weights = weights_ref[...]
+    tile_r, d = labels.shape
+
+    def body(i, carry):
+        ck, wk = carry           # [R, 1] each
+        c = jax.lax.dynamic_slice(labels, (0, i), (tile_r, 1))
+        w = jax.lax.dynamic_slice(weights, (0, i), (tile_r, 1))
+        valid = (w > 0) & (c >= 0)
+        same = valid & (c == ck)
+        bigger = valid & ~same & (wk > w)
+        replace = valid & ~same & ~bigger
+        wk = wk + jnp.where(same, w, 0.0) - jnp.where(bigger, w, 0.0)
+        ck = jnp.where(replace, c, ck)
+        wk = jnp.where(replace, w, wk)
+        return ck, wk
+
+    init = (init_ref[...], jnp.zeros((tile_r, 1), jnp.float32))
+    ck, wk = jax.lax.fori_loop(0, d, body, init)
+    out_k_ref[...] = ck
+    out_v_ref[...] = wk
+
+
+def mg_fold_pallas_call(labels: jnp.ndarray, weights: jnp.ndarray, k: int,
+                        tile_r: int, interpret: bool):
+    """pallas_call wrapper: [R, D] padded tiles -> [R, k] sketches.
+
+    R must be a multiple of tile_r (ops.py pads).
+    """
+    r, d = labels.shape
+    grid = (r // tile_r,)
+    return pl.pallas_call(
+        functools.partial(_mg_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, k), jnp.int32),
+            jax.ShapeDtypeStruct((r, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(labels, weights)
+
+
+def bm_fold_pallas_call(labels: jnp.ndarray, weights: jnp.ndarray,
+                        init_label: jnp.ndarray, tile_r: int, interpret: bool):
+    """pallas_call wrapper: [R, D] padded tiles + [R] incumbent -> [R] BM state."""
+    r, d = labels.shape
+    grid = (r // tile_r,)
+    ck, wk = pl.pallas_call(
+        _bm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_r, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(labels, weights, init_label[:, None])
+    return ck[:, 0], wk[:, 0]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracles for the MG/BM sketch fold kernels.
+
+These re-export the reference tile folds from repro.core.sketch — the exact
+semantics the Pallas kernels must reproduce bit-for-bit (integer labels,
+f32 weights; no tolerance needed except f32 associativity, and the fold
+order is identical by construction).
+"""
+from repro.core.sketch import mg_fold_tile as mg_fold_ref
+from repro.core.sketch import bm_fold_tile as bm_fold_ref
+
+__all__ = ["mg_fold_ref", "bm_fold_ref"]

@@ -1,0 +1,678 @@
+"""Dry-run cell builders: for every (arch x shape) cell, the step function,
+abstract inputs (ShapeDtypeStruct — nothing is allocated), and the
+production sharding for a given mesh.
+
+Shared by launch/dryrun.py (lower+compile+analyze) and launch/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, ShapeCell
+from repro.launch.mesh import all_axes, batch_axes
+from repro.optim.adamw import adamw_init
+from repro.train.steps import make_train_step
+
+
+@dataclasses.dataclass
+class CellPlan:
+    fn: Callable
+    args: Tuple[Any, ...]           # ShapeDtypeStructs (pytrees)
+    in_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _mesh_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    """FSDP axes: everything except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def lm_param_specs(cfg, params_struct, mesh, mode: str = "tp") -> Any:
+    """PartitionSpecs for the LM param tree.
+
+    mode:
+      "tp"      — Megatron tensor parallel on 'model', replicated on data
+                  axes (the paper-faithful baseline layout).
+      "fsdp"    — ZeRO-3: every tensor sharded over ALL mesh axes
+                  flattened, on its largest divisible dim. No TP: per-layer
+                  param all-gathers are the only weight collectives.
+      "ep_fsdp" — MoE: attention/lm_head TP on 'model' + FSDP on the data
+                  axes; routed experts expert-parallel on 'model' with
+                  their ff dim FSDP-sharded on the data axes.
+      "cp"      — context parallel (§Perf hillclimb #1 final): weights 2-D
+                  sharded [data-dims x model-dim] for storage (gathered
+                  per layer inside the scan), activations batch->data /
+                  sequence->model, experts EP on 'model'. Single mesh axis
+                  per tensor dim everywhere — flattened-axis shardings
+                  trigger GSPMD involuntary full rematerialization.
+    """
+    m = "model"
+    sizes = _mesh_sizes(mesh)
+    dfs = _data_axes(mesh)
+    dfs_extent = 1
+    for a in dfs:
+        dfs_extent *= sizes[a]
+    all_ax = tuple(mesh.axis_names)
+    total = int(mesh.devices.size)
+
+    def fsdp_spec(leaf):
+        # largest-last dim divisible by the full flatten, else by the data
+        # flatten, else replicate
+        for axes, extent in ((all_ax, total), (dfs, dfs_extent)):
+            dims = sorted(range(len(leaf.shape)),
+                          key=lambda i: leaf.shape[i], reverse=True)
+            for i in dims:
+                if leaf.shape[i] % extent == 0 and leaf.shape[i] >= extent:
+                    spec = [None] * len(leaf.shape)
+                    spec[i] = axes
+                    return P(*spec)
+        return P(*([None] * len(leaf.shape)))
+
+    def with_dfs(spec_list, free_dim, size):
+        """Add FSDP sharding on ``free_dim`` if it divides."""
+        if dfs and size % dfs_extent == 0:
+            spec_list[free_dim] = dfs if len(dfs) > 1 else dfs[0]
+        return P(*spec_list)
+
+    msize = sizes.get("model", 1)
+
+    def cp_spec(leaf):
+        """2-D storage sharding: data axes on the largest divisible dim,
+        'model' on the largest remaining divisible dim."""
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        dims = sorted(range(nd), key=lambda i: leaf.shape[i], reverse=True)
+        used = -1
+        for i in dims:
+            if leaf.shape[i] % dfs_extent == 0 and leaf.shape[i] >= dfs_extent:
+                spec[i] = dfs if len(dfs) > 1 else dfs[0]
+                used = i
+                break
+        for i in dims:
+            if i != used and leaf.shape[i] % msize == 0 \
+                    and leaf.shape[i] >= msize:
+                spec[i] = m
+                break
+        return P(*spec)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if mode == "fsdp":
+            return fsdp_spec(leaf)
+        if mode == "cp":
+            # vocab-carrying tensors: V must land on 'model' (batch owns the
+            # data axes; V-on-data makes the logits batch/vocab conflict and
+            # GSPMD replicates 5 GB logit chunks — §Perf log)
+            if name == "lm_head" and leaf.shape[1] % msize == 0:
+                return P(None, m)
+            if name == "embed" and leaf.shape[0] % msize == 0:
+                return P(m, None)
+            # routed experts: layouts must match the shard_map EP in_specs
+            if nd == 4 and name in ("w_gate", "w_up"):
+                return P(None, m, None, dfs if len(dfs) > 1 else dfs[0])
+            if nd == 4 and name == "w_down":
+                return P(None, m, dfs if len(dfs) > 1 else dfs[0], None)
+            # shared experts / small projections compute on S-sharded
+            # tokens: storage on the data axes only (no model conflicts)
+            if name in ("shared_gate", "shared_up", "shared_down"):
+                spec = [None] * nd
+                dims = sorted(range(nd), key=lambda i: leaf.shape[i],
+                              reverse=True)
+                for i in dims:
+                    if leaf.shape[i] % dfs_extent == 0:
+                        spec[i] = dfs if len(dfs) > 1 else dfs[0]
+                        break
+                return P(*spec)
+            return cp_spec(leaf)
+        col = {"wq", "wk", "wv", "w_gate", "w_up", "w_uk", "w_uv", "w_dkv"}
+        row = {"wo", "w_down"}
+        fsdp_on = mode == "ep_fsdp"
+        if name in ("shared_gate", "shared_up", "shared_down"):
+            # shared experts compute on S-sharded tokens under Ulysses SP:
+            # no TP (the model axis is busy with S) — pure FSDP storage
+            return fsdp_spec(leaf) if fsdp_on else (
+                P(None, None, m) if name != "shared_down"
+                else P(None, m, None))
+        if name == "embed":
+            sl = [m, None]
+            return with_dfs(sl, 1, leaf.shape[1]) if fsdp_on else P(*sl)
+        if name == "lm_head":
+            sl = [None, m]
+            return with_dfs(sl, 0, leaf.shape[0]) if fsdp_on else P(*sl)
+        if name in col:
+            # [L, d, out] (dense/stacked) or [L, E, d, f] (moe experts)
+            if nd == 4:
+                sl = [None, m, None, None]  # expert parallel on E
+                return with_dfs(sl, 3, leaf.shape[3]) if fsdp_on else P(*sl)
+            sl = [None, None, m]
+            return with_dfs(sl, 1, leaf.shape[1]) if fsdp_on else P(*sl)
+        if name in row:
+            if nd == 4:
+                sl = [None, m, None, None]
+                return with_dfs(sl, 2, leaf.shape[2]) if fsdp_on else P(*sl)
+            sl = [None, m, None]
+            return with_dfs(sl, 2, leaf.shape[2]) if fsdp_on else P(*sl)
+        return P(*([None] * nd))  # norms, router, small projections
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_struct)
+
+
+def _lm_structs(cfg):
+    from repro.models.transformer import init_params
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _best_batch_axes(mesh, b: int) -> Tuple[str, ...]:
+    """Longest prefix-flatten of the mesh axes that divides the batch."""
+    sizes = _mesh_sizes(mesh)
+    best: Tuple[str, ...] = ()
+    axes = tuple(mesh.axis_names)
+    for end in range(len(axes), 0, -1):
+        ext = 1
+        for a in axes[:end]:
+            ext *= sizes[a]
+        if b % ext == 0:
+            return axes[:end]
+    return best
+
+
+def build_lm_train(spec: ArchSpec, cell: ShapeCell, mesh,
+                   baseline: bool = False) -> CellPlan:
+    """Train-step cell.
+
+    Sharding policy (EXPERIMENTS.md §Perf hillclimb #1):
+      dense LM -> pure ZeRO-3 FSDP: batch over every mesh axis that
+        divides, params/opt fully sharded. Rationale: Megatron TP's
+        per-layer activation all-reduces cost ~4x the activation bytes per
+        layer regardless of TP degree, while FSDP's per-layer weight
+        all-gather is ~params/L — orders smaller at these batch sizes.
+      MoE LM -> expert parallel on 'model' (+ attention TP) with the
+        expert ff dim FSDP-sharded on the data axes, and grouped
+        token dispatch (groups = model extent) so the dispatch realizes
+        as the canonical EP all-to-all.
+    ``baseline=True`` reproduces the paper-faithful pure-TP layout.
+    """
+    from repro.models.transformer import loss_fn
+    cfg = spec.config
+    b, s = cell.params["batch"], cell.params["seq"]
+    sizes = _mesh_sizes(mesh)
+    is_moe = cfg.moe is not None
+    mext = sizes.get("model", 1)
+    if baseline or cfg.sp_mode == "none":
+        mode = "tp"
+        ba = batch_axes(mesh)
+        tok_spec = P(ba, None)
+    else:
+        mode = "cp"
+        ba = batch_axes(mesh)
+        tok_spec = P(ba, "model")  # sequence-sharded tokens
+        if is_moe:
+            moe = dataclasses.replace(
+                cfg.moe, n_groups=mext,
+                hint_batch_axes=ba, hint_expert_axis="model", ep_mesh=mesh)
+            cfg = dataclasses.replace(cfg, moe=moe)
+        cfg = dataclasses.replace(
+            cfg, hint_batch_axes=ba, hint_model_axis="model",
+            hint_model_extent=mext, seq_shard=True, attn_mode="direct")
+
+    def loss(params, batch):
+        return loss_fn(params, batch["tokens"], batch["targets"], cfg)
+
+    _, step = make_train_step(loss)
+    params = _lm_structs(cfg)
+    opt = jax.eval_shape(adamw_init, params)
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "targets": _sds((b, s), jnp.int32)}
+    pspecs = lm_param_specs(cfg, params, mesh, mode)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    bspecs = {"tokens": tok_spec, "targets": tok_spec}
+    data_extent = 1
+    for a in ba:
+        data_extent *= sizes[a]
+    if mode == "cp":
+        # tokens shard over (batch axes x model): per-chip flops match a
+        # probe at (model=1, data = data_extent x model extent)
+        probe_model, data_extent = 1, data_extent * mext
+    else:
+        probe_model = mext
+    return CellPlan(
+        fn=step, args=(params, opt, batch),
+        in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                      _named(mesh, bspecs)),
+        donate_argnums=(0, 1),
+        meta=dict(kind="train", tokens=b * s, layers=cfg.n_layers,
+                  probe_model=probe_model, probe_data=data_extent,
+                  mode=mode),
+    )
+
+
+def build_lm_prefill(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
+    from repro.models.transformer import forward
+    cfg = spec.config
+    b, s = cell.params["batch"], cell.params["seq"]
+    ba = batch_axes(mesh)
+
+    def prefill(params, tokens):
+        h = forward(params, tokens, cfg)
+        # logits for the last position only (next-token sampling)
+        return jnp.einsum("bd,dv->bv", h[:, -1],
+                          params["lm_head"].astype(h.dtype))
+
+    params = _lm_structs(cfg)
+    pspecs = lm_param_specs(cfg, params, mesh, "tp")
+    return CellPlan(
+        fn=prefill, args=(params, _sds((b, s), jnp.int32)),
+        in_shardings=(_named(mesh, pspecs),
+                      NamedSharding(mesh, P(ba, None))),
+        meta=dict(kind="prefill", tokens=b * s, layers=cfg.n_layers),
+    )
+
+
+def build_lm_decode(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
+    from repro.models.transformer import decode_step, init_cache
+    cfg = spec.config
+    b, s = cell.params["batch"], cell.params["seq"]
+    ba = batch_axes(mesh)
+
+    def serve_step(params, cache, tokens, cur_len):
+        return decode_step(params, cache, tokens, cur_len, cfg)
+
+    params = _lm_structs(cfg)
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    pspecs = lm_param_specs(cfg, params, mesh, "tp")
+    # KV cache: batch on data axes, sequence split on "model" (split-KV /
+    # flash-decoding layout: softmax partials all-reduce over model).
+    # long-context decode (batch < data extent, e.g. long_500k's batch=1):
+    # batch replicates and the KV sequence shards over ALL mesh axes — the
+    # pure flash-decoding limit.
+    import numpy as _np
+    data_extent = int(_np.prod([dict(zip(mesh.axis_names,
+                                         mesh.devices.shape))[a]
+                                for a in ba])) if ba else 1
+    if b % data_extent == 0:
+        b_ax, s_ax = ba, "model"
+        tok_spec = P(ba)
+    else:
+        b_ax, s_ax = None, all_axes(mesh)
+        tok_spec = P()
+    if cfg.mla is None:
+        cspecs = {"k": P(None, b_ax, s_ax, None, None),
+                  "v": P(None, b_ax, s_ax, None, None)}
+    else:
+        cspecs = {"ckv": P(None, b_ax, s_ax, None),
+                  "krope": P(None, b_ax, s_ax, None)}
+    return CellPlan(
+        fn=serve_step,
+        args=(params, cache, _sds((b,), jnp.int32), _sds((b,), jnp.int32)),
+        in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                      NamedSharding(mesh, tok_spec),
+                      NamedSharding(mesh, tok_spec)),
+        donate_argnums=(1,),
+        meta=dict(kind="decode", tokens=b, layers=cfg.n_layers, kv_len=s),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _gnn_apply(spec: ArchSpec, cfg):
+    if spec.arch_id == "pna":
+        from repro.models.gnn.pna import pna_forward
+        return lambda p, b: pna_forward(p, b, cfg)
+    if spec.arch_id == "meshgraphnet":
+        from repro.models.gnn.meshgraphnet import mgn_forward
+        return lambda p, b: mgn_forward(p, b, cfg)
+    if spec.arch_id == "egnn":
+        from repro.models.gnn.egnn import egnn_forward
+        return lambda p, b: egnn_forward(p, b, cfg)[0]
+    if spec.arch_id == "equiformer-v2":
+        from repro.models.gnn.equiformer_v2 import equiformer_forward
+        return lambda p, b: equiformer_forward(p, b, cfg)
+    raise KeyError(spec.arch_id)
+
+
+def _gnn_init(spec: ArchSpec, cfg):
+    if spec.arch_id == "pna":
+        from repro.models.gnn.pna import init_pna
+        return lambda k: init_pna(k, cfg)
+    if spec.arch_id == "meshgraphnet":
+        from repro.models.gnn.meshgraphnet import init_mgn
+        return lambda k: init_mgn(k, cfg)
+    if spec.arch_id == "egnn":
+        from repro.models.gnn.egnn import init_egnn
+        return lambda k: init_egnn(k, cfg)
+    if spec.arch_id == "equiformer-v2":
+        from repro.models.gnn.equiformer_v2 import init_equiformer
+        return lambda k: init_equiformer(k, cfg)
+    raise KeyError(spec.arch_id)
+
+
+def _gnn_cell_config(spec: ArchSpec, d_feat: int, n_out: int):
+    return dataclasses.replace(spec.config, d_in=d_feat,
+                               d_out=n_out,
+                               **({"d_node_in": d_feat, "d_edge_in": 4,
+                                   "d_in": d_feat}
+                                  if spec.arch_id == "meshgraphnet" else {}))
+
+
+def build_gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh,
+                   n_classes: int = 16) -> CellPlan:
+    fa = all_axes(mesh)
+    if cell.kind == "gnn_sampled":
+        return build_gnn_sampled_cell(spec, cell, mesh, n_classes)
+    n, e = cell.params["n_nodes"], cell.params["n_edges"]
+    d_feat = cell.params["d_feat"]
+    # node/edge arrays are sharded over the flattened mesh: pad to a multiple
+    # of the device count (pad edges carry weight-0 / self-loop sentinels in
+    # the real pipeline; shapes only here)
+    p = int(mesh.devices.size)
+    n = -(-n // p) * p
+    e = -(-e // p) * p
+    if spec.arch_id == "meshgraphnet":
+        cfg = dataclasses.replace(spec.config, d_node_in=d_feat, d_edge_in=4,
+                                  d_out=n_classes)
+    else:
+        cfg = dataclasses.replace(spec.config, d_in=d_feat, d_out=n_classes)
+    apply_fn = _gnn_apply(spec, cfg)
+
+    def loss(params, batch):
+        out = apply_fn(params, batch).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(out, axis=-1)
+        gold = jnp.take_along_axis(out, batch["labels"][:, None], axis=-1)[:, 0]
+        ce = lse - gold
+        if "seed_mask" in batch:
+            w = batch["seed_mask"].astype(jnp.float32)
+            return jnp.sum(ce * w) / jnp.maximum(jnp.sum(w), 1.0)
+        return jnp.mean(ce)
+
+    _, step = make_train_step(loss)
+    params = jax.eval_shape(_gnn_init(spec, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    opt = jax.eval_shape(adamw_init, params)
+    batch = {
+        "node_feat": _sds((n, d_feat), jnp.float32),
+        "labels": _sds((n,), jnp.int32),
+        "edge_src": _sds((e,), jnp.int32),
+        "edge_dst": _sds((e,), jnp.int32),
+    }
+    bspecs = {
+        "node_feat": P(fa, None), "labels": P(fa),
+        "edge_src": P(fa), "edge_dst": P(fa),
+    }
+    if spec.arch_id in ("egnn", "equiformer-v2"):
+        batch["coords"] = _sds((n, 3), jnp.float32)
+        bspecs["coords"] = P(fa, None)
+    if spec.arch_id == "meshgraphnet":
+        batch["edge_feat"] = _sds((e, 4), jnp.float32)
+        bspecs["edge_feat"] = P(fa, None)
+    if cell.kind == "gnn_sampled":
+        batch["seed_mask"] = _sds((n,), jnp.bool_)
+        bspecs["seed_mask"] = P(fa)
+    pspecs = jax.tree.map(lambda _: P(), params)  # small models: replicated
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    return CellPlan(
+        fn=step, args=(params, opt, batch),
+        in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                      _named(mesh, bspecs)),
+        donate_argnums=(0, 1),
+        meta=dict(kind="gnn_train", n_nodes=n, n_edges=e),
+    )
+
+
+def build_gnn_sampled_cell(spec: ArchSpec, cell: ShapeCell, mesh,
+                           n_classes: int = 16) -> CellPlan:
+    """minibatch_lg via the tree-contiguous layout (§Perf hillclimb #3).
+
+    Sampled fanout trees are independent block-diagonal subgraphs, so the
+    batch axis shards over the whole mesh and message passing is vmap'd
+    per tree — the only collective left is the gradient psum. The baseline
+    (flat sampled batch sharded across devices) replicated the [E, ...]
+    edge tensors every layer: 6.1 s collective on equiformer-v2.
+    """
+    from repro.graphs.sampler import tree_shape
+    fa = all_axes(mesh)
+    p = int(mesh.devices.size)
+    b = -(-cell.params["batch_nodes"] // p) * p
+    v_t, e_t = tree_shape(cell.params["fanouts"])
+    d_feat = cell.params.get("d_feat", 602)  # reddit-like
+    if spec.arch_id == "meshgraphnet":
+        cfg = dataclasses.replace(spec.config, d_node_in=d_feat, d_edge_in=4,
+                                  d_out=n_classes)
+    else:
+        cfg = dataclasses.replace(spec.config, d_in=d_feat, d_out=n_classes)
+    apply_fn = _gnn_apply(spec, cfg)
+
+    def tree_loss(params, tree):
+        out = apply_fn(params, tree).astype(jnp.float32)  # [v_t, C]
+        logit = out[0]  # the seed is local index 0
+        lse = jax.scipy.special.logsumexp(logit)
+        return lse - logit[tree["labels"][0]]
+
+    def loss(params, batch):
+        return jnp.mean(jax.vmap(lambda tr: tree_loss(params, tr))(batch))
+
+    _, step = make_train_step(loss)
+    params = jax.eval_shape(_gnn_init(spec, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    opt = jax.eval_shape(adamw_init, params)
+    batch = {
+        "node_feat": _sds((b, v_t, d_feat), jnp.float32),
+        "labels": _sds((b, v_t), jnp.int32),
+        "edge_src": _sds((b, e_t), jnp.int32),
+        "edge_dst": _sds((b, e_t), jnp.int32),
+    }
+    bspecs = {"node_feat": P(fa, None, None), "labels": P(fa, None),
+              "edge_src": P(fa, None), "edge_dst": P(fa, None)}
+    if spec.arch_id in ("egnn", "equiformer-v2"):
+        batch["coords"] = _sds((b, v_t, 3), jnp.float32)
+        bspecs["coords"] = P(fa, None, None)
+    if spec.arch_id == "meshgraphnet":
+        batch["edge_feat"] = _sds((b, e_t, 4), jnp.float32)
+        bspecs["edge_feat"] = P(fa, None, None)
+    pspecs = jax.tree.map(lambda _: P(), params)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+    return CellPlan(
+        fn=step, args=(params, opt, batch),
+        in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                      _named(mesh, bspecs)),
+        donate_argnums=(0, 1),
+        meta=dict(kind="gnn_train", n_nodes=b * v_t, n_edges=b * e_t,
+                  layout="tree"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def _dcn_structs(cfg):
+    from repro.models.recsys.dcn_v2 import init_dcn
+    return jax.eval_shape(lambda k: init_dcn(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _dcn_pspecs(params):
+    def spec_for(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if "table_" in name:
+            return P("model", None)  # row-sharded embedding tables
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def build_recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
+    from repro.models.recsys.dcn_v2 import (dcn_forward, dcn_loss,
+                                            dcn_retrieval_scores)
+    cfg = spec.config
+    ba = batch_axes(mesh)
+    params = _dcn_structs(cfg)
+    pspecs = _dcn_pspecs(params)
+    b = cell.params["batch"]
+    dense = _sds((b, cfg.n_dense), jnp.float32)
+    sparse = _sds((b, cfg.n_sparse), jnp.int32)
+
+    if cell.kind == "recsys_train":
+        def loss(p, batch):
+            return dcn_loss(p, batch["dense"], batch["sparse"],
+                            batch["labels"], cfg)
+
+        _, step = make_train_step(loss)
+        opt = jax.eval_shape(adamw_init, params)
+        batch = {"dense": dense, "sparse": sparse,
+                 "labels": _sds((b,), jnp.float32)}
+        bspecs = {"dense": P(ba, None), "sparse": P(ba, None),
+                  "labels": P(ba)}
+        ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+        return CellPlan(
+            fn=step, args=(params, opt, batch),
+            in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                          _named(mesh, bspecs)),
+            donate_argnums=(0, 1),
+            meta=dict(kind="recsys_train", batch=b))
+    if cell.kind == "recsys_serve":
+        def serve(p, dense, sparse):
+            return dcn_forward(p, dense, sparse, cfg)
+
+        return CellPlan(
+            fn=serve, args=(params, dense, sparse),
+            in_shardings=(_named(mesh, pspecs),
+                          NamedSharding(mesh, P(ba, None)),
+                          NamedSharding(mesh, P(ba, None))),
+            meta=dict(kind="recsys_serve", batch=b))
+    # retrieval: one query vs n_candidates (padded to the device count —
+    # the serving tier pads the candidate set with -inf-scored sentinels)
+    p = int(mesh.devices.size)
+    nc = -(-cell.params["n_candidates"] // p) * p
+    d_q = cfg.d_interact + cfg.mlp_dims[-1]
+    cand = _sds((nc, d_q), jnp.float32)
+    fa = all_axes(mesh)
+
+    def retrieve(p, dense, sparse, cand_emb):
+        return dcn_retrieval_scores(p, dense, sparse, cand_emb, cfg)
+
+    return CellPlan(
+        fn=retrieve, args=(params, dense, sparse, cand),
+        in_shardings=(_named(mesh, pspecs),
+                      NamedSharding(mesh, P(None, None)),
+                      NamedSharding(mesh, P(None, None)),
+                      NamedSharding(mesh, P(fa, None))),
+        meta=dict(kind="retrieval", candidates=nc))
+
+
+# ---------------------------------------------------------------------------
+# LPA (the paper's own workload)
+# ---------------------------------------------------------------------------
+
+def lpa_dist_spec(n_nodes: int, n_edges: int, n_shards: int, k: int,
+                  chunk: int, frac_high: float = 0.3):
+    """Analytic ShapeDtypeStruct workspace for a production-scale graph
+    (plan shapes depend only on the degree structure; we assume a power-law
+    with ``frac_high`` of edges on high-degree rows)."""
+    from repro.core.distributed import DistLPAWorkspace
+    v_pad = math.ceil(n_nodes / n_shards)
+    m_pad = math.ceil(n_edges / n_shards)
+    rounds = []
+    rows = v_pad + math.ceil(m_pad * frac_high / chunk)
+    entries = m_pad
+    while True:
+        rounds.append((rows, chunk))
+        nxt_entries = rows * k
+        nxt_rows = v_pad + math.ceil(nxt_entries * frac_high / chunk)
+        if nxt_entries <= v_pad * k * 1.05 or len(rounds) > 6:
+            break
+        rows, entries = nxt_rows, nxt_entries
+    ws = DistLPAWorkspace(
+        nbr_pos=_sds((n_shards, m_pad), jnp.int32),
+        weights=_sds((n_shards, m_pad), jnp.float32),
+        round_gathers=tuple(_sds((n_shards, r, chunk), jnp.int32)
+                            for r, _ in rounds),
+        final_row_vertex=_sds((n_shards, rounds[-1][0]), jnp.int32),
+        init_labels=_sds((n_shards, v_pad), jnp.int32),
+        n_nodes=n_nodes, v_pad=v_pad, k=k, chunk=chunk)
+    return ws
+
+
+def build_lpa_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
+    from repro.core.distributed import dist_lpa_step
+    cfg = spec.config
+    n_shards = mesh.devices.size
+    halo = bool(cell.params.get("halo", False))
+    ws = lpa_dist_spec(cell.params["n_nodes"], cell.params["n_edges"],
+                       n_shards, cfg.lpa.k, cfg.lpa.chunk,
+                       cfg.frac_high_degree_edges)
+    sp = P(all_axes(mesh))
+    shardings = [
+        NamedSharding(mesh, sp), NamedSharding(mesh, sp),
+        tuple(NamedSharding(mesh, sp) for _ in ws.round_gathers),
+        NamedSharding(mesh, sp), NamedSharding(mesh, sp),
+        NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+    ]
+    args = [ws.nbr_pos, ws.weights, ws.round_gathers, ws.final_row_vertex,
+            ws.init_labels, _sds((), jnp.bool_), _sds((), jnp.int32)]
+    if halo:
+        # beyond-paper label exchange (EXPERIMENTS §Perf): boundary fraction
+        # and hub density from the bench-scale calibration in
+        # benchmarks/bench_dist_lpa.py / tests — parameterized per cell
+        h_pad = math.ceil(ws.v_pad * cell.params.get("halo_frac", 0.25)
+                          / n_shards) * 8
+        hub_pad = max(1, math.ceil(cell.params.get("hub_frac", 0.002)
+                                   * ws.v_pad))
+        ws = dataclasses.replace(
+            ws, send_idx=_sds((n_shards, n_shards, h_pad), jnp.int32),
+            h_pad=h_pad, hub_idx=_sds((n_shards, hub_pad), jnp.int32),
+            hub_pad=hub_pad)
+        shardings += [NamedSharding(mesh, sp), NamedSharding(mesh, sp)]
+        args += [ws.send_idx, ws.hub_idx]
+    step = dist_lpa_step(mesh, ws)
+    return CellPlan(fn=step, args=tuple(args), in_shardings=tuple(shardings),
+                    meta=dict(kind="lpa", n_nodes=cell.params["n_nodes"],
+                              n_edges=cell.params["n_edges"],
+                              n_rounds=len(ws.round_gathers), halo=halo))
+
+
+# ---------------------------------------------------------------------------
+
+BUILDERS = {
+    "train": build_lm_train,
+    "prefill": build_lm_prefill,
+    "decode": build_lm_decode,
+    "gnn_full": build_gnn_cell,
+    "gnn_sampled": build_gnn_cell,
+    "recsys_train": build_recsys_cell,
+    "recsys_serve": build_recsys_cell,
+    "retrieval": build_recsys_cell,
+    "lpa": build_lpa_cell,
+}
+
+
+def build_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
+    return BUILDERS[cell.kind](spec, cell, mesh)

@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production meshes and extract memory / cost / collective
+analysis for EXPERIMENTS.md.
+
+The two lines above MUST stay the first statements in this module (jax
+locks the device count at first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+Results land in launch_results/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import all_arch_ids, get_arch
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.probes import lm_cell_cost, lm_model_flops
+from repro.launch.roofline import collective_bytes, roofline
+
+HBM_PER_CHIP = 16e9  # TPU v5e
+
+
+def run_cell(spec, cell, mesh, mesh_name: str) -> dict:
+    rec = {
+        "arch": spec.arch_id, "shape": cell.name, "kind": cell.kind,
+        "mesh": mesh_name, "n_devices": int(mesh.devices.size),
+        "note": cell.note, "ok": False,
+    }
+    try:
+        t0 = time.time()
+        plan = build_cell(spec, cell, mesh)
+        with mesh:
+            jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                             donate_argnums=plan.donate_argnums)
+            lowered = jitted.lower(*plan.args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t0, 2)
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        }
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        rec["memory"]["peak_bytes_per_device"] = int(peak)
+        rec["memory"]["fits_16g_hbm"] = bool(peak < HBM_PER_CHIP)
+        cost = compiled.cost_analysis()
+        raw_flops = float(cost.get("flops", 0.0))
+        raw_bytes = float(cost.get("bytes accessed", 0.0))
+        rec["raw_cost"] = {"flops": raw_flops, "bytes": raw_bytes}
+
+        # ---- per-chip corrected flops/bytes ----
+        meta = plan.meta
+        if spec.family == "lm":
+            mm = dict(zip(mesh.axis_names, mesh.devices.shape))
+            corr = lm_cell_cost(spec.config, meta["kind"],
+                                cell.params["batch"],
+                                cell.params.get("seq", 1),
+                                meta.get("probe_model", mm.get("model", 1)),
+                                meta.get("probe_data",
+                                         mm.get("data", 1) * mm.get("pod", 1)))
+            flops_chip, bytes_chip = corr["flops"], corr["bytes"]
+            loop_factor = float(spec.config.n_layers)
+            model_flops = lm_model_flops(spec.config, meta["kind"],
+                                         cell.params["batch"],
+                                         cell.params.get("seq", 1))
+        elif spec.family == "lpa":
+            # fold scans hide ~chunk columns; flops are analytic (the fold is
+            # ~6 VPU ops per padded entry per slot), bytes from raw (gathers
+            # dominate and sit outside the scans)
+            entries = meta["n_edges"] / mesh.devices.size
+            flops_chip = entries * 6 * spec.config.lpa.k
+            bytes_chip = raw_bytes
+            loop_factor = 1.0
+            model_flops = meta["n_edges"] * 6 * spec.config.lpa.k
+        else:
+            flops_chip, bytes_chip = raw_flops, raw_bytes  # unrolled: exact
+            loop_factor = 1.0
+            model_flops = raw_flops * mesh.devices.size
+        rec["flops_per_chip"] = flops_chip
+        rec["bytes_per_chip"] = bytes_chip
+        rec["model_flops_global"] = model_flops
+        rec["useful_flops_ratio"] = (
+            model_flops / (flops_chip * mesh.devices.size)
+            if flops_chip else None)
+
+        # ---- collectives ----
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo, loop_factor=loop_factor)
+        rec["collectives"] = coll
+        rec["hlo_collective_loop_factor"] = loop_factor
+
+        terms = roofline(flops_chip, bytes_chip, coll.get("total", 0.0))
+        rec["roofline"] = terms.to_dict()
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the matrix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="launch_results/dryrun")
+    args = ap.parse_args()
+
+    arch_ids = all_arch_ids() if args.arch == "all" else [args.arch]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16",
+                       make_production_mesh(multi_pod=True)))
+
+    n_ok = n_fail = 0
+    for mesh_name, mesh in meshes:
+        outdir = os.path.join(args.out, mesh_name)
+        os.makedirs(outdir, exist_ok=True)
+        for arch_id in arch_ids:
+            spec = get_arch(arch_id)
+            for cell in spec.cells:
+                if args.shape != "all" and cell.name != args.shape:
+                    continue
+                t0 = time.time()
+                rec = run_cell(spec, cell, mesh, mesh_name)
+                dt = time.time() - t0
+                status = "OK " if rec["ok"] else "FAIL"
+                extra = ""
+                if rec["ok"]:
+                    r = rec["roofline"]
+                    extra = (f" peak={rec['memory']['peak_bytes_per_device']/1e9:.2f}GB"
+                             f" bottleneck={r['bottleneck']}"
+                             f" t_lb={r['step_time_lb_s']*1e3:.2f}ms")
+                else:
+                    extra = " " + rec["error"][:120]
+                print(f"[{status}] {mesh_name} {arch_id}/{cell.name} "
+                      f"({dt:.0f}s){extra}", flush=True)
+                n_ok += rec["ok"]
+                n_fail += not rec["ok"]
+                path = os.path.join(outdir, f"{arch_id}__{cell.name}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

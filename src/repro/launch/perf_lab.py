@@ -1,0 +1,74 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=256")
+
+"""Perf-iteration lab: lower one LM train cell under config variants and
+report the three roofline terms + dominant collectives (EXPERIMENTS.md
+§Perf methodology). Not part of the public API."""
+import argparse
+import dataclasses
+import json
+from collections import Counter
+
+import jax
+
+from repro.configs.registry import get_arch
+from repro.launch import cells as cells_mod
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.launch.probes import lm_cell_cost
+from repro.launch.roofline import _COLL_RE, _shape_bytes, collective_bytes, roofline
+
+
+def lower_cell(arch, shape, tweak=None):
+    spec = get_arch(arch)
+    cell = [c for c in spec.cells if c.name == shape][0]
+    mesh = make_production_mesh()
+    if tweak:
+        orig = cells_mod.build_lm_train
+
+        def patched(spec_, cell_, mesh_, baseline=False):
+            plan = orig(spec_, cell_, mesh_, baseline=baseline)
+            return plan
+        # tweak hook edits the module-level knobs instead
+    plan = build_cell(spec, cell, mesh)
+    with mesh:
+        lowered = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                          donate_argnums=plan.donate_argnums).lower(*plan.args)
+        compiled = lowered.compile()
+    return spec, cell, mesh, plan, compiled
+
+
+def report(arch, shape):
+    spec, cell, mesh, plan, compiled = lower_cell(arch, shape)
+    hlo = compiled.as_text()
+    mem = compiled.memory_analysis()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    meta = plan.meta
+    mm = dict(zip(mesh.axis_names, mesh.devices.shape))
+    corr = lm_cell_cost(spec.config, meta["kind"], cell.params["batch"],
+                        cell.params.get("seq", 1),
+                        meta.get("probe_model", mm.get("model", 1)),
+                        meta.get("probe_data", mm.get("data", 1)))
+    coll = collective_bytes(hlo, loop_factor=float(spec.config.n_layers))
+    terms = roofline(corr["flops"], corr["bytes"], coll["total"])
+    print(f"{arch}/{shape} mode={meta.get('mode')}")
+    print(f"  peak {peak/1e9:.1f} GB | compute {terms.compute_s:.2f}s "
+          f"memory {terms.memory_s:.2f}s collective {terms.collective_s:.2f}s"
+          f" -> {terms.bottleneck}")
+    sizes = Counter()
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if m and "-done(" not in line:
+            sizes[(m.group("op"), _shape_bytes(m.group("result")))] += 1
+    for (op, b), n in sorted(sizes.items(), key=lambda kv: -kv[0][1]*kv[1])[:8]:
+        print(f"    {op:20s} {b/1e6:10.1f} MB x{n}")
+    return terms
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    report(args.arch, args.shape)

@@ -1,0 +1,192 @@
+"""Per-chip FLOP/byte probes for scan-hidden compute.
+
+XLA's ``cost_analysis()`` counts a ``while``/``scan`` body ONCE, not
+trip-count times (verified empirically — EXPERIMENTS.md §Dry-run), so for
+layer-scanned LMs the module-level numbers undercount by ~n_layers. The
+probe lowers a SINGLE unscanned layer at per-chip local shapes (heads,
+ffn, experts, batch divided by their mesh extents; attention unchunked so
+its inner scans disappear) and assembles:
+
+    fwd_flops_chip  = L * probe_layer + probe_head
+    train_flops_chip = 3 * fwd (+1 fwd if full remat)
+
+GNN / recsys models are python-unrolled — their module cost_analysis is
+already exact and needs no probe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _cost(fn, *args) -> Dict[str, float]:
+    c = jax.jit(fn).lower(*args).compile().cost_analysis()
+    return {"flops": float(c.get("flops", 0.0)),
+            "bytes": float(c.get("bytes accessed", 0.0))}
+
+
+def _local_cfg(cfg, mesh_model: int, mesh_data: int):
+    """Per-chip slice of the model config (tensor/expert parallel extents).
+
+    MoE: routing is replicated across the model axis (router logits are
+    [T, E] data-parallel), while expert *work* shards as E/mm experts each
+    at the global capacity — equivalently, full E at capacity/mm. We keep
+    n_experts (so top-k stays valid) and divide capacity_factor instead;
+    e·cap ∝ s·k·cf/mm matches the per-chip dispatched-slot count exactly.
+    """
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(
+            moe, capacity_factor=moe.capacity_factor / mesh_model,
+            d_shared_ff=max(1, (moe.d_shared_ff or 1) // mesh_model)
+            if moe.n_shared else 0)
+    return dataclasses.replace(
+        cfg,
+        n_heads=max(1, cfg.n_heads // mesh_model),
+        n_kv_heads=max(1, cfg.n_kv_heads // mesh_model),
+        d_ff=max(1, cfg.d_ff // mesh_model) if cfg.d_ff else 0,
+        moe=moe,
+        q_chunk=1 << 30, kv_chunk=1 << 30,  # unchunked attention: no inner scan
+        remat=False,
+    )
+
+
+def lm_fwd_probe(cfg, batch: int, seq: int, mesh_model: int, mesh_data: int
+                 ) -> Dict[str, float]:
+    """Per-chip forward cost of one layer + head, local shapes."""
+    from repro.models.transformer import _layer, init_params
+
+    lcfg = _local_cfg(cfg, mesh_model, mesh_data)
+    b_loc = max(1, batch // mesh_data)
+    single = dataclasses.replace(lcfg, n_layers=1)
+    params = jax.eval_shape(lambda k: init_params(k, single),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def one_layer(layers, x, positions):
+        lp = jax.tree.map(lambda a: a[0], layers)
+        return _layer(lp, x, lcfg, positions)
+
+    x = jax.ShapeDtypeStruct((b_loc, seq, cfg.d_model), cfg.dtype)
+    pos = jax.ShapeDtypeStruct((b_loc, seq), jnp.int32)
+    layer_cost = _cost(one_layer, params["layers"], x, pos)
+
+    def head(h, w):
+        logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype)
+                            ).astype(jnp.float32)
+        return jax.scipy.special.logsumexp(logits, axis=-1).sum()
+
+    w = jax.ShapeDtypeStruct((cfg.d_model, max(1, cfg.vocab // mesh_model)),
+                             jnp.float32)
+    head_cost = _cost(head, x, w)
+    return {
+        "layer_flops": layer_cost["flops"], "layer_bytes": layer_cost["bytes"],
+        "head_flops": head_cost["flops"], "head_bytes": head_cost["bytes"],
+        "fwd_flops": layer_cost["flops"] * cfg.n_layers + head_cost["flops"],
+        "fwd_bytes": layer_cost["bytes"] * cfg.n_layers + head_cost["bytes"],
+    }
+
+
+def lm_bytes_analytic(cfg, kind: str, batch: int, seq: int, mesh_model: int,
+                      mesh_data: int) -> float:
+    """Per-chip HBM traffic model (documented in EXPERIMENTS.md §Roofline).
+
+    XLA 'bytes accessed' cannot be assembled across nested scans, so the
+    memory term uses an explicit model:
+      weights: f32 params re-read per pass (fwd [+remat] + bwd) + optimizer
+               update traffic (grad w+r, m/v r+w, param r+w ~ 20 B/param)
+      activations: per layer, per pass: attention tensors ~6 x [T, d] bf16,
+               FFN tensors ~(1 + 2*ff_ratio) x [T, d], norms+residual ~6,
+               each read+written once; KV re-streamed once per q-chunk
+      logits: [T, V/model] f32 read+written per pass (chunked loss)
+    decode: params read once + full KV cache read + small vectors.
+    """
+    chips = mesh_model * mesh_data
+    n_params = cfg.n_params
+    w_chip = n_params / chips
+    d = cfg.d_model
+    if kind == "decode":
+        cache_bytes = 0.0
+        if cfg.mla is None:
+            cache_bytes = (cfg.n_layers * batch * seq * cfg.n_kv_heads
+                           * cfg.d_head * 2 * 2)
+        else:
+            cache_bytes = (cfg.n_layers * batch * seq
+                           * (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2)
+        # active params only are touched per decode step
+        return (cfg.n_active_params / chips) * 4 + cache_bytes / chips
+    tokens_chip = batch * seq / mesh_data
+    passes = 3.0 + (1.0 if cfg.remat else 0.0)  # fwd, bwd(2x counted in
+    # flops but reads acts ~once) + remat refwd; traffic-wise use passes
+    if cfg.moe is not None:
+        ff_ratio = (cfg.moe.top_k * cfg.moe.d_expert_ff
+                    + (cfg.moe.d_shared_ff or 0)) / d
+    else:
+        ff_ratio = cfg.d_ff / d * (1.5 if cfg.glu else 1.0)
+    act_tensors = 6 + (1 + 2 * ff_ratio) + 6
+    a = tokens_chip * d * 2  # one [T, d] bf16 tensor
+    act_traffic = act_tensors * 2 * a * cfg.n_layers * passes
+    nq = max(1, seq // max(cfg.q_chunk, 1))
+    kv_dim = (cfg.n_kv_heads * cfg.d_head if cfg.mla is None
+              else cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim)
+    kv_restream = (batch / mesh_data) * seq * kv_dim * 2 * 2 * nq \
+        * cfg.n_layers * passes / max(mesh_model, 1)
+    weights = w_chip * 4 * passes + w_chip * 20
+    logits = tokens_chip * (cfg.vocab / mesh_model) * 4 * 2 * passes
+    if kind == "prefill":
+        act_traffic /= passes
+        kv_restream /= passes
+        weights = w_chip * 4
+        logits = (batch / mesh_data) * (cfg.vocab / mesh_model) * 4 * 2
+    return weights + act_traffic + kv_restream + logits
+
+
+def lm_cell_cost(cfg, kind: str, batch: int, seq: int, mesh_model: int,
+                 mesh_data: int) -> Dict[str, float]:
+    """Per-chip corrected (flops, bytes) for a train/prefill/decode cell."""
+    if kind == "decode":
+        from repro.models.transformer import decode_step, init_cache
+        lcfg = _local_cfg(cfg, mesh_model, mesh_data)
+        # cache: batch/data x seq/model local slice, single layer; vocab
+        # sharded on model so the lm_head inside the probe is per-chip sized
+        b_loc = max(1, batch // mesh_data)
+        s_loc = max(1, seq // mesh_model)
+        single = dataclasses.replace(lcfg, n_layers=1,
+                                     vocab=max(128, cfg.vocab // mesh_model))
+        from repro.models.transformer import init_params
+        params = jax.eval_shape(lambda k: init_params(k, single),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        cache = jax.eval_shape(lambda: init_cache(single, b_loc, s_loc))
+
+        def one(params, cache, toks, cur):
+            # return BOTH outputs — returning only the cache would let XLA
+            # DCE the FFN + output projection and undercount ~10x
+            return decode_step(params, cache, toks, cur, single)
+
+        c = _cost(one, params, cache,
+                  jax.ShapeDtypeStruct((b_loc,), jnp.int32),
+                  jax.ShapeDtypeStruct((b_loc,), jnp.int32))
+        # head (counted once inside the probe) must not scale by n_layers
+        head_flops = 2 * b_loc * cfg.d_model * (cfg.vocab / mesh_model)
+        return {"flops": (c["flops"] - head_flops) * cfg.n_layers
+                + head_flops,
+                "bytes": lm_bytes_analytic(cfg, kind, batch, seq, mesh_model,
+                                           mesh_data)}
+    probe = lm_fwd_probe(cfg, batch, seq, mesh_model, mesh_data)
+    bytes_chip = lm_bytes_analytic(cfg, kind, batch, seq, mesh_model,
+                                   mesh_data)
+    if kind == "prefill":
+        return {"flops": probe["fwd_flops"], "bytes": bytes_chip}
+    # train: fwd + bwd (2x fwd) + remat recompute (1x fwd if remat)
+    mult = 4.0 if cfg.remat else 3.0
+    return {"flops": probe["fwd_flops"] * mult, "bytes": bytes_chip}
+
+
+def lm_model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """Global MODEL_FLOPS = 6·N_active·D (training) / 2·N_active·D (fwd)."""
+    n = cfg.n_active_params
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    per_tok = {"train": 6, "prefill": 2, "decode": 2}[kind]
+    return per_tok * n * tokens

@@ -1,0 +1,122 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms (TPU v5e targets, per chip — the compiled SPMD module is the
+per-device program, so cost_analysis / HLO shapes are per-chip):
+
+  compute    = flops_chip / 197e12          (bf16 peak)
+  memory     = bytes_chip / 819e9           (HBM bandwidth)
+  collective = coll_bytes_chip / 50e9       (ICI per-link)
+
+collective bytes are parsed out of the compiled HLO text: the summed result
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (all-reduce counted 2x: ring reduce+broadcast).
+Instructions inside non-entry computations (scan/while bodies) execute
+trip-count times; callers pass ``loop_factor`` (n_layers for layer-scanned
+LMs, 1 for unrolled models) and we scale loop-resident collective bytes by
+it (documented approximation — the layer scan dominates loop-resident
+collectives for every LM cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<result>[^=]*?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, loop_factor: float = 1.0
+                     ) -> Dict[str, float]:
+    """Per-op-type collective bytes (per chip), with loop scaling.
+
+    HLO text lists one computation per block; the entry computation is
+    marked ``ENTRY``. Anything outside ENTRY is treated as loop/call-resident
+    and scaled by ``loop_factor``.
+    """
+    out: Dict[str, float] = {}
+    in_entry = False
+    depth = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY "):
+            in_entry = True
+            depth = 0
+        if in_entry:
+            depth += stripped.count("{") - stripped.count("}")
+            if depth <= 0 and "}" in stripped and not stripped.startswith("ENTRY"):
+                in_entry = False
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("result"))
+        if op == "all-reduce":
+            nbytes *= 2  # ring: reduce-scatter + all-gather volume
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        factor = 1.0 if in_entry else loop_factor
+        out[op] = out.get(op, 0.0) + nbytes * factor
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower-bound step time: max of the three (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self):
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s,
+                "bottleneck": self.bottleneck,
+                "step_time_lb_s": self.step_time_s}
+
+
+def roofline(flops_chip: float, bytes_chip: float, coll_bytes_chip: float
+             ) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_chip / PEAK_FLOPS,
+        memory_s=bytes_chip / HBM_BW,
+        collective_s=coll_bytes_chip / ICI_BW,
+    )

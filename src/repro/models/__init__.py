@@ -1,0 +1,2 @@
+"""Model zoo: sharded transformer LMs (dense/GQA/MLA/MoE), GNN families,
+and recsys models — all pure-functional JAX (param pytrees + apply fns)."""

@@ -1,0 +1,88 @@
+"""Shared model building blocks: initializers, norms, RoPE, MLPs."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (params stay f32; compute casts to bf16)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+            ).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    """RMSNorm with f32 reduction (bf16-safe)."""
+    xf = x.astype(jnp.float32)
+    scale = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype) * gamma.astype(x.dtype)
+
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float = 10000.0
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(cos, sin) tables for rotary embeddings; positions [...]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., dim/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Rotate pairs (x0, x1) -> (x0 c - x1 s, x1 c + x0 s).
+
+    x: [..., S, H, D]; cos/sin: [..., S, D/2] (broadcast over heads).
+    """
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    r0 = x0 * cos - x1 * sin
+    r1 = x1 * cos + x0 * sin
+    out = jnp.stack([r0, r1], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU FFN (LLaMA/Qwen family)."""
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy with f32 logsumexp.
+
+    The gold logit is a masked sum over the vocab axis (not
+    take_along_axis): under a vocab-sharded lm_head this partitions into a
+    local masked reduce + scalar all-reduce instead of an all-gather of the
+    full logits.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    hit = vocab_iota == labels[..., None]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def hint(x, *spec):
+    """Trace-time sharding hint: with_sharding_constraint if any axis named.
+
+    Entries are None, an axis name, or a tuple of axis names; an all-empty
+    spec is a no-op so model code stays mesh-free (smoke tests / single
+    device). Callers thread axis names in via config fields that the cell
+    builders populate from the actual mesh (launch/cells.py).
+    """
+    if all(s in (None, ()) for s in spec):
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = tuple(None if s == () else s for s in spec)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

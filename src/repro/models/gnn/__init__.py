@@ -1,0 +1,13 @@
+"""GNN model zoo: PNA, MeshGraphNet, EGNN, EquiformerV2 (eSCN).
+
+All message passing is edge-index scatter/segment-sum based (JAX has no
+sparse SpMM beyond BCOO) — the same segment-op substrate the LPA core uses.
+Graph batches are dicts with static padded shapes:
+  node_feat [N, F], edge_src [E], edge_dst [E] (pad edges point at node N,
+  a dump slot), plus model-specific extras (coords, edge_feat).
+"""
+from repro.models.gnn.pna import init_pna, pna_forward, PNAConfig
+from repro.models.gnn.meshgraphnet import (init_mgn, mgn_forward, MGNConfig)
+from repro.models.gnn.egnn import init_egnn, egnn_forward, EGNNConfig
+from repro.models.gnn.equiformer_v2 import (init_equiformer, equiformer_forward,
+                                            EquiformerConfig)

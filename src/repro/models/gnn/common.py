@@ -1,0 +1,68 @@
+"""Shared GNN building blocks: MLPs and padded segment aggregations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_mlp(key, dims, bias: bool = True):
+    """dims = [d_in, h1, ..., d_out]."""
+    keys = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, k in enumerate(keys):
+        p = {"w": dense_init(k, (dims[i], dims[i + 1]))}
+        if bias:
+            p["b"] = jnp.zeros((dims[i + 1],), jnp.float32)
+        layers.append(p)
+    return layers
+
+
+def mlp_apply(layers, x, act=jax.nn.relu, final_act: bool = False,
+              layer_norm: bool = False):
+    for i, p in enumerate(layers):
+        x = x @ p["w"].astype(x.dtype)
+        if "b" in p:
+            x = x + p["b"].astype(x.dtype)
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    if layer_norm:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+    return x
+
+
+def segment_agg(messages: jnp.ndarray, dst: jnp.ndarray, n_nodes: int,
+                reductions=("sum",)):
+    """Aggregate edge messages [E, F] to nodes [N, F] per reduction.
+
+    ``dst`` may contain the dump index ``n_nodes`` for padded edges; the
+    extra row is sliced off. Returns a dict {name: [N, F]}.
+    """
+    out = {}
+    ns = n_nodes + 1
+    if "sum" in reductions or "mean" in reductions or "std" in reductions:
+        s = jax.ops.segment_sum(messages, dst, num_segments=ns)[:n_nodes]
+        out["sum"] = s
+    if "mean" in reductions or "std" in reductions:
+        cnt = jax.ops.segment_sum(jnp.ones_like(dst, dtype=messages.dtype),
+                                  dst, num_segments=ns)[:n_nodes]
+        denom = jnp.maximum(cnt, 1.0)[:, None]
+        out["count"] = cnt
+        out["mean"] = out["sum"] / denom
+    if "std" in reductions:
+        sq = jax.ops.segment_sum(messages * messages, dst,
+                                 num_segments=ns)[:n_nodes]
+        var = sq / denom - out["mean"] ** 2
+        out["std"] = jnp.sqrt(jnp.maximum(var, 0.0) + 1e-5)
+    if "max" in reductions:
+        out["max"] = jax.ops.segment_max(messages, dst,
+                                         num_segments=ns)[:n_nodes]
+        out["max"] = jnp.where(jnp.isfinite(out["max"]), out["max"], 0.0)
+    if "min" in reductions:
+        out["min"] = jax.ops.segment_min(messages, dst,
+                                         num_segments=ns)[:n_nodes]
+        out["min"] = jnp.where(jnp.isfinite(out["min"]), out["min"], 0.0)
+    return out

@@ -1,0 +1,74 @@
+"""E(n)-equivariant GNN (EGNN) [arXiv:2102.09844].
+
+m_ij   = phi_e(h_i, h_j, ||x_i-x_j||^2)
+x_i'   = x_i + (1/deg) sum_j (x_i - x_j) * phi_x(m_ij)
+h_i'   = phi_h(h_i, sum_j m_ij)
+
+Scalar features are E(n)-invariant; coordinates transform equivariantly
+(property-tested in tests/test_gnn.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import init_mlp, mlp_apply, segment_agg
+
+
+@dataclasses.dataclass(frozen=True)
+class EGNNConfig:
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_in: int = 0
+    d_out: int = 0
+
+
+def init_egnn(key, cfg: EGNNConfig):
+    keys = jax.random.split(key, 3 * cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "phi_e": init_mlp(keys[3 * i], [2 * d + 1, d, d]),
+            "phi_x": init_mlp(keys[3 * i + 1], [d, d, 1]),
+            "phi_h": init_mlp(keys[3 * i + 2], [2 * d, d, d]),
+        })
+    return {
+        "encode": init_mlp(keys[-2], [cfg.d_in or d, d]),
+        "layers": layers,
+        "decode": init_mlp(keys[-1], [d, cfg.d_out or d]),
+    }
+
+
+def egnn_forward(params, batch, cfg: EGNNConfig):
+    """batch: node_feat [N, F], coords [N, 3], edge_src/dst [E] (pad -> N).
+
+    Returns (node_out [N, d_out], coords' [N, 3]).
+    """
+    h = mlp_apply(params["encode"], batch["node_feat"])
+    x = batch["coords"].astype(h.dtype)
+    n = h.shape[0]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    pad = src >= n
+    s_src = jnp.minimum(src, n - 1)
+    s_dst = jnp.minimum(dst, n - 1)
+    seg_dst = jnp.where(pad, n, dst)
+    deg = jax.ops.segment_sum(jnp.where(pad, 0.0, 1.0), seg_dst,
+                              num_segments=n + 1)[:n]
+    inv_deg = (1.0 / jnp.maximum(deg, 1.0))[:, None]
+
+    for lp in params["layers"]:
+        diff = x[s_dst] - x[s_src]                       # x_i - x_j (i=dst)
+        dist2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+        m = mlp_apply(lp["phi_e"],
+                      jnp.concatenate([h[s_dst], h[s_src], dist2], axis=-1),
+                      final_act=True)
+        m = jnp.where(pad[:, None], 0.0, m)
+        coef = jnp.tanh(mlp_apply(lp["phi_x"], m))       # bounded step
+        xmsg = jnp.where(pad[:, None], 0.0, diff * coef)
+        x = x + segment_agg(xmsg, seg_dst, n, ("sum",))["sum"] * inv_deg
+        magg = segment_agg(m, seg_dst, n, ("sum",))["sum"]
+        h = h + mlp_apply(lp["phi_h"], jnp.concatenate([h, magg], axis=-1))
+    return mlp_apply(params["decode"], h), x

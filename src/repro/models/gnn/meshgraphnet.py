@@ -1,0 +1,64 @@
+"""MeshGraphNet [arXiv:2010.03409]: encode-process-decode with edge/node MLPs.
+
+Processor step (×15): e' = e + MLP_e([e, h_src, h_dst]);
+                      h' = h + MLP_v([h, sum_{e in N(v)} e']).
+All MLPs are 2 hidden layers with LayerNorm (paper setup).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import init_mlp, mlp_apply, segment_agg
+
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 0
+    d_edge_in: int = 0
+    d_out: int = 0
+
+
+def _mlp_dims(cfg, d_in):
+    return [d_in] + [cfg.d_hidden] * cfg.mlp_layers + [cfg.d_hidden]
+
+
+def init_mgn(key, cfg: MGNConfig):
+    keys = jax.random.split(key, 2 * cfg.n_layers + 3)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "edge": init_mlp(keys[2 * i], _mlp_dims(cfg, 3 * d)),
+            "node": init_mlp(keys[2 * i + 1], _mlp_dims(cfg, 2 * d)),
+        })
+    return {
+        "enc_node": init_mlp(keys[-3], _mlp_dims(cfg, cfg.d_node_in or d)),
+        "enc_edge": init_mlp(keys[-2], _mlp_dims(cfg, cfg.d_edge_in or d)),
+        "layers": layers,
+        "decode": init_mlp(keys[-1], [d, d, cfg.d_out or d]),
+    }
+
+
+def mgn_forward(params, batch, cfg: MGNConfig):
+    """batch: node_feat [N, Fn], edge_feat [E, Fe], edge_src/dst [E]."""
+    h = mlp_apply(params["enc_node"], batch["node_feat"], layer_norm=True)
+    e = mlp_apply(params["enc_edge"], batch["edge_feat"], layer_norm=True)
+    n = h.shape[0]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    pad = src >= n
+    s_src = jnp.minimum(src, n - 1)
+    s_dst = jnp.minimum(dst, n - 1)
+    for lp in params["layers"]:
+        e_in = jnp.concatenate([e, h[s_src], h[s_dst]], axis=-1)
+        e = e + mlp_apply(lp["edge"], e_in, layer_norm=True)
+        e = jnp.where(pad[:, None], 0.0, e)
+        agg = segment_agg(e, jnp.where(pad, n, dst), n, ("sum",))["sum"]
+        h = h + mlp_apply(lp["node"],
+                          jnp.concatenate([h, agg], axis=-1), layer_norm=True)
+    return mlp_apply(params["decode"], h)

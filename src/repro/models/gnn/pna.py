@@ -1,0 +1,71 @@
+"""Principal Neighbourhood Aggregation (PNA) [arXiv:2004.05718].
+
+Message = MLP([h_src, h_dst]); aggregation = {mean, max, min, std} ×
+degree scalers {identity, amplification, attenuation}; update MLP.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import init_mlp, mlp_apply, segment_agg
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 0              # input feature dim (0 => d_hidden)
+    d_out: int = 0             # output dim (0 => d_hidden)
+    avg_log_degree: float = 3.0  # delta normalizer (dataset statistic)
+    aggregators = ("mean", "max", "min", "std")
+    n_scalers: int = 3
+
+
+def init_pna(key, cfg: PNAConfig):
+    keys = jax.random.split(key, cfg.n_layers * 2 + 2)
+    d = cfg.d_hidden
+    n_agg = len(cfg.aggregators) * cfg.n_scalers
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append({
+            "msg": init_mlp(keys[2 * i], [2 * d, d, d]),
+            "upd": init_mlp(keys[2 * i + 1], [(n_agg + 1) * d, d, d]),
+        })
+    return {
+        "encode": init_mlp(keys[-2], [cfg.d_in or d, d]),
+        "layers": layers,
+        "decode": init_mlp(keys[-1], [d, cfg.d_out or d]),
+    }
+
+
+def pna_forward(params, batch, cfg: PNAConfig):
+    """batch: node_feat [N, F], edge_src [E], edge_dst [E] (pad -> N)."""
+    h = mlp_apply(params["encode"], batch["node_feat"])
+    n = h.shape[0]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    pad = src >= n
+    safe_src = jnp.minimum(src, n - 1)
+    deg = jax.ops.segment_sum(
+        jnp.where(pad, 0.0, 1.0), jnp.minimum(dst, n), num_segments=n + 1
+    )[:n]
+    logd = jnp.log(deg + 1.0)
+    amp = (logd / cfg.avg_log_degree)[:, None]
+    att = (cfg.avg_log_degree / jnp.maximum(logd, 1e-3))[:, None]
+
+    for lp in params["layers"]:
+        m_in = jnp.concatenate([h[safe_src],
+                                h[jnp.minimum(dst, n - 1)]], axis=-1)
+        m = mlp_apply(lp["msg"], m_in)
+        m = jnp.where(pad[:, None], 0.0, m)
+        aggs = segment_agg(m, jnp.where(pad, n, dst), n,
+                           reductions=cfg.aggregators)
+        feats = []
+        for name in cfg.aggregators:
+            a = aggs[name]
+            feats += [a, a * amp, a * att]
+        h_new = mlp_apply(lp["upd"], jnp.concatenate([h] + feats, axis=-1))
+        h = h + h_new
+    return mlp_apply(params["decode"], h)

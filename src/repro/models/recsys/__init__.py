@@ -1,0 +1,4 @@
+"""RecSys models: EmbeddingBag substrate + DCN-v2."""
+from repro.models.recsys.embedding import init_embedding_bag, embedding_bag
+from repro.models.recsys.dcn_v2 import (DCNConfig, init_dcn, dcn_forward,
+                                        dcn_retrieval_scores)

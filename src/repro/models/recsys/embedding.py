@@ -1,0 +1,46 @@
+"""EmbeddingBag for JAX: ragged multi-hot gather + segment reduction.
+
+JAX has no native nn.EmbeddingBag or CSR sparse — this IS part of the
+system: lookup = jnp.take rows (vocab-row-sharded on the "model" axis under
+pjit) followed by jax.ops.segment_sum over the bag offsets. Single-hot
+fields take the fast path (pure gather, no segment op).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def init_embedding_bag(key, vocab_sizes, embed_dim: int):
+    """One table per sparse field, stacked dict {field_i: [V_i, D]}."""
+    keys = jax.random.split(key, len(vocab_sizes))
+    return {f"table_{i}": dense_init(k, (v, embed_dim), scale=0.02)
+            for i, (k, v) in enumerate(zip(keys, vocab_sizes))}
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  offsets: jnp.ndarray | None = None,
+                  weights: jnp.ndarray | None = None,
+                  mode: str = "sum") -> jnp.ndarray:
+    """torch.nn.EmbeddingBag semantics.
+
+    ids [T] (flat indices); offsets [B] bag starts (None => single-hot ids
+    of shape [B] -> pure gather). Returns [B, D].
+    """
+    if offsets is None:
+        return jnp.take(table, ids, axis=0)
+    t = ids.shape[0]
+    b = offsets.shape[0]
+    rows = jnp.take(table, ids, axis=0)  # [T, D]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    # bag id per element: number of offsets <= position - 1
+    bag = jnp.searchsorted(offsets, jnp.arange(t), side="right") - 1
+    out = jax.ops.segment_sum(rows, bag, num_segments=b)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones((t, 1), rows.dtype), bag,
+                                  num_segments=b)
+        out = out / jnp.maximum(cnt, 1.0)
+    return out

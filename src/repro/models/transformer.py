@@ -1,0 +1,574 @@
+"""Sharded decoder-only transformer LM: GQA / qk-norm / RoPE / MLA / MoE.
+
+One flexible implementation covers all five assigned LM architectures
+(qwen3-moe-235b, deepseek-v2-lite w/ MLA, granite-34b MQA, qwen3-1.7b,
+glm4-9b). Design points:
+
+  * layer parameters are stacked on a leading [L] axis and the stack runs
+    under ``jax.lax.scan`` (+ optional ``jax.checkpoint``) so the HLO stays
+    one-layer-sized at any depth;
+  * attention is blockwise (online-softmax over KV chunks) so 32k-token
+    prefill never materializes the S×S score matrix;
+  * MLA uses the naive (reconstructing) form for train/prefill and the
+    absorbed form for decode, attending directly against the compressed
+    c_kv cache — the cache stores [S, kv_lora + rope_dim] per token;
+  * cross-entropy is computed in sequence chunks under ``jax.checkpoint``
+    so [B, S, V] logits never materialize.
+
+Pure functions over a param pytree; sharding intent lives in
+``param_specs`` / ``input_specs`` consumed by launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (apply_rope, cross_entropy, dense_init,
+                                 rms_norm, rope_angles)
+from repro.models.moe import MoEConfig, init_moe, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    glu: bool = True           # False => 2-matmul GELU MLP (granite/bigcode)
+    rope_theta: float = 1e6
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 512
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+    # --- distribution hints (populated by launch/cells.py from the mesh;
+    # defaults are the mesh-free no-op, so model code runs unchanged on a
+    # single device). seq_shard=True = Ulysses-style sequence parallelism:
+    # the residual stream is S-sharded on the model axis; attention
+    # reshards S->heads and back with all-to-alls. ---
+    hint_batch_axes: tuple = ()
+    hint_model_axis: Any = None
+    hint_model_extent: int = 1
+    seq_shard: bool = False
+    sp_mode: str = "auto"    # "auto" | "none" — perf-lab toggle
+    attn_mode: str = "block"  # "block" | "direct" (direct: CP-friendly)
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS roofline terms)."""
+        d, l = self.d_model, self.n_layers
+        if self.mla is not None:
+            m = self.mla
+            attn = (d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + d * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = d * self.d_head * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * self.d_head * d
+        if self.moe is not None:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_expert_ff \
+                + d * self.moe.n_experts
+            if self.moe.n_shared:
+                fs = self.moe.d_shared_ff or self.moe.d_expert_ff * self.moe.n_shared
+                ffn += 3 * d * fs
+        else:
+            ffn = (3 if self.glu else 2) * d * self.d_ff
+        return l * (attn + ffn) + 2 * self.vocab * d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.n_params
+        d, l = self.d_model, self.n_layers
+        m = self.mla
+        if m is not None:
+            attn = (d * (m.kv_lora_rank + m.qk_rope_dim)
+                    + m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                    + d * self.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                    + self.n_heads * m.v_head_dim * d)
+        else:
+            attn = d * self.d_head * (self.n_heads + 2 * self.n_kv_heads) \
+                + self.n_heads * self.d_head * d
+        ffn = self.moe.top_k * 3 * d * self.moe.d_expert_ff + d * self.moe.n_experts
+        if self.moe.n_shared:
+            fs = self.moe.d_shared_ff or self.moe.d_expert_ff * self.moe.n_shared
+            ffn += 3 * d * fs
+        return l * (attn + ffn) + 2 * self.vocab * d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: TransformerConfig) -> Dict[str, Any]:
+    l, d = cfg.n_layers, cfg.d_model
+    keys = jax.random.split(key, 16)
+
+    def stack(initializer):
+        return jax.vmap(initializer)(jax.random.split(keys[0], l))
+
+    layer: Dict[str, Any] = {
+        "ln1": jnp.ones((l, d), jnp.float32),
+        "ln2": jnp.ones((l, d), jnp.float32),
+    }
+    if cfg.mla is None:
+        h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        layer.update(
+            wq=stack(lambda k: dense_init(k, (d, h * dh))),
+            wk=stack(lambda k: dense_init(k, (d, kv * dh))),
+            wv=stack(lambda k: dense_init(k, (d, kv * dh))),
+            wo=stack(lambda k: dense_init(k, (h * dh, d))),
+        )
+        if cfg.qk_norm:
+            layer["q_norm"] = jnp.ones((l, dh), jnp.float32)
+            layer["k_norm"] = jnp.ones((l, dh), jnp.float32)
+    else:
+        m, h = cfg.mla, cfg.n_heads
+        layer.update(
+            w_dkv=stack(lambda k: dense_init(
+                k, (d, m.kv_lora_rank + m.qk_rope_dim))),
+            kv_ln=jnp.ones((l, m.kv_lora_rank), jnp.float32),
+            w_uk=stack(lambda k: dense_init(
+                k, (m.kv_lora_rank, h * m.qk_nope_dim))),
+            w_uv=stack(lambda k: dense_init(
+                k, (m.kv_lora_rank, h * m.v_head_dim))),
+            wq=stack(lambda k: dense_init(
+                k, (d, h * (m.qk_nope_dim + m.qk_rope_dim)))),
+            wo=stack(lambda k: dense_init(k, (h * m.v_head_dim, d))),
+        )
+    if cfg.moe is None:
+        if cfg.glu:
+            layer["w_gate"] = stack(lambda k: dense_init(k, (d, cfg.d_ff)))
+        layer.update(
+            w_up=stack(lambda k: dense_init(k, (d, cfg.d_ff))),
+            w_down=stack(lambda k: dense_init(k, (cfg.d_ff, d))),
+        )
+    else:
+        moe_stack = jax.vmap(lambda k: init_moe(k, cfg.moe, d))(
+            jax.random.split(keys[1], l))
+        layer["moe"] = moe_stack
+    return {
+        "embed": dense_init(keys[2], (cfg.vocab, d), scale=0.02),
+        "lm_head": dense_init(keys[3], (d, cfg.vocab)),
+        "final_ln": jnp.ones((d,), jnp.float32),
+        "layers": layer,
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        q_chunk: int, kv_chunk: int) -> jnp.ndarray:
+    """Causal online-softmax attention over KV chunks.
+
+    q [B, S, H, dh]; k, v [B, S, KV, dh_(v)]. GQA via head grouping.
+    Never materializes more than [B, KV, G, q_chunk, kv_chunk] scores.
+    """
+    b, s, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    dv = v.shape[3]
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, s)
+    nq, nk = s // qc, s // kc
+    scale = dh ** -0.5
+    qb = q.reshape(b, nq, qc, kv, g, dh)
+    kb = k.reshape(b, nk, kc, kv, dh)
+    vb = v.reshape(b, nk, kc, kv, dv)
+
+    def one_q_block(args):
+        qi, i = args  # [B, qc, KV, G, dh], scalar block index
+        q_pos = i * qc + jnp.arange(qc)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kj, vj, j = xs  # [B, kc, KV, dh], [B, kc, KV, dv]
+            srow = jnp.einsum("bqkgd,bckd->bkgqc", qi, kj) * scale
+            k_pos = j * kc + jnp.arange(kc)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            srow = jnp.where(mask[None, None, None], srow.astype(jnp.float32),
+                             -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(srow, axis=-1))
+            p = jnp.exp(srow - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(qi.dtype), vj)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, qc, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)  # [B, KV, G, qc, dv]
+
+    outs = jax.lax.map(one_q_block, (qb.transpose(1, 0, 2, 3, 4, 5),
+                                     jnp.arange(nq)))
+    # [nq, B, KV, G, qc, dv] -> [B, S, H, dv]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, dv)
+
+
+def direct_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_chunk: int = 512) -> jnp.ndarray:
+    """Causal attention for the context-parallel layout: q is S-sharded on
+    the model axis, k/v are full-S. Online softmax over KV chunks — the KV
+    axis is unsharded, so the scan does not serialize a sharded dim (the
+    lax.map-over-q-blocks path would), and the live score tile stays
+    [*, S_loc, kv_chunk] f32 instead of [*, S_loc, S] (4.3 GB/chip at the
+    qwen3-moe train cell — §Perf log)."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    dv = v.shape[3]
+    kc = min(kv_chunk, s)
+    nk = s // kc
+    qg = q.reshape(b, s, kvh, g, dh)
+    kb = k.reshape(b, nk, kc, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, kc, kvh, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(s)
+    scale = dh ** -0.5
+
+    def kv_step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        srow = jnp.einsum("bqkgd,bckd->bkgqc", qg, kj) * scale
+        k_pos = j * kc + jnp.arange(kc)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        srow = jnp.where(mask[None, None, None], srow.astype(jnp.float32),
+                         -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(srow, axis=-1))
+        p = jnp.exp(srow - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(q.dtype), vj)
+        acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, dv), jnp.float32)
+    # checkpoint the chunk body: backward recomputes the score tile per
+    # chunk instead of stashing all [nk, ..., kc] tiles (flash-style)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # [b, kv, g, s, dv] -> [b, s, h, dv]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dv).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cur_len: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Single-position attention against a [B, S_max, KV, dh] cache."""
+    b, h, dh = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache) * dh ** -0.5
+    s_max = k_cache.shape[1]
+    mask = jnp.arange(s_max)[None] < cur_len[:, None]  # [B, S]
+    scores = jnp.where(mask[:, None, None], scores.astype(jnp.float32),
+                       -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return out.reshape(b, h, v_cache.shape[3])
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(lp, x, cfg: TransformerConfig, positions):
+    """Full-sequence attention sublayer (train / prefill)."""
+    from repro.models.common import hint
+
+    b, s, d = x.shape
+    ba = tuple(cfg.hint_batch_axes)
+    m = cfg.hint_model_axis if cfg.seq_shard else None
+    xn = rms_norm(x, lp["ln1"])
+    if cfg.mla is None:
+        h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = jnp.einsum("bsd,dh->bsh", xn, lp["wq"].astype(x.dtype)
+                       ).reshape(b, s, h, dh)
+        k = jnp.einsum("bsd,dh->bsh", xn, lp["wk"].astype(x.dtype)
+                       ).reshape(b, s, kv, dh)
+        v = jnp.einsum("bsd,dh->bsh", xn, lp["wv"].astype(x.dtype)
+                       ).reshape(b, s, kv, dh)
+        if m is not None:
+            # context parallel: q stays S-sharded; k/v replicate over the
+            # model axis (cheap under GQA — kv heads are few)
+            q = hint(q, ba, m, None, None)
+            k = hint(k, ba, None, None, None)
+            v = hint(v, ba, None, None, None)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"])
+            k = rms_norm(k, lp["k_norm"])
+        cos, sin = rope_angles(positions, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if cfg.attn_mode == "direct":
+            o = direct_attention(q, k, v)
+        else:
+            o = blockwise_attention(q, k, v, cfg.q_chunk, cfg.kv_chunk)
+        o = o.reshape(b, s, h * dh)
+        if m is not None:
+            o = hint(o, ba, m, None)  # S-sharded into wo
+    else:
+        m, h = cfg.mla, cfg.n_heads
+        ckv = jnp.einsum("bsd,dr->bsr", xn, lp["w_dkv"].astype(x.dtype))
+        c_kv, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+        c_kv = rms_norm(c_kv, lp["kv_ln"])
+        k_nope = jnp.einsum("bsr,rh->bsh", c_kv, lp["w_uk"].astype(x.dtype)
+                            ).reshape(b, s, h, m.qk_nope_dim)
+        v = jnp.einsum("bsr,rh->bsh", c_kv, lp["w_uv"].astype(x.dtype)
+                       ).reshape(b, s, h, m.v_head_dim)
+        q = jnp.einsum("bsd,dh->bsh", xn, lp["wq"].astype(x.dtype)
+                       ).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+        q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+        cos, sin = rope_angles(positions, m.qk_rope_dim, cfg.rope_theta)
+        q_rope = apply_rope(q_rope, cos, sin)
+        k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # 1 shared head
+        k_rope_b = jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_dim))
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kf = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        ma = cfg.hint_model_axis if cfg.seq_shard else None
+        if ma is not None:
+            # context parallel: q S-sharded, k/v full-S (MLA k/v reconstruct
+            # from the small c_kv latent, so replication is cheap)
+            qf = hint(qf, ba, ma, None, None)
+            kf = hint(kf, ba, None, None, None)
+            v = hint(v, ba, None, None, None)
+        if cfg.attn_mode == "direct":
+            o = direct_attention(qf, kf, v)
+        else:
+            o = blockwise_attention(qf, kf, v, cfg.q_chunk, cfg.kv_chunk)
+        o = o.reshape(b, s, h * m.v_head_dim)
+        if ma is not None:
+            o = hint(o, ba, ma, None)
+    out = x + jnp.einsum("bsh,hd->bsd", o, lp["wo"].astype(x.dtype))
+    if cfg.seq_shard and cfg.hint_model_axis is not None:
+        out = hint(out, ba, cfg.hint_model_axis, None)  # back to S-sharded
+    return out
+
+
+def _ffn_block(lp, x, cfg: TransformerConfig):
+    xn = rms_norm(x, lp["ln2"])
+    if cfg.moe is None:
+        u = jnp.einsum("bsd,df->bsf", xn, lp["w_up"].astype(x.dtype))
+        if cfg.glu:
+            g = jnp.einsum("bsd,df->bsf", xn, lp["w_gate"].astype(x.dtype))
+            h = jax.nn.silu(g) * u
+        else:
+            h = jax.nn.gelu(u)
+        y = jnp.einsum("bsf,fd->bsd", h, lp["w_down"].astype(x.dtype))
+    else:
+        y = moe_ffn(lp["moe"], xn, cfg.moe)
+    return x + y
+
+
+def _layer(lp, x, cfg: TransformerConfig, positions):
+    return _ffn_block(lp, _attn_block(lp, x, cfg, positions), cfg)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens: jnp.ndarray, cfg: TransformerConfig
+            ) -> jnp.ndarray:
+    """tokens [B, S] -> final hidden states [B, S, d] (pre lm_head)."""
+    from repro.models.common import hint
+
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    if cfg.seq_shard and cfg.hint_model_axis is not None:
+        x = hint(x, tuple(cfg.hint_batch_axes), cfg.hint_model_axis, None)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(h, lp):
+        h = _layer(lp, h, cfg, positions)
+        return h, ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    if cfg.seq_shard and cfg.hint_model_axis is not None:
+        # gather S for the (vocab-sharded) loss head
+        x = hint(x, tuple(cfg.hint_batch_axes), None, None)
+    return rms_norm(x, params["final_ln"])
+
+
+def loss_fn(params, tokens: jnp.ndarray, targets: jnp.ndarray,
+            cfg: TransformerConfig) -> jnp.ndarray:
+    """Chunked cross-entropy LM loss (never materializes [B, S, V])."""
+    h = forward(params, tokens, cfg)
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    nc = s // c
+
+    @jax.checkpoint
+    def chunk_loss(hi, ti):
+        logits = jnp.einsum("bcd,dv->bcv", hi, params["lm_head"].astype(hi.dtype))
+        return cross_entropy(logits, ti)
+
+    # static python unroll (nc is small): avoids a while loop whose
+    # sharding GSPMD resolves poorly and whose trip count the roofline's
+    # loop-factor heuristic would mis-scale
+    total = jnp.float32(0.0)
+    for i in range(nc):
+        total = total + chunk_loss(
+            jax.lax.dynamic_slice_in_dim(h, i * c, c, axis=1),
+            jax.lax.dynamic_slice_in_dim(targets, i * c, c, axis=1))
+    return total / nc
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> Dict[str, jnp.ndarray]:
+    dtype = dtype or cfg.dtype
+    l = cfg.n_layers
+    if cfg.mla is None:
+        kv, dh = cfg.n_kv_heads, cfg.d_head
+        return {
+            "k": jnp.zeros((l, batch, max_len, kv, dh), dtype),
+            "v": jnp.zeros((l, batch, max_len, kv, dh), dtype),
+        }
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((l, batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((l, batch, max_len, m.qk_rope_dim), dtype),
+    }
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, cur_len: jnp.ndarray,
+                cfg: TransformerConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One decoding step.
+
+    tokens [B] int32; cur_len [B] current cache fill (tokens go to position
+    cur_len). Returns (logits [B, V], updated cache). MLA decodes in the
+    absorbed form against the compressed cache.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(cfg.dtype)  # [B, d]
+    pos = cur_len  # [B]
+    new_cache = dict(cache)
+
+    def scan_body(x, inputs):
+        # unstacked per-layer params + per-layer cache slices
+        lp, cache_slices, li = inputs
+        xn = rms_norm(x, lp["ln1"])
+        if cfg.mla is None:
+            h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+            q = (xn @ lp["wq"].astype(x.dtype)).reshape(b, h, dh)
+            k = (xn @ lp["wk"].astype(x.dtype)).reshape(b, kv, dh)
+            v = (xn @ lp["wv"].astype(x.dtype)).reshape(b, kv, dh)
+            if cfg.qk_norm:
+                q = rms_norm(q, lp["q_norm"])
+                k = rms_norm(k, lp["k_norm"])
+            cos, sin = rope_angles(pos, dh, cfg.rope_theta)  # [B, dh/2]
+            q = apply_rope(q[:, None], cos[:, None], sin[:, None])[:, 0]
+            k = apply_rope(k[:, None], cos[:, None], sin[:, None])[:, 0]
+            k_cache, v_cache = cache_slices
+            bi = jnp.arange(b)
+            k_cache = k_cache.at[bi, pos].set(k)
+            v_cache = v_cache.at[bi, pos].set(v)
+            o = decode_attention(q, k_cache, v_cache, cur_len + 1)
+            o = o.reshape(b, h * dh)
+            new_slices = (k_cache, v_cache)
+        else:
+            m, h = cfg.mla, cfg.n_heads
+            ckv_full = xn @ lp["w_dkv"].astype(x.dtype)
+            c_new = rms_norm(ckv_full[:, :m.kv_lora_rank], lp["kv_ln"])
+            kr_new = ckv_full[:, m.kv_lora_rank:]
+            cos, sin = rope_angles(pos, m.qk_rope_dim, cfg.rope_theta)
+            kr_new = apply_rope(kr_new[:, None, None], cos[:, None],
+                                sin[:, None])[:, 0, 0]
+            ckv_cache, kr_cache = cache_slices
+            bi = jnp.arange(b)
+            ckv_cache = ckv_cache.at[bi, pos].set(c_new)
+            kr_cache = kr_cache.at[bi, pos].set(kr_new)
+            q = (xn @ lp["wq"].astype(x.dtype)).reshape(
+                b, h, m.qk_nope_dim + m.qk_rope_dim)
+            q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+            q_rope = apply_rope(q_rope[:, None], cos[:, None],
+                                sin[:, None])[:, 0]
+            # absorbed: q' = q_nope @ W_uk^T  -> attend against c_kv directly
+            w_uk = lp["w_uk"].astype(x.dtype).reshape(
+                m.kv_lora_rank, h, m.qk_nope_dim)
+            q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+            scores = (jnp.einsum("bhr,bsr->bhs", q_abs, ckv_cache)
+                      + jnp.einsum("bhn,bsn->bhs", q_rope, kr_cache))
+            scores = scores * (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+            s_max = ckv_cache.shape[1]
+            mask = jnp.arange(s_max)[None] < (cur_len + 1)[:, None]
+            scores = jnp.where(mask[:, None], scores.astype(jnp.float32),
+                               -jnp.inf)
+            p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            o_c = jnp.einsum("bhs,bsr->bhr", p, ckv_cache)  # latent output
+            w_uv = lp["w_uv"].astype(x.dtype).reshape(
+                m.kv_lora_rank, h, m.v_head_dim)
+            o = jnp.einsum("bhr,rhv->bhv", o_c, w_uv).reshape(
+                b, h * m.v_head_dim)
+            new_slices = (ckv_cache, kr_cache)
+        x = x + o @ lp["wo"].astype(x.dtype)
+        xn2 = rms_norm(x, lp["ln2"])
+        if cfg.moe is None:
+            u = xn2 @ lp["w_up"].astype(x.dtype)
+            if cfg.glu:
+                g = xn2 @ lp["w_gate"].astype(x.dtype)
+                h = jax.nn.silu(g) * u
+            else:
+                h = jax.nn.gelu(u)
+            y = h @ lp["w_down"].astype(x.dtype)
+        else:
+            y = moe_ffn(lp["moe"], xn2[:, None, :], cfg.moe)[:, 0]
+        return x + y, new_slices
+
+    # scan over layers, threading the cache stacks
+    if cfg.mla is None:
+        cache_in = (cache["k"], cache["v"])
+    else:
+        cache_in = (cache["ckv"], cache["krope"])
+
+    def body(h, xs):
+        lp, cs, li = xs
+        h, new_cs = scan_body(h, (lp, cs, li))
+        return h, new_cs
+
+    x, cache_out = jax.lax.scan(
+        body, x, (params["layers"], cache_in, jnp.arange(cfg.n_layers)))
+    if cfg.mla is None:
+        new_cache = {"k": cache_out[0], "v": cache_out[1]}
+    else:
+        new_cache = {"ckv": cache_out[0], "krope": cache_out[1]}
+    x = rms_norm(x, params["final_ln"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, new_cache

@@ -1,0 +1,5 @@
+"""From-scratch optimizers and distributed-optimization tricks."""
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     compressed_psum)

@@ -1,0 +1,45 @@
+"""Elastic scaling: resume a checkpoint onto a different mesh.
+
+Checkpoints store logical (unsharded) arrays, so elasticity is re-placement:
+``remesh`` device_puts every leaf with the sharding rules of the *new* mesh.
+Works across device-count changes (shrink after failures, grow after
+repairs) as long as the new mesh divides the sharded dims — validated by
+``check_divisibility`` before any transfer happens.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def check_divisibility(tree, specs, mesh):
+    """Raise with a precise message if any sharded dim doesn't divide."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(path, leaf, spec):
+        if spec is None:
+            return
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if leaf.shape[dim] % total:
+                raise ValueError(
+                    f"{jax.tree_util.keystr(path)}: dim {dim} of shape "
+                    f"{leaf.shape} not divisible by mesh extent {total} "
+                    f"({axes})")
+
+    jax.tree_util.tree_map_with_path(one, tree, specs)
+
+
+def remesh(tree, specs, mesh):
+    """Place every leaf on ``mesh`` according to its PartitionSpec."""
+    check_divisibility(tree, specs, mesh)
+
+    def place(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec or P()))
+
+    return jax.tree.map(place, tree, specs)

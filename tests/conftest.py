@@ -1,0 +1,34 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS / device-count overrides here — smoke tests must see the
+real single CPU device (the 512-device override belongs ONLY to
+launch/dryrun.py). Multi-device tests spawn subprocesses with their own
+XLA_FLAGS (see tests/test_distributed.py).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# keep test runs deterministic and CPU-pinned
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def cliques_graph():
+    from repro.graphs.generators import ring_of_cliques
+    return ring_of_cliques(16, 8)
+
+
+@pytest.fixture(scope="session")
+def web_graph():
+    from repro.graphs.generators import powerlaw_communities
+    return powerlaw_communities(2048, p_in=0.5, mix=0.02, seed=1)

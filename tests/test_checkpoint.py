@@ -1,0 +1,96 @@
+"""Checkpoint manager: atomicity, retention, auto-resume, elastic remesh."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.train.elastic import check_divisibility, remesh
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32)),
+                       "b": jnp.asarray(rng.normal(size=(8,)).astype(np.float32))},
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save(100, tree)
+    restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    assert step == 100
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, _tree(s))
+    assert mgr.steps() == [30, 40]
+    assert mgr.latest_step() == 40
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(10, _tree())
+    # simulate a crash mid-write: a step dir without MANIFEST
+    os.makedirs(tmp_path / "step_00000020")
+    (tmp_path / "step_00000020" / "host_0.npz").write_bytes(b"junk")
+    assert mgr.latest_step() == 10
+    restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 10
+
+
+def test_tmp_dirs_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, _tree())
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith(".tmp") for n in names)
+
+
+def test_leaf_count_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree())
+    bad_template = {"only": jnp.zeros(3)}
+    with pytest.raises(ValueError, match="leaves"):
+        mgr.restore(bad_template)
+
+
+def test_manifest_extra(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _tree(), extra={"loss": 1.5})
+    assert mgr.manifest(3)["extra"]["loss"] == 1.5
+
+
+def test_elastic_divisibility_check():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tree = {"w": jnp.zeros((7, 4))}
+    specs = {"w": P("model", None)}
+    # divides with 1 device
+    remesh(tree, specs, mesh)
+    # a fake 2-extent check must fail for odd dims: emulate via specs on dim 0
+
+    class FakeMesh:
+        axis_names = ("model",)
+        devices = np.empty((2,))
+
+    with pytest.raises(ValueError, match="not divisible"):
+        check_divisibility(tree, specs, FakeMesh())
+
+
+def test_elastic_remesh_preserves_values():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tree = _tree()
+    specs = {"params": {"w": P("data", None), "b": P()}, "step": P()}
+    placed = remesh(tree, specs, mesh)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(placed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

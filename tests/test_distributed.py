@@ -1,0 +1,165 @@
+"""Multi-device tests. These need >1 XLA host device, so each runs in a
+subprocess with its own XLA_FLAGS (conftest keeps the main process at one
+device so smoke tests see the real topology)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_dist_lpa_matches_single_device():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.graphs.generators import powerlaw_communities
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.core.lpa import lpa, LPAConfig
+        from repro.core.modularity import modularity
+        mesh = jax.make_mesh((8,), ("shard",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g, _ = powerlaw_communities(1536, p_in=0.5, mix=0.02, seed=1)
+        ws = build_dist_workspace(g, 8)
+        labels, iters = dist_lpa(mesh, ws, rho=2)
+        res = lpa(g, LPAConfig(method="mg", rho=2))
+        assert (np.asarray(labels) == np.asarray(res.labels)).all(), \\
+            "distributed labels diverge from single-device"
+        print("Q=", float(modularity(g, labels)))
+    """)
+    assert "Q=" in out
+
+
+def test_dist_lpa_2d_mesh_with_partitioner():
+    """Distributed LPA over a 2-D mesh (flattened axes) with the
+    LPA-community locality reorder feeding the shard layout."""
+    _run("""
+        import numpy as np, jax
+        from repro.graphs.generators import powerlaw_communities
+        from repro.graphs.partition import lpa_partition
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.core.modularity import modularity
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        g, _ = powerlaw_communities(1024, p_in=0.5, mix=0.02, seed=3)
+        part = lpa_partition(g, 8)
+        ws = build_dist_workspace(g, 8, order=part.order)
+        labels, iters = dist_lpa(mesh, ws, rho=2)
+        q = float(modularity(g, labels))
+        assert q > 0.35, q
+        assert len(np.unique(np.asarray(labels))) > 4
+    """, devices=8)
+
+
+def test_dp_train_step_with_compression():
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.train.steps import make_dp_train_step
+        mesh = jax.make_mesh((4,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+
+        def loss_fn(params, batch):
+            pred = batch["x"] @ params["w"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        init, step = make_dp_train_step(loss_fn, mesh, axis_name="data",
+                                        peak_lr=3e-2, warmup=1, total=100)
+        params = {"w": jnp.zeros((6,))}
+        opt, err = init(params)
+        k = jax.random.PRNGKey(0)
+        w_true = jnp.arange(6, dtype=jnp.float32) / 3 - 1
+        losses = []
+        for i in range(40):
+            kk = jax.random.fold_in(k, i)
+            x = jax.random.normal(kk, (32, 6))
+            batch = {"x": x, "y": x @ w_true}
+            params, opt, err, m = step(params, opt, err, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.05 * losses[0], losses
+    """, devices=4)
+
+
+def test_compressed_vs_plain_allreduce_agree():
+    """int8 EF all-reduce must track plain f32 within quantization error."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.optim.compression import compressed_psum
+        mesh = jax.make_mesh((4,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+
+        def body(g, e):
+            mean, new_e = compressed_psum({"g": g}, {"g": e}, "d")
+            plain = jax.lax.pmean(g, "d")
+            return mean["g"], new_e["g"], plain
+
+        f = jax.jit(jax.shard_map(body, mesh=mesh,
+                    in_specs=(P("d"), P("d")), out_specs=(P("d"), P("d"),
+                    P("d")), check_vma=False))
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+        e = jnp.zeros((4, 64), jnp.float32)
+        mean, new_e, plain = f(g, e)
+        err = np.abs(np.asarray(mean) - np.asarray(plain)).max()
+        scale = np.abs(np.asarray(g)).max() / 127.0
+        assert err <= scale + 1e-6, (err, scale)
+    """, devices=4)
+
+
+def test_multihost_checkpoint_shards():
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.checkpoint.manager import CheckpointManager
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, n_hosts=2)
+        t0 = {"w": jnp.arange(4.0)}
+        t1 = {"w": jnp.arange(4.0) + 100}
+        mgr.save(10, t0, host=0)
+        # only one of two host shards present -> step is NOT restorable
+        assert mgr.latest_step() is None
+        mgr.save(10, t1, host=1)
+        assert mgr.latest_step() == 10
+        r0, _ = mgr.restore(t0, host=0)
+        r1, _ = mgr.restore(t0, host=1)
+        np.testing.assert_array_equal(np.asarray(r0["w"]), np.arange(4.0))
+        np.testing.assert_array_equal(np.asarray(r1["w"]),
+                                      np.arange(4.0) + 100)
+
+
+def test_halo_exchange_matches_full_gather():
+    """Hub+halo label exchange must be bit-identical to the full gather
+    (EXPERIMENTS §Perf hillclimb 3) and strictly cheaper on the wire."""
+    _run("""
+        import numpy as np, jax
+        from repro.graphs.generators import powerlaw_communities
+        from repro.graphs.partition import lpa_partition
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        mesh = jax.make_mesh((8,), ("shard",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g, _ = powerlaw_communities(4096, p_in=0.5, mix=0.02, seed=1)
+        part = lpa_partition(g, 8)
+        ws_f = build_dist_workspace(g, 8, order=part.order)
+        ws_h = build_dist_workspace(g, 8, order=part.order, halo=True)
+        lf, _ = dist_lpa(mesh, ws_f, rho=2)
+        lh, _ = dist_lpa(mesh, ws_h, rho=2)
+        assert (np.asarray(lf) == np.asarray(lh)).all()
+        full = ws_f.v_pad * 8
+        halo = (ws_h.h_pad + ws_h.hub_pad) * 8
+        assert halo < full, (halo, full)
+    """, devices=8)

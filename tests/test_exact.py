@@ -1,0 +1,64 @@
+"""The exact sort+segment aggregation (ν-LPA analogue) vs a numpy brute
+force, including its tie-break semantics."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exact import exact_choose, exact_linking_weights
+from repro.core.sketch import hash_mix
+
+
+def brute_force_choose(edge_src, nbr_labels, weights, n, labels, seed):
+    """Reference: exact argmax with hash-then-min-label tie-breaking."""
+    out = labels.copy()
+    for v in range(n):
+        sel = edge_src == v
+        if not sel.any():
+            continue
+        agg = {}
+        for c, w in zip(nbr_labels[sel], weights[sel]):
+            agg[int(c)] = agg.get(int(c), 0.0) + float(w)
+        best_w = max(agg.values())
+        tied = [c for c, w in agg.items() if w >= best_w - 1e-9]
+        hs = {c: int(hash_mix(jnp.int32(c), jnp.int32(seed))) for c in tied}
+        hmin = min(hs.values())
+        out[v] = min(c for c in tied if hs[c] == hmin)
+    return out
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 12), m=st.integers(1, 60), seed=st.integers(0, 99))
+def test_exact_choose_matches_brute_force(n, m, seed):
+    rng = np.random.default_rng(seed)
+    edge_src = rng.integers(0, n, m).astype(np.int32)
+    nbr_labels = rng.integers(0, n, m).astype(np.int32)
+    weights = rng.integers(1, 4, m).astype(np.float32)  # integral: exact ties
+    labels = np.arange(n, dtype=np.int32)
+    got = np.asarray(exact_choose(jnp.asarray(edge_src),
+                                  jnp.asarray(nbr_labels),
+                                  jnp.asarray(weights), n,
+                                  jnp.asarray(labels), jnp.int32(seed)))
+    want = brute_force_choose(edge_src, nbr_labels, weights, n, labels, seed)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_isolated_vertices_keep_labels():
+    edge_src = jnp.asarray([0, 0], jnp.int32)
+    nbr_labels = jnp.asarray([5, 5], jnp.int32)
+    weights = jnp.ones(2, jnp.float32)
+    labels = jnp.asarray([9, 7, 3], jnp.int32)
+    out = exact_choose(edge_src, nbr_labels, weights, 3, labels, jnp.int32(1))
+    assert int(out[0]) == 5        # has edges -> moves to 5
+    assert int(out[1]) == 7        # isolated -> keeps
+    assert int(out[2]) == 3
+
+
+def test_exact_linking_weights():
+    # vertex 0 has edges to labels [4, 4, 2] with weights [1, 2, 5]
+    edge_src = jnp.asarray([0, 0, 0, 1], jnp.int32)
+    nbr_labels = jnp.asarray([4, 4, 2, 4], jnp.int32)
+    weights = jnp.asarray([1.0, 2.0, 5.0, 7.0], jnp.float32)
+    q = exact_linking_weights(edge_src, nbr_labels, weights, 2,
+                              jnp.asarray([4, 2], jnp.int32))
+    assert float(q[0]) == 3.0      # K_{0->4}
+    assert float(q[1]) == 0.0      # K_{1->2} (vertex 1 only links to 4)

@@ -1,0 +1,68 @@
+"""Invariants of the static multi-round fold plan (hypothesis over degree
+sequences): exact entry coverage, canonical row mapping, round termination."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.csr import build_fold_plan, plan_padded_entries
+
+
+@settings(max_examples=40, deadline=None)
+@given(degrees=st.lists(st.integers(0, 400), min_size=1, max_size=64),
+       k=st.sampled_from([2, 8]), chunk=st.sampled_from([16, 128]))
+def test_round0_covers_every_entry_exactly_once(degrees, k, chunk):
+    degrees = np.asarray(degrees)
+    plan = build_fold_plan(degrees, k=k, chunk=chunk)
+    seen = np.zeros(int(degrees.sum()), dtype=int)
+    for b in plan.rounds[0].buckets:
+        g = np.asarray(b.gather).reshape(-1)
+        g = g[g >= 0]
+        seen[g] += 1
+    assert (seen == 1).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(degrees=st.lists(st.integers(0, 400), min_size=1, max_size=64),
+       k=st.sampled_from([2, 8]), chunk=st.sampled_from([16, 128]))
+def test_final_rows_map_every_vertex_once(degrees, k, chunk):
+    degrees = np.asarray(degrees)
+    plan = build_fold_plan(degrees, k=k, chunk=chunk)
+    rtv = np.asarray(plan.row_to_vertex)
+    # after the last round every vertex has at most one row; vertices with
+    # degree > 0 have exactly one
+    vals, counts = np.unique(rtv, return_counts=True)
+    assert (counts == 1).all()
+    assert set(vals) == {v for v in range(len(degrees)) if degrees[v] > 0}
+
+
+@settings(max_examples=30, deadline=None)
+@given(degrees=st.lists(st.integers(0, 3000), min_size=1, max_size=16))
+def test_rounds_terminate_logarithmically(degrees):
+    degrees = np.asarray(degrees)
+    plan = build_fold_plan(degrees, k=8, chunk=128)
+    dmax = max(int(degrees.max()), 1)
+    # each round divides per-vertex entries by >= chunk/k = 16
+    import math
+    bound = max(1, math.ceil(math.log(dmax, 128 // 8)) + 1)
+    assert plan.n_rounds <= bound + 1
+
+
+def test_bucket_widths_cover_small_degrees_tightly():
+    plan = build_fold_plan(np.asarray([1, 2, 3, 5, 120, 128, 129]), k=8,
+                           chunk=128)
+    widths = sorted({b.width for b in plan.rounds[0].buckets})
+    assert widths[0] <= 4          # tiny rows don't pad to 128
+    assert max(widths) == 128
+
+
+def test_padded_entries_lower_bound():
+    degrees = np.asarray([1, 7, 129, 4000])
+    plan = build_fold_plan(degrees, k=8, chunk=128)
+    assert plan_padded_entries(plan) >= int(degrees.sum())
+    # padding never exceeds 2x + merge rounds overhead
+    assert plan_padded_entries(plan) < 4 * int(degrees.sum()) + 1024
+
+
+def test_chunk_must_exceed_k():
+    with pytest.raises(ValueError):
+        build_fold_plan(np.asarray([4]), k=8, chunk=8)

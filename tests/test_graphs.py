@@ -1,0 +1,131 @@
+"""CSR construction, generators, sampler, and the LPA-driven partitioner."""
+import numpy as np
+import pytest
+
+from repro.core.modularity import modularity, nmi
+from repro.graphs.csr import build_csr
+from repro.graphs.generators import (chain_kmer, grid2d, paper_suite,
+                                     powerlaw_communities, ring_of_cliques,
+                                     rmat, sbm)
+from repro.graphs.partition import (contiguous_parts, edge_cut_fraction,
+                                    lpa_partition)
+from repro.graphs.sampler import sample_fanout, sampled_shape
+
+
+def test_build_csr_symmetrize_dedupe():
+    edges = np.asarray([[0, 1], [1, 0], [0, 1], [2, 2]])
+    g = build_csr(edges, 3)
+    # 0-1 dedupes to one undirected edge (weight 3: 0->1 twice + 1->0 once),
+    # self-loop dropped
+    assert g.n_edges == 2
+    assert float(g.weights.sum()) == 6.0
+    assert int(g.degrees[2]) == 0
+
+
+def test_build_csr_weighted_accumulation():
+    edges = np.asarray([[0, 1], [0, 1]])
+    g = build_csr(edges, 2, weights=np.asarray([2.0, 3.0], np.float32))
+    assert float(g.weights[0]) == 5.0
+    assert float(g.total_weight) == 5.0  # m = half of both directions
+
+
+def test_generator_families_degree_stats():
+    road = grid2d(32, 32)
+    avg_deg = road.n_edges / road.n_nodes
+    assert 3.0 < avg_deg < 4.1  # 4-connected grid
+
+    kmer = chain_kmer(4096)
+    assert 1.9 < kmer.n_edges / kmer.n_nodes < 2.6
+
+    web = rmat(10, edge_factor=8, seed=1)
+    deg = np.asarray(web.degrees)
+    assert deg.max() > 20 * max(deg.mean(), 1)  # heavy tail
+
+
+def test_sbm_ground_truth_recoverable():
+    g, truth = sbm(4, 64, 0.3, 0.002, seed=1)
+    from repro.core.lpa import LPAConfig, lpa
+    res = lpa(g, LPAConfig(method="exact", rho=2))
+    assert nmi(np.asarray(res.labels), truth) > 0.95
+
+
+def test_paper_suite_families():
+    suite = paper_suite("tiny")
+    assert set(suite) == {"web", "social", "road", "kmer"}
+    for g in suite.values():
+        assert g.n_nodes > 0 and g.n_edges > 0
+
+
+def test_sampler_shapes_match_sampled_shape():
+    g, _ = powerlaw_communities(1024, seed=3)
+    rng = np.random.default_rng(0)
+    fanouts = (5, 3)
+    batch = sample_fanout(g, rng.integers(0, g.n_nodes, 16), fanouts, rng)
+    v, e = sampled_shape(16, fanouts)
+    assert len(batch.node_ids) == v
+    assert len(batch.edge_src) == e
+    assert batch.seed_mask.sum() == 16
+    assert (batch.edge_dst < v).all() and (batch.edge_src < v).all()
+    # parents come before children in local numbering
+    assert (batch.edge_dst < batch.edge_src).all()
+
+
+def test_sampler_handles_isolated_vertices():
+    edges = np.asarray([[0, 1]])
+    g = build_csr(edges, 4)  # vertices 2, 3 isolated
+    rng = np.random.default_rng(0)
+    batch = sample_fanout(g, np.asarray([2, 3]), (4,), rng)
+    assert not batch.edge_valid.any()  # degenerate self edges are marked
+
+
+def test_lpa_partition_reduces_edge_cut():
+    g, _ = powerlaw_communities(2048, p_in=0.5, mix=0.02, seed=1)
+    part = lpa_partition(g, 8)
+    base = contiguous_parts(g, 8)
+    # random vertex order would cut ~ (1 - 1/8); LPA locality should beat
+    # the naive contiguous split on a community-structured graph
+    assert part.edge_cut <= edge_cut_fraction(g, base) + 0.02
+    assert part.edge_cut < 0.5
+    # order is a permutation; bounds partition the vertex range
+    assert sorted(part.order.tolist()) == list(range(g.n_nodes))
+    assert part.bounds[0] == 0 and part.bounds[-1] == g.n_nodes
+    # communities are never split across devices
+    labels = part.parts
+    comm_dev = {}
+    from repro.core.lpa import LPAConfig, lpa
+    for v in range(g.n_nodes):
+        comm_dev.setdefault(int(part.order[v]), labels[v])
+
+
+def test_partition_balance():
+    g, _ = powerlaw_communities(4096, seed=2)
+    part = lpa_partition(g, 4)
+    counts = np.bincount(part.parts, minlength=4)
+    deg = np.asarray(g.degrees, dtype=np.int64)
+    load = np.asarray([deg[part.parts == p].sum() for p in range(4)])
+    assert load.max() < 2.2 * max(load.mean(), 1)
+
+
+def test_tree_sampler_matches_flat_sampler():
+    """Tree-contiguous layout is a permutation of the flat sampled batch
+    (the §Perf hillclimb-3 resharding must not change the data)."""
+    from repro.graphs.sampler import (sample_fanout, sample_fanout_trees,
+                                      tree_shape)
+    g, _ = powerlaw_communities(512, seed=4)
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, g.n_nodes, 8)
+    fanouts = (3, 2)
+    flat = sample_fanout(g, seeds.copy(), fanouts,
+                         np.random.default_rng(1))
+    trees = sample_fanout_trees(g, seeds.copy(), fanouts,
+                                np.random.default_rng(1))
+    v_t, e_t = tree_shape(fanouts)
+    assert trees["node_ids"].shape == (8, v_t)
+    assert trees["edge_src"].shape == (8, e_t)
+    # same multiset of sampled node ids
+    assert sorted(trees["node_ids"].ravel()) == sorted(flat.node_ids)
+    # seeds are local index 0 of each tree
+    np.testing.assert_array_equal(trees["node_ids"][:, 0], seeds)
+    # edges point child -> parent within the tree index range
+    assert (trees["edge_dst"] < trees["edge_src"]).all()
+    assert trees["edge_src"].max() < v_t

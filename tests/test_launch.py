@@ -1,0 +1,156 @@
+"""Launch-layer tests: registry completeness (the assigned 40-cell matrix),
+mesh builders, the HLO collective-bytes parser, and roofline arithmetic."""
+import numpy as np
+import pytest
+
+from repro.configs.registry import all_arch_ids, get_arch
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   collective_bytes, roofline)
+
+ASSIGNED = {
+    # lm: 4 shapes each
+    "qwen3-moe-235b-a22b": 4, "deepseek-v2-lite-16b": 4, "granite-34b": 4,
+    "qwen3-1.7b": 4, "glm4-9b": 4,
+    # gnn: 4 shapes each
+    "pna": 4, "meshgraphnet": 4, "egnn": 4, "equiformer-v2": 4,
+    # recsys
+    "dcn-v2": 4,
+}
+
+
+def test_all_assigned_archs_registered_with_full_cell_matrix():
+    ids = all_arch_ids()
+    for arch, n_cells in ASSIGNED.items():
+        assert arch in ids, f"missing assigned arch {arch}"
+        spec = get_arch(arch)
+        assert len(spec.cells) == n_cells, (arch, [c.name for c in spec.cells])
+    total = sum(len(get_arch(a).cells) for a in ASSIGNED)
+    assert total == 40  # the assigned matrix
+    # plus the paper's own workload cells
+    assert "lpa-mg8" in ids
+
+
+def test_exact_configs_match_assignment():
+    q = get_arch("qwen3-moe-235b-a22b").config
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads) == (94, 4096, 64, 4)
+    assert (q.moe.n_experts, q.moe.top_k, q.moe.d_expert_ff) == (128, 8, 1536)
+    assert q.vocab == 151936
+    g = get_arch("granite-34b").config
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads,
+            g.d_ff, g.vocab) == (88, 6144, 48, 1, 24576, 49152)
+    assert not g.glu  # gelu MLP (bigcode arch)
+    glm = get_arch("glm4-9b").config
+    assert (glm.n_layers, glm.d_model, glm.n_heads, glm.n_kv_heads,
+            glm.d_ff, glm.vocab) == (40, 4096, 32, 2, 13696, 151552)
+    d = get_arch("deepseek-v2-lite-16b").config
+    assert (d.n_layers, d.d_model, d.mla.kv_lora_rank) == (27, 2048, 512)
+    assert (d.moe.n_experts, d.moe.top_k, d.moe.n_shared) == (64, 6, 2)
+    e = get_arch("equiformer-v2").config
+    assert (e.n_layers, e.d_hidden, e.l_max, e.m_max, e.n_heads) == \
+        (12, 128, 6, 2, 8)
+    p = get_arch("pna").config
+    assert (p.n_layers, p.d_hidden) == (4, 75)
+    m = get_arch("meshgraphnet").config
+    assert (m.n_layers, m.d_hidden, m.mlp_layers) == (15, 128, 2)
+    c = get_arch("dcn-v2").config
+    assert (c.n_dense, c.n_sparse, c.embed_dim, c.n_cross_layers) == \
+        (13, 26, 16, 3)
+    assert c.mlp_dims == (1024, 1024, 512)
+
+
+def test_mesh_builders_pure():
+    """make_production_mesh is a function; importing mesh.py must not touch
+    device state (regression guard: module-level constants would)."""
+    import importlib
+    import repro.launch.mesh as mesh_mod
+    importlib.reload(mesh_mod)  # safe exactly because nothing runs at import
+
+
+def test_collective_bytes_parser():
+    hlo = """
+HloModule test
+
+fused_computation {
+  x = f32[128,256]{1,0} parameter(0)
+  ROOT r = f32[128,256]{1,0} add(x, x)
+}
+
+body {
+  p = bf16[64,64]{1,0} parameter(0)
+  ag = bf16[64,128]{1,0} all-gather(p), dimensions={1}
+  ROOT out = bf16[64,128]{1,0} copy(ag)
+}
+
+ENTRY main {
+  a = f32[1024]{0} parameter(0)
+  ar = f32[1024]{0} all-reduce(a), to_apply=fused_computation
+  rs = f32[256]{0} reduce-scatter(a), dimensions={0}
+  cp = f32[1024]{0} collective-permute(a), source_target_pairs={{0,1}}
+  ROOT t = tuple(ar, rs, cp)
+}
+"""
+    out = collective_bytes(hlo, loop_factor=10.0)
+    # all-reduce: 1024*4 * 2 (ring) = 8192 (entry, factor 1)
+    assert out["all-reduce"] == 8192.0
+    assert out["reduce-scatter"] == 1024.0
+    assert out["collective-permute"] == 4096.0
+    # all-gather inside non-entry computation: 64*128*2 bytes * loop 10
+    assert out["all-gather"] == 64 * 128 * 2 * 10.0
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_bytes_async_pairs_counted_once():
+    hlo = """
+ENTRY main {
+  a = f32[256]{0} parameter(0)
+  ags = f32[512]{0} all-gather-start(a), dimensions={0}
+  agd = f32[512]{0} all-gather-done(ags)
+  ROOT r = copy(agd)
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 2048.0
+
+
+def test_roofline_terms_and_bottleneck():
+    t = roofline(flops_chip=PEAK_FLOPS, bytes_chip=HBM_BW / 2,
+                 coll_bytes_chip=ICI_BW / 4)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.collective_s == pytest.approx(0.25)
+    assert t.bottleneck == "compute"
+    assert t.step_time_s == pytest.approx(1.0)
+
+
+def test_hardware_constants_are_v5e():
+    assert PEAK_FLOPS == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW == 50e9
+
+
+def test_lm_cells_are_the_assigned_shapes():
+    spec = get_arch("glm4-9b")
+    cells = {c.name: c for c in spec.cells}
+    assert cells["train_4k"].params == dict(seq=4096, batch=256)
+    assert cells["prefill_32k"].params == dict(seq=32768, batch=32)
+    assert cells["decode_32k"].params == dict(seq=32768, batch=128)
+    assert cells["long_500k"].params == dict(seq=524288, batch=1)
+    assert cells["long_500k"].kind == "decode"  # serve_step, not train_step
+
+
+def test_gnn_cells_are_the_assigned_shapes():
+    spec = get_arch("egnn")
+    cells = {c.name: c for c in spec.cells}
+    assert cells["full_graph_sm"].params["n_nodes"] == 2708
+    assert cells["minibatch_lg"].params["fanouts"] == (15, 10)
+    assert cells["ogb_products"].params["n_nodes"] == 2449029
+    assert cells["molecule"].params["batched"] == 128
+
+
+def test_recsys_cells_are_the_assigned_shapes():
+    spec = get_arch("dcn-v2")
+    cells = {c.name: c for c in spec.cells}
+    assert cells["train_batch"].params["batch"] == 65536
+    assert cells["serve_p99"].params["batch"] == 512
+    assert cells["serve_bulk"].params["batch"] == 262144
+    assert cells["retrieval_cand"].params["n_candidates"] == 1000000

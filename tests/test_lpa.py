@@ -1,0 +1,129 @@
+"""End-to-end LPA behaviour: planted-community recovery, convergence,
+Pick-Less symmetry breaking, rescan ablation, method-quality ordering."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.lpa import LPAConfig, build_workspace, lpa, lpa_move, lpa_step_fn
+from repro.core.modularity import community_sizes, modularity, nmi
+from repro.graphs.csr import build_csr
+from repro.graphs.generators import (chain_kmer, grid2d, powerlaw_communities,
+                                     ring_of_cliques, sbm)
+
+
+@pytest.mark.parametrize("method", ["exact", "mg", "bm"])
+def test_recovers_ring_of_cliques(method):
+    g, truth = ring_of_cliques(16, 8)
+    res = lpa(g, LPAConfig(method=method, rho=2))
+    assert res.converged
+    assert nmi(np.asarray(res.labels), truth) == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("method", ["exact", "mg"])
+def test_recovers_sbm(method):
+    g, truth = sbm(8, 64, p_in=0.2, p_out=0.001, seed=3)
+    res = lpa(g, LPAConfig(method=method, rho=2))
+    assert nmi(np.asarray(res.labels), truth) > 0.95
+
+
+def test_method_quality_ordering_web():
+    """Paper Fig. 7(c): exact ≈ MG8 >> BM on web-like graphs."""
+    g, _ = powerlaw_communities(4096, p_in=0.5, mix=0.02, seed=1)
+    qs = {}
+    for method in ("exact", "mg", "bm"):
+        res = lpa(g, LPAConfig(method=method, rho=2))
+        qs[method] = float(modularity(g, res.labels))
+    assert qs["mg"] > 0.95 * max(qs["exact"], qs["mg"])
+    assert qs["bm"] <= qs["mg"] + 0.02  # BM never meaningfully beats MG8
+
+
+def test_mg_k1_equals_low_quality_bm_regime():
+    """MG with k=1 and BM are both single-candidate methods; both should
+    still segment a trivially clustered graph."""
+    g, truth = ring_of_cliques(8, 6)
+    res = lpa(g, LPAConfig(method="mg", k=1, chunk=16, rho=2))
+    assert nmi(np.asarray(res.labels), truth) > 0.9
+
+
+def test_pickless_breaks_two_cycle():
+    """Two vertices joined by one edge endlessly swap labels in lock-step
+    LPA without PL; PL (active at iteration 0 cadence) must converge them."""
+    g = build_csr(np.asarray([[0, 1]]), 2)
+    res = lpa(g, LPAConfig(method="exact", rho=1, max_iters=6))
+    assert int(res.labels[0]) == int(res.labels[1])
+    res2 = lpa(g, LPAConfig(method="mg", rho=1, max_iters=6))
+    assert int(res2.labels[0]) == int(res2.labels[1])
+
+
+def test_labels_are_valid_community_ids():
+    g, _ = powerlaw_communities(1024, seed=5)
+    res = lpa(g, LPAConfig(method="mg", rho=2))
+    labels = np.asarray(res.labels)
+    assert labels.min() >= 0
+    assert labels.max() < g.n_nodes
+
+
+def test_max_iters_cap():
+    g = grid2d(24, 24)  # road networks converge slowly
+    res = lpa(g, LPAConfig(method="mg", max_iters=3, rho=2))
+    assert res.iterations <= 3
+
+
+def test_rescan_mode_runs_and_is_sane():
+    g, truth = ring_of_cliques(8, 8)
+    res = lpa(g, LPAConfig(method="mg", rescan=True, rho=2))
+    assert nmi(np.asarray(res.labels), truth) == pytest.approx(1.0)
+
+
+def test_modularity_nonnegative_on_clustered_graphs():
+    for g, _ in (ring_of_cliques(8, 8), sbm(6, 32, 0.3, 0.002)):
+        res = lpa(g, LPAConfig(method="mg", rho=2))
+        assert float(modularity(g, res.labels)) > 0.3
+
+
+def test_chain_kmer_many_small_communities():
+    g = chain_kmer(2048, seed=0)
+    res = lpa(g, LPAConfig(method="mg", rho=2))
+    sizes = community_sizes(np.asarray(res.labels))
+    assert len(sizes) > 10  # chains fragment into many communities
+
+
+def test_step_fn_matches_move():
+    g, _ = ring_of_cliques(6, 6)
+    cfg = LPAConfig(method="mg", rho=2)
+    ws = build_workspace(g, cfg)
+    labels = jnp.arange(g.n_nodes, dtype=jnp.int32)
+    step = lpa_step_fn(cfg)
+    l1, delta = step(ws, labels, jnp.int32(0))
+    l2, changed = lpa_move(ws, labels, jnp.asarray(True), jnp.int32(1), cfg)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    assert int(delta) == int(changed.sum())
+
+
+def test_pallas_backend_agrees_with_jnp_backend():
+    g, _ = ring_of_cliques(10, 8)
+    r_jnp = lpa(g, LPAConfig(method="mg", fold_backend="jnp", rho=2))
+    r_pls = lpa(g, LPAConfig(method="mg", fold_backend="pallas", rho=2))
+    np.testing.assert_array_equal(np.asarray(r_jnp.labels),
+                                  np.asarray(r_pls.labels))
+
+
+def test_weighted_edges_dominate():
+    """A heavy edge must pull a vertex into its neighbor's community even
+    when unit-weight edges outnumber it."""
+    # vertex 0: 3 unit edges into the {1,2,3} community, 1 heavy edge to 4
+    edges = np.asarray([[0, 1], [0, 2], [0, 3], [1, 2], [2, 3], [1, 3],
+                        [0, 4], [4, 5], [5, 6], [4, 6]])
+    w = np.asarray([1, 1, 1, 1, 1, 1, 10, 10, 10, 10], np.float32)
+    g = build_csr(edges, 7, weights=w)
+    for method in ("exact", "mg", "bm"):
+        res = lpa(g, LPAConfig(method=method, rho=2))
+        assert int(res.labels[0]) == int(res.labels[4]), method
+
+
+def test_self_loops_excluded():
+    edges = np.asarray([[0, 0], [0, 1], [1, 1]])
+    g = build_csr(edges, 2)
+    assert g.n_edges == 2  # only 0-1 both directions
+    res = lpa(g, LPAConfig(method="exact", rho=1))
+    assert int(res.labels[0]) == int(res.labels[1])

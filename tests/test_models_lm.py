@@ -1,0 +1,236 @@
+"""LM smoke + consistency tests for all five assigned transformer archs
+(reduced configs; full configs are exercised by the dry-run only).
+
+The strongest check: step-by-step decode through the KV cache reproduces
+the full-sequence forward's next-token logits (RoPE positions, GQA/MQA
+grouping, MLA absorbed-form decode, qk-norm all have to line up).
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import all_arch_ids, get_arch
+from repro.models.transformer import (decode_step, forward, init_cache,
+                                      init_params, loss_fn)
+
+LM_ARCHS = [a for a in all_arch_ids()
+            if get_arch(a).family == "lm"]
+
+
+def test_five_lm_archs_assigned():
+    assert sorted(LM_ARCHS) == sorted([
+        "qwen3-moe-235b-a22b", "deepseek-v2-lite-16b", "granite-34b",
+        "qwen3-1.7b", "glm4-9b"])
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    h = forward(params, tokens, cfg)
+    assert h.shape == (2, 16, cfg.d_model)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_train_step_reduces_loss(arch):
+    spec = get_arch(arch)
+    cfg = spec.smoke
+    from repro.train.steps import make_train_step
+
+    def loss(params, batch):
+        return loss_fn(params, batch["tokens"], batch["targets"], cfg)
+
+    init, step = make_train_step(loss, peak_lr=1e-2, warmup=1, total=100)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt = init(params)
+    step = jax.jit(step)
+    from repro.data.synthetic import token_batch
+    losses = []
+    for i in range(8):
+        batch = token_batch(0, i % 2, 4, 16, cfg.vocab)  # 2 repeating batches
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "glm4-9b", "granite-34b"])
+def test_decode_matches_forward_dense(arch):
+    """Feed S tokens through the cache one at a time; the hidden state at
+    the last step must match forward()'s last position (f32, tight)."""
+    spec = get_arch(arch)
+    cfg = dataclasses.replace(spec.smoke, dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    s = 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (3, s), 0, cfg.vocab)
+
+    h = forward(params, tokens, cfg)
+    ref_logits = h[:, -1] @ params["lm_head"].astype(h.dtype)
+
+    cache = init_cache(cfg, 3, s, dtype=jnp.float32)
+    dec = jax.jit(lambda p, c, t, n: decode_step(p, c, t, n, cfg))
+    for i in range(s):
+        cur = jnp.full((3,), i, jnp.int32)
+        logits, cache = dec(params, cache, tokens[:, i], cur)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_forward_mla():
+    """MLA's absorbed-form decode vs the naive reconstructing forward."""
+    spec = get_arch("deepseek-v2-lite-16b")
+    cfg = dataclasses.replace(
+        spec.smoke, dtype=jnp.float32,
+        moe=dataclasses.replace(spec.smoke.moe, capacity_factor=8.0))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    s = 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab)
+    h = forward(params, tokens, cfg)
+    ref_logits = h[:, -1] @ params["lm_head"].astype(h.dtype)
+    cache = init_cache(cfg, 2, s, dtype=jnp.float32)
+    dec = jax.jit(lambda p, c, t, n: decode_step(p, c, t, n, cfg))
+    for i in range(s):
+        logits, cache = dec(params, cache, tokens[:, i],
+                            jnp.full((2,), i, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_blockwise_attention_matches_dense():
+    """Online-softmax chunked attention == naive full softmax."""
+    from repro.models.transformer import blockwise_attention
+    rng = jax.random.PRNGKey(0)
+    b, s, h, kv, dh = 2, 32, 4, 2, 16
+    q = jax.random.normal(rng, (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, kv, dh))
+    out = blockwise_attention(q, k, v, q_chunk=8, kv_chunk=8)
+    # naive reference
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bqkgd,bckd->bkgqc", qg, k) / dh ** 0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bkgqc,bckd->bqkgd", p, v).reshape(b, s, h, dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_routing_conservation():
+    """Every kept token-expert slot carries its router prob; combine output
+    is a convex-ish combination (bounded by max expert output norm)."""
+    from repro.models.moe import MoEConfig, init_moe, moe_ffn
+    cfg = MoEConfig(n_experts=8, top_k=2, d_expert_ff=16,
+                    capacity_factor=8.0)  # no drops
+    params = init_moe(jax.random.PRNGKey(0), cfg, 32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    y = moe_ffn(params, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    # zero capacity_factor floor: with cap large, permuting tokens only
+    # permutes outputs (dispatch is content-independent bookkeeping)
+    perm = jnp.asarray([3, 1, 0, 2, 7, 5, 6, 4])
+    y_perm = moe_ffn(params, x[:, perm], cfg)
+    np.testing.assert_allclose(np.asarray(y_perm), np.asarray(y[:, perm]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    from repro.models.moe import MoEConfig, init_moe, moe_ffn
+    cfg = MoEConfig(n_experts=4, top_k=1, d_expert_ff=8,
+                    capacity_factor=0.5)  # forces drops
+    params = init_moe(jax.random.PRNGKey(0), cfg, 16)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16), jnp.float32)
+    y = moe_ffn(params, x, cfg)
+    assert bool(jnp.isfinite(y).all())  # dropped tokens yield zeros, not NaN
+
+
+def test_loss_chunking_invariance():
+    """Chunked CE == unchunked CE."""
+    spec = get_arch("qwen3-1.7b")
+    cfg = dataclasses.replace(spec.smoke, dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab)
+    l1 = loss_fn(params, tokens, targets, cfg)
+    cfg2 = dataclasses.replace(cfg, loss_chunk=4)
+    l2 = loss_fn(params, tokens, targets, cfg2)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_param_count_properties():
+    """n_params of the full configs lands in the advertised ballpark."""
+    granite = get_arch("granite-34b").config
+    assert 30e9 < granite.n_params < 40e9
+    q17 = get_arch("qwen3-1.7b").config
+    assert 1.2e9 < q17.n_params < 2.5e9
+    moe = get_arch("qwen3-moe-235b-a22b").config
+    assert 200e9 < moe.n_params < 280e9
+    assert 15e9 < moe.n_active_params < 30e9
+    ds = get_arch("deepseek-v2-lite-16b").config
+    assert 10e9 < ds.n_params < 22e9
+    assert ds.n_active_params < 4e9
+
+
+def test_direct_attention_matches_blockwise():
+    """The context-parallel KV-chunked attention == blockwise == naive."""
+    from repro.models.transformer import blockwise_attention, direct_attention
+    rng = jax.random.PRNGKey(3)
+    b, s, h, kv, dh = 2, 64, 8, 2, 16
+    q = jax.random.normal(rng, (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, kv, dh))
+    ref = blockwise_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    out = direct_attention(q, k, v, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # gradient path (the checkpointed kv scan) is finite
+    g = jax.grad(lambda qq: jnp.sum(
+        direct_attention(qq, k, v, kv_chunk=16) ** 2))(q)
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_cp_train_cell_smoke_on_tiny_mesh():
+    """The optimized 'cp' train-cell layout lowers on a small host mesh
+    (regression guard for the sharding-hint plumbing)."""
+    import subprocess
+    import sys
+    import textwrap
+    env = dict(os.environ) if "os" in dir() else None
+    import os as _os
+    env = dict(_os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _os.path.join(_os.path.dirname(__file__), "..",
+                                      "src")
+    code = """
+    import jax
+    from repro.configs.registry import get_arch
+    from repro.launch.cells import build_lm_train
+    from repro.configs.registry import ShapeCell
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = get_arch("qwen3-1.7b")
+    import dataclasses
+    spec = dataclasses.replace(spec, config=dataclasses.replace(
+        spec.smoke, n_layers=2))
+    cell = ShapeCell("t", "train", dict(seq=32, batch=4))
+    plan = build_lm_train(spec, cell, mesh)
+    assert plan.meta["mode"] == "cp", plan.meta
+    with mesh:
+        jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                donate_argnums=plan.donate_argnums).lower(
+                    *plan.args).compile()
+    print("cp lower ok")
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "cp lower ok" in out.stdout
