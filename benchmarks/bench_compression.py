@@ -17,8 +17,8 @@ _CODE = """
 import json
 import numpy as np, jax, jax.numpy as jnp
 from repro.train.steps import make_dp_train_step
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("data",))
 
 def loss_fn(params, batch):
     pred = batch["x"] @ params["w"]

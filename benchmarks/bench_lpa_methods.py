@@ -3,14 +3,20 @@ exact (ν-LPA analogue) vs νMG8 vs νBM across the four graph families.
 
 CPU wall-clock measures the XLA-CPU lowering of the same programs that
 target TPU; the memory columns are the real story being reproduced
-(exact = O(|E|) vs sketch = O(k|V|) / O(|V|)).
+(exact = O(|E|) vs sketch = O(k|V|) / O(|V|)). For the MG method the rows
+additionally report the fold-engine dispatch economics: kernel dispatches
+per iteration (per-bucket ``pallas`` = one per width bucket per round,
+``pallas_fused`` = one per round, the last fused with move selection) and
+the entry volume each engine moves through HBM (bucketed = padded [R, D]
+tiles via ``plan_padded_entries``; fused = the real entries only, pad
+lanes are generated in-register).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (lpa_working_set_bytes, measured_step_temp_bytes,
-                               suite)
+from benchmarks.common import (fold_engine_stats, lpa_working_set_bytes,
+                               measured_step_temp_bytes, suite)
 from repro.core.lpa import LPAConfig, lpa
 from repro.core.modularity import modularity
 
@@ -33,7 +39,7 @@ def run(scale: str = "small"):
             temp = measured_step_temp_bytes(g, cfg)
             if method == "exact":
                 base = dt
-            rows.append({
+            row = {
                 "bench": "fig7_methods", "graph": gname, "method": method,
                 "n_nodes": g.n_nodes, "n_edges": g.n_edges,
                 "runtime_s": round(dt, 3),
@@ -44,5 +50,8 @@ def run(scale: str = "small"):
                 "xla_temp_bytes": int(temp),
                 "bytes_per_edge": round(ws["algo_bytes"] / max(g.n_edges, 1),
                                         2),
-            })
+            }
+            if method == "mg":
+                row.update(fold_engine_stats(g, cfg))
+            rows.append(row)
     return rows

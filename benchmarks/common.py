@@ -77,6 +77,41 @@ def fold_work_volume(graph: CSRGraph, config: LPAConfig) -> int:
     return plan_padded_entries(ws.plan)
 
 
+def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
+    """Static dispatch/traffic accounting of the MG fold engines.
+
+    Dispatch counts and entry volumes are properties of the (static) fold
+    plans, so they are exact without timing kernels:
+
+      dispatches_per_iter_pallas : one pallas_call per width bucket per
+        round — the ``O(rounds x buckets)`` the fused engine removes.
+      dispatches_per_iter_fused  : one per round; the final dispatch also
+        performs move selection, so a full MG iteration is <= n_rounds + 1
+        device computations (folds + the [N] label scatter).
+      padded_entries      : entry slots the bucketed engines materialize as
+        HBM [R, D] tiles (pad lanes included) — plan_padded_entries.
+      fused_hbm_entries   : entries the fused engine actually reads (pad
+        lanes are masked in-register from (start, count) metadata).
+    """
+    import numpy as np
+    from repro.core.fold_engine import get_engine
+    from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
+                                  fused_hbm_entries)
+    degrees = np.asarray(graph.degrees)
+    plan = build_fold_plan(degrees, k=config.k, chunk=config.chunk)
+    fused_plan = build_fused_fold_plan(degrees, k=config.k,
+                                       chunk=config.chunk)
+    return {
+        "fold_rounds": plan.n_rounds,
+        "dispatches_per_iter_pallas":
+            get_engine("pallas").dispatches_per_iter(plan, None),
+        "dispatches_per_iter_fused":
+            get_engine("pallas_fused").dispatches_per_iter(plan, fused_plan),
+        "padded_entries": plan_padded_entries(plan),
+        "fused_hbm_entries": fused_hbm_entries(fused_plan),
+    }
+
+
 def suite(scale: str = "small"):
     from repro.graphs.generators import paper_suite
     return paper_suite(scale)

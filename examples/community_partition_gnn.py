@@ -19,6 +19,7 @@ from repro.data.synthetic import gnn_full_batch  # noqa: E402
 from repro.graphs.generators import powerlaw_communities  # noqa: E402
 from repro.graphs.partition import (contiguous_parts, edge_cut_fraction,  # noqa: E402
                                     lpa_partition)
+from repro.launch.mesh import make_mesh  # noqa: E402
 
 P_SHARDS = 8
 graph, _ = powerlaw_communities(8192, p_in=0.5, mix=0.02, seed=1)
@@ -32,8 +33,7 @@ print(f"edge cut: contiguous {cut_naive:.1%} -> LPA-partitioned "
       f"{part.edge_cut:.1%} ({part.n_communities} communities)")
 
 # 2. distributed LPA with halo label exchange on the partitioned layout
-mesh = jax.make_mesh((P_SHARDS,), ("shard",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((P_SHARDS,), ("shard",))
 ws_full = build_dist_workspace(graph, P_SHARDS, order=part.order)
 ws_halo = build_dist_workspace(graph, P_SHARDS, order=part.order, halo=True)
 labels_full, _ = dist_lpa(mesh, ws_full, rho=2)

@@ -1,0 +1,25 @@
+"""Version-adaptive JAX shims.
+
+The repo targets current JAX but must run on older installs (e.g. 0.4.x on
+the CPU CI image). Two surfaces moved between versions:
+
+  * ``jax.shard_map`` was ``jax.experimental.shard_map.shard_map`` and its
+    ``check_vma`` flag was called ``check_rep``;
+  * ``jax.make_mesh``'s ``axis_types`` kwarg (see repro.launch.mesh).
+
+Keep every version branch here so the rest of the code base reads as
+current-JAX.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

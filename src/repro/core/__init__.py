@@ -4,10 +4,12 @@ the exact O(|E|) baseline, Pick-Less symmetry breaking, and modularity/NMI
 quality metrics."""
 from repro.core.lpa import (LPAConfig, LPAResult, LPAWorkspace,
                             build_workspace, lpa, lpa_move, lpa_step_fn)
+from repro.core.fold_engine import FoldEngine, get_engine
 from repro.core.modularity import modularity, nmi
 from repro.core import sketch, exact
 
 __all__ = [
     "LPAConfig", "LPAResult", "LPAWorkspace", "build_workspace", "lpa",
-    "lpa_move", "lpa_step_fn", "modularity", "nmi", "sketch", "exact",
+    "lpa_move", "lpa_step_fn", "FoldEngine", "get_engine", "modularity",
+    "nmi", "sketch", "exact",
 ]

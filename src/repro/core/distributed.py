@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import sketch as sketch_lib
+from repro.compat import shard_map
 
 PAD = -1
 INT_MAX = jnp.iinfo(jnp.int32).max
@@ -64,18 +65,27 @@ class DistLPAWorkspace:
     h_pad: int = 0
     hub_idx: jnp.ndarray | None = None   # [P, HUB_pad] local slots of hubs
     hub_pad: int = 0
+    # fused-engine metadata (same (start, count) range encoding as
+    # repro.graphs.csr.build_fused_fold_plan; rows in the gather row order):
+    fused_starts: Tuple[jnp.ndarray, ...] | None = None  # per round [P, S_r, tile_r]
+    fused_counts: Tuple[jnp.ndarray, ...] | None = None  # per round [P, S_r, tile_r]
+    fused_dmax: Tuple[jnp.ndarray, ...] | None = None    # per round [P, S_r, 1]
+    fused_entries: Tuple[int, ...] = ()  # per round: flat entry-array length
 
     def tree_flatten(self):
         children = (self.nbr_pos, self.weights, self.round_gathers,
                     self.final_row_vertex, self.init_labels, self.send_idx,
-                    self.hub_idx)
+                    self.hub_idx, self.fused_starts, self.fused_counts,
+                    self.fused_dmax)
         return children, (self.n_nodes, self.v_pad, self.k, self.chunk,
-                          self.h_pad, self.hub_pad)
+                          self.h_pad, self.hub_pad, self.fused_entries)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children[:5], *aux[:4], send_idx=children[5],
-                   h_pad=aux[4], hub_idx=children[6], hub_pad=aux[5])
+                   h_pad=aux[4], hub_idx=children[6], hub_pad=aux[5],
+                   fused_starts=children[7], fused_counts=children[8],
+                   fused_dmax=children[9], fused_entries=aux[6])
 
     @property
     def n_shards(self) -> int:
@@ -92,12 +102,15 @@ def _edge_balanced_ranges(degrees: np.ndarray, p: int) -> np.ndarray:
 
 def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
                          order: np.ndarray | None = None,
-                         halo: bool = False) -> DistLPAWorkspace:
+                         halo: bool = False, fused: bool = False,
+                         tile_r: int = 128) -> DistLPAWorkspace:
     """Host-side construction of the stacked distributed workspace.
 
     ``order`` optionally renumbers vertices first (e.g. the LPA-community
     locality order from repro.graphs.partition) — new_id = order[old_id].
     ``halo=True`` builds the halo-exchange tables (see DistLPAWorkspace).
+    ``fused=True`` additionally builds the (start, count) range metadata the
+    ``pallas_fused`` engine folds from (dist_lpa_step(engine=...)).
     """
     offsets = np.asarray(graph.offsets, dtype=np.int64)
     indices = np.asarray(graph.indices, dtype=np.int64)
@@ -173,7 +186,9 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
             gather = row_start[:, None] + np.arange(chunk)[None, :]
             gather = np.where(np.arange(chunk)[None, :] < row_count[:, None],
                               gather, PAD).astype(np.int32)
-            plan_rounds.append((gather, row_vertex.astype(np.int32)))
+            plan_rounds.append((gather, row_vertex.astype(np.int32),
+                                row_start.astype(np.int64),
+                                row_count.astype(np.int64)))
             per_round_rows[p, r] = total_rows
             counts = n_chunks * k
             starts = np.zeros(hi - lo, dtype=np.int64)
@@ -186,11 +201,37 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
     for r in range(n_rounds):
         g = np.full((n_shards, int(r_pads[r]), chunk), PAD, dtype=np.int32)
         for p in range(n_shards):
-            gather, row_vertex = shard_plans[p][r]
+            gather, row_vertex = shard_plans[p][r][:2]
             g[p, :len(gather)] = gather
             if r == n_rounds - 1:
                 final_row_vertex[p, :len(row_vertex)] = row_vertex
         round_gathers.append(jnp.asarray(g))
+
+    fused_starts = fused_counts = fused_dmax = None
+    fused_entries: tuple = ()
+    if fused:
+        fused_starts, fused_counts, fused_dmax, entries = [], [], [], []
+        n_entries = m_pad
+        for r in range(n_rounds):
+            rows = int(r_pads[r])
+            n_steps = -(-rows // tile_r)
+            rs = np.zeros((n_shards, n_steps * tile_r), np.int32)
+            rc = np.zeros((n_shards, n_steps * tile_r), np.int32)
+            for p in range(n_shards):
+                _, _, row_start, row_count = shard_plans[p][r]
+                rs[p, :len(row_start)] = row_start
+                rc[p, :len(row_count)] = row_count
+            rs = rs.reshape(n_shards, n_steps, tile_r)
+            rc = rc.reshape(n_shards, n_steps, tile_r)
+            fused_starts.append(jnp.asarray(rs))
+            fused_counts.append(jnp.asarray(rc))
+            fused_dmax.append(jnp.asarray(rc.max(axis=2, keepdims=True)))
+            entries.append(n_entries)
+            n_entries = n_steps * tile_r * k  # next round's flat source
+        fused_starts = tuple(fused_starts)
+        fused_counts = tuple(fused_counts)
+        fused_dmax = tuple(fused_dmax)
+        fused_entries = tuple(entries)
 
     send_idx = hub_idx_arr = None
     h_pad = hub_pad = 0
@@ -266,15 +307,20 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         send_idx=None if send_idx is None else jnp.asarray(send_idx),
         h_pad=int(h_pad),
         hub_idx=None if hub_idx_arr is None else jnp.asarray(hub_idx_arr),
-        hub_pad=int(hub_pad))
+        hub_pad=int(hub_pad),
+        fused_starts=fused_starts, fused_counts=fused_counts,
+        fused_dmax=fused_dmax, fused_entries=fused_entries)
 
 
 def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed, *, k, v_pad, axis_names, fold_tile,
-                send_idx=None, hub_idx=None):
+                send_idx=None, hub_idx=None, fused_meta=None,
+                fused_entries=(), chunk=0):
     """Per-shard body of one distributed LPA iteration (runs inside shard_map).
 
     Shapes here are the *local* block shapes (leading P axis stripped).
+    ``fused_meta`` (per round (starts, counts, dmax) blocks) switches the
+    fold to the fused single-dispatch kernel — engine="pallas_fused".
     """
     nbr_pos = nbr_pos[0]          # [M_pad]
     edge_w = edge_w[0]
@@ -302,10 +348,28 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     entry_labels = jnp.where(nbr_pos >= 0, label_table[safe], -1)
     entry_weights = jnp.where(nbr_pos >= 0, edge_w, 0.0)
 
-    for r, gather in enumerate(round_gathers):
-        gl, gw = sketch_lib._gather_entries(gather, entry_labels, entry_weights)
-        s_k, s_v = fold_tile(gl, gw, k)
-        entry_labels, entry_weights = s_k.reshape(-1), s_v.reshape(-1)
+    if fused_meta is not None:
+        # fused engine: one dispatch per round, gather inside the kernel
+        from repro.graphs.csr import FusedRound
+        from repro.kernels.mg_sketch.fused import (_interpret_default,
+                                                   fused_fold_round)
+        interpret = _interpret_default()
+        for r, (rs, rc, dm) in enumerate(fused_meta):
+            rnd = FusedRound(row_start=rs[0], row_count=rc[0],
+                             step_dmax=dm[0], n_rows=0,
+                             n_entries_in=fused_entries[r])
+            s_k, s_v = fused_fold_round(rnd, entry_labels, entry_weights,
+                                        k=k, chunk=chunk,
+                                        interpret=interpret)
+            entry_labels, entry_weights = s_k.reshape(-1), s_v.reshape(-1)
+        s_k = s_k[:final_row_vertex.shape[0]]  # drop tile-padding rows
+        s_v = s_v[:final_row_vertex.shape[0]]
+    else:
+        for r, gather in enumerate(round_gathers):
+            gl, gw = sketch_lib._gather_entries(gather, entry_labels,
+                                                entry_weights)
+            s_k, s_v = fold_tile(gl, gw, k)
+            entry_labels, entry_weights = s_k.reshape(-1), s_v.reshape(-1)
 
     # scatter final sketches to local vertices (+1 dump slot for pad rows)
     dump = v_pad
@@ -324,37 +388,57 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
 
 
 def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
-                  fold_tile=None):
+                  fold_tile=None, engine: str | None = None):
     """Build the shard_map'd single-iteration function for ``mesh``.
 
     Returns step(ws_arrays..., labels [P, V_pad], pick_less, seed) ->
     (labels, delta_n). The caller jits it (dryrun lowers it).
+
+    ``engine`` selects the fold backend uniformly with the single-host
+    driver ("jnp" | "pallas" | "pallas_fused" — see repro.core.fold_engine);
+    "pallas_fused" needs a workspace built with ``fused=True``. An explicit
+    ``fold_tile`` overrides the engine's tile fold.
     """
     axis_names = tuple(mesh.axis_names) if axis_names is None else axis_names
+    fused = engine == "pallas_fused"
+    if engine is not None and not fused and fold_tile is None:
+        from repro.core.fold_engine import get_engine
+        fold_tile = get_engine(engine).mg_fold_tile
     fold_tile = fold_tile or sketch_lib.mg_fold_tile
+    if fused and ws.fused_starts is None:
+        raise ValueError("engine='pallas_fused' requires "
+                         "build_dist_workspace(..., fused=True)")
     spec = P(axis_names)
     n_rounds = len(ws.round_gathers)
     halo = ws.send_idx is not None
 
     def step(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
              pick_less, seed, send_idx=None, hub_idx=None):
-        body = partial(_shard_move, k=ws.k, v_pad=ws.v_pad,
-                       axis_names=axis_names, fold_tile=fold_tile)
         in_specs = [spec, spec, tuple([spec] * n_rounds), spec, spec,
                     P(), P()]
         args = [nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed]
+        kw = dict(k=ws.k, v_pad=ws.v_pad, axis_names=axis_names,
+                  fold_tile=fold_tile)
+        if fused:
+            kw.update(fused_entries=ws.fused_entries, chunk=ws.chunk)
+        extra_names = []
         if send_idx is not None:
             in_specs += [spec, spec]
             args += [send_idx, hub_idx]
+            extra_names += ["send_idx", "hub_idx"]
+        if fused:
+            meta = tuple(zip(ws.fused_starts, ws.fused_counts,
+                             ws.fused_dmax))
+            in_specs += [tuple([(spec, spec, spec)] * n_rounds)]
+            args += [meta]
+            extra_names += ["fused_meta"]
 
-            def body(*a):  # noqa: F811 — halo-threading wrapper
-                *rest, sidx, hidx = a
-                return _shard_move(*rest, k=ws.k, v_pad=ws.v_pad,
-                                   axis_names=axis_names,
-                                   fold_tile=fold_tile, send_idx=sidx,
-                                   hub_idx=hidx)
-        return jax.shard_map(
+        def body(*a):
+            return _shard_move(*a[:7], **dict(zip(extra_names, a[7:])),
+                               **kw)
+
+        return shard_map(
             body, mesh=mesh,
             in_specs=tuple(in_specs),
             out_specs=(spec, P()),
@@ -369,9 +453,9 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
 
 
 def dist_lpa(mesh, ws: DistLPAWorkspace, rho: int = 8, tau: float = 0.05,
-             max_iters: int = 20):
+             max_iters: int = 20, engine: str | None = None):
     """Run distributed LPA to convergence. Returns (labels [N], iterations)."""
-    step = jax.jit(dist_lpa_step(mesh, ws))
+    step = jax.jit(dist_lpa_step(mesh, ws, engine=engine))
     labels = ws.init_labels
     n = ws.n_nodes
     it = 0

@@ -1,0 +1,187 @@
+"""FoldEngine: uniform backend selection for the MG/BM sketch folds.
+
+One MG iteration = fold the neighbor entries into per-vertex k-slot
+sketches, then pick each vertex's winning label. Three interchangeable
+engines compute it:
+
+  * ``jnp``          — dense reference (repro.core.sketch); also hosts the
+                       ``exact_weighted`` MG variant (DESIGN.md §8.4).
+  * ``pallas``       — per-width-bucket Pallas tile kernels; XLA gathers a
+                       padded [R, D] tile per bucket per round (HBM
+                       round-trip), one dispatch each. Kept as the
+                       streaming reference for graphs whose round-0 entries
+                       exceed the fused engine's VMEM budget.
+  * ``pallas_fused`` — whole-round fused kernels with an in-kernel gather
+                       and the final round fused with move selection:
+                       ``n_rounds`` dispatches per iteration instead of
+                       ``O(rounds x buckets)`` (kernels.mg_sketch.fused).
+
+``repro.core.lpa``, ``repro.core.distributed`` and the benchmarks all
+resolve engines through :func:`get_engine`, so backend choice is a config
+string everywhere. All engines are bit-identical on the paper's MG rule
+(validated in tests/test_fused_engine.py and tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import sketch as sketch_lib
+from repro.graphs.csr import (FoldPlan, FusedFoldPlan, fused_dispatches,
+                              plan_dispatches)
+
+
+class FoldEngine:
+    """Backend-neutral interface; subclasses wire the actual kernels."""
+
+    name: str = "base"
+    #: does mg_select consume the FusedFoldPlan (vs the bucketed FoldPlan)?
+    uses_fused_plan: bool = False
+
+    # -- tile-level folds (the distributed path and run_bm_plan plug in
+    #    here; signatures match repro.core.sketch.{mg,bm}_fold_tile) -------
+    def mg_fold_tile(self, labels, weights, k):
+        raise NotImplementedError
+
+    def bm_fold_tile(self, labels, weights, init_label=None):
+        raise NotImplementedError
+
+    # -- plan-level MG iteration ------------------------------------------
+    def mg_candidates(self, plan: FoldPlan,
+                      fused_plan: Optional[FusedFoldPlan],
+                      entry_labels, entry_weights
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Per-vertex candidate sets ([N, k] labels, [N, k] weights)."""
+        raise NotImplementedError
+
+    def mg_select(self, plan: FoldPlan, fused_plan: Optional[FusedFoldPlan],
+                  entry_labels, entry_weights, labels, seed) -> jnp.ndarray:
+        """Full iteration: fold + move selection -> wanted label per vertex."""
+        raise NotImplementedError
+
+    def dispatches_per_iter(self, plan: FoldPlan,
+                            fused_plan: Optional[FusedFoldPlan]) -> int:
+        """Pallas kernel dispatches one MG iteration costs on this engine."""
+        raise NotImplementedError
+
+
+class JnpEngine(FoldEngine):
+    name = "jnp"
+
+    def __init__(self, mg_variant: str = "paper"):
+        self.mg_variant = mg_variant
+
+    def mg_fold_tile(self, labels, weights, k):
+        if self.mg_variant == "exact_weighted":
+            return sketch_lib.mg_fold_tile_exact_weighted(labels, weights, k)
+        return sketch_lib.mg_fold_tile(labels, weights, k)
+
+    def bm_fold_tile(self, labels, weights, init_label=None):
+        return sketch_lib.bm_fold_tile(labels, weights, init_label)
+
+    def mg_candidates(self, plan, fused_plan, entry_labels, entry_weights):
+        s_k, s_v = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
+                                          fold_tile=self.mg_fold_tile)
+        return sketch_lib.scatter_rows(plan, s_k, s_v)
+
+    def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
+                  labels, seed):
+        s_k, s_v = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
+                                          fold_tile=self.mg_fold_tile)
+        return sketch_lib.select_best(plan, s_k, s_v, labels, seed)
+
+    def dispatches_per_iter(self, plan, fused_plan):
+        return 0  # pure XLA — no pallas dispatches
+
+
+class PallasEngine(FoldEngine):
+    """Per-bucket tile kernels (the pre-fusion Pallas path, kept as the
+    streaming reference: entry arrays never need to be VMEM-resident)."""
+
+    name = "pallas"
+
+    def mg_fold_tile(self, labels, weights, k):
+        from repro.kernels.mg_sketch import ops as kops
+        return kops.mg_fold_tile_pallas(labels, weights, k)
+
+    def bm_fold_tile(self, labels, weights, init_label=None):
+        from repro.kernels.mg_sketch import ops as kops
+        return kops.bm_fold_tile_pallas(labels, weights, init_label)
+
+    def mg_candidates(self, plan, fused_plan, entry_labels, entry_weights):
+        s_k, s_v = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
+                                          fold_tile=self.mg_fold_tile)
+        return sketch_lib.scatter_rows(plan, s_k, s_v)
+
+    def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
+                  labels, seed):
+        s_k, s_v = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
+                                          fold_tile=self.mg_fold_tile)
+        return sketch_lib.select_best(plan, s_k, s_v, labels, seed)
+
+    def dispatches_per_iter(self, plan, fused_plan):
+        return plan_dispatches(plan)  # one per bucket per round
+
+
+class PallasFusedEngine(FoldEngine):
+    """Whole-round fused kernels — see kernels.mg_sketch.fused."""
+
+    name = "pallas_fused"
+    uses_fused_plan = True
+
+    def mg_fold_tile(self, labels, weights, k):
+        # tile-level callers (BM merge path) share the per-bucket kernel;
+        # fusion applies to the plan-level MG walk below.
+        from repro.kernels.mg_sketch import ops as kops
+        return kops.mg_fold_tile_pallas(labels, weights, k)
+
+    def bm_fold_tile(self, labels, weights, init_label=None):
+        from repro.kernels.mg_sketch import ops as kops
+        return kops.bm_fold_tile_pallas(labels, weights, init_label)
+
+    def mg_candidates(self, plan, fused_plan, entry_labels, entry_weights):
+        from repro.kernels.mg_sketch.fused import run_mg_plan_fused
+        if fused_plan is None:
+            raise ValueError("pallas_fused engine needs a FusedFoldPlan "
+                             "(build_workspace constructs one when "
+                             "fold_backend='pallas_fused')")
+        s_k, s_v = run_mg_plan_fused(fused_plan, entry_labels, entry_weights)
+        n, k = fused_plan.n_nodes, fused_plan.k
+        rtv = fused_plan.row_to_vertex
+        safe = jnp.where(rtv >= 0, rtv, n)  # pad rows -> dump slot
+        cand_c = jnp.full((n + 1, k), -1, jnp.int32).at[safe].set(s_k)[:n]
+        cand_w = jnp.zeros((n + 1, k), jnp.float32).at[safe].set(s_v)[:n]
+        return cand_c, cand_w
+
+    def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
+                  labels, seed):
+        from repro.kernels.mg_sketch.fused import select_best_fused
+        if fused_plan is None:
+            raise ValueError("pallas_fused engine needs a FusedFoldPlan "
+                             "(build_workspace constructs one when "
+                             "fold_backend='pallas_fused')")
+        return select_best_fused(fused_plan, entry_labels, entry_weights,
+                                 labels, seed)
+
+    def dispatches_per_iter(self, plan, fused_plan):
+        return fused_dispatches(fused_plan)  # n_rounds (last one selects)
+
+
+ENGINES = ("jnp", "pallas", "pallas_fused")
+
+
+def get_engine(name: str, mg_variant: str = "paper") -> FoldEngine:
+    """Resolve a fold backend by config name.
+
+    ``mg_variant='exact_weighted'`` is implemented on the jnp engine only;
+    the Pallas engines always compute the paper's Alg. 2 rule.
+    """
+    if name == "jnp":
+        return JnpEngine(mg_variant=mg_variant)
+    if name == "pallas":
+        return PallasEngine()
+    if name == "pallas_fused":
+        return PallasFusedEngine()
+    raise ValueError(f"unknown fold backend {name!r}; expected one of "
+                     f"{ENGINES}")

@@ -12,11 +12,19 @@ iteration 0 (a vertex may only adopt a *smaller* label while PL is active);
 convergence when the changed fraction drops below ``tau`` in a non-PL
 iteration; hard cap ``max_iters``.
 
+The MG fold backend is a config string resolved through
+``repro.core.fold_engine`` ("jnp" | "pallas" | "pallas_fused" — the fused
+engine runs one kernel dispatch per fold round, the last fused with move
+selection; DESIGN.md §9).
+
 Deviation from the paper (documented in DESIGN.md §8): iterations are
-synchronous (pure-functional JAX) rather than asynchronous in-place, and the
-dense vector pipeline recomputes every vertex rather than gating on the
-unprocessed-frontier — the frontier is still tracked for convergence
-accounting and diagnostics.
+synchronous (pure-functional JAX) rather than asynchronous in-place. The
+unprocessed-frontier of paper Alg. 1 l. 31 is tracked every iteration
+(``LPAResult.frontier_history`` diagnostics) and — with the opt-in
+``frontier_gate`` config, after Traag & Šubelj's fast label propagation —
+gates the move step so settled vertices (no changed neighbor) keep their
+label; the dense pipeline still computes every fold row, so the gate buys
+convergence behavior and diagnostics, not FLOPs (DESIGN.md §8.5).
 """
 from __future__ import annotations
 
@@ -29,7 +37,9 @@ import jax.numpy as jnp
 
 from repro.core import sketch as sketch_lib
 from repro.core.exact import exact_choose
-from repro.graphs.csr import CSRGraph, FoldPlan, build_fold_plan
+from repro.core.fold_engine import get_engine
+from repro.graphs.csr import (CSRGraph, FoldPlan, FusedFoldPlan,
+                              build_fold_plan, build_fused_fold_plan)
 
 Method = Literal["exact", "mg", "bm"]
 
@@ -43,21 +53,31 @@ class LPAConfig:
     tau: float = 0.05          # convergence tolerance (paper: 0.05)
     max_iters: int = 20        # paper: 20
     rescan: bool = False       # double-scan mode (paper Fig. 5 ablation)
-    fold_backend: str = "jnp"  # "jnp" | "pallas"
+    fold_backend: str = "jnp"  # "jnp" | "pallas" | "pallas_fused"
     mg_variant: str = "paper"  # "paper" | "exact_weighted" (DESIGN.md §8.4)
+    frontier_gate: bool = False  # Traag & Šubelj frontier gating (opt-in)
+    # frontier_history diagnostics cost one O(|E|) segment_max per
+    # iteration; disable for pure-throughput runs (implied on when gating)
+    track_frontier: bool = True
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LPAWorkspace:
-    """Graph + static fold plan + CSR-expanded edge sources."""
+    """Graph + static fold plan(s) + CSR-expanded edge sources.
+
+    ``fused_plan`` is only built when the config selects the fused backend
+    (the bucketed ``plan`` is always present — BM folds and the rescan
+    ablation consume it on every backend).
+    """
 
     graph: CSRGraph
     plan: FoldPlan
     edge_src: jnp.ndarray  # [M] int32
+    fused_plan: Optional[FusedFoldPlan] = None
 
     def tree_flatten(self):
-        return (self.graph, self.plan, self.edge_src), ()
+        return (self.graph, self.plan, self.edge_src, self.fused_plan), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -66,23 +86,19 @@ class LPAWorkspace:
 
 def build_workspace(graph: CSRGraph, config: LPAConfig) -> LPAWorkspace:
     import numpy as np
-    plan = build_fold_plan(np.asarray(graph.degrees), k=config.k,
-                           chunk=config.chunk)
-    return LPAWorkspace(graph=graph, plan=plan, edge_src=graph.sources())
-
-
-def _fold_tiles(config: LPAConfig):
-    """Resolve tile-fold implementations for the chosen backend."""
-    if config.fold_backend == "pallas":
-        from repro.kernels.mg_sketch import ops as kops
-        return kops.mg_fold_tile_pallas, kops.bm_fold_tile_pallas
-    if config.mg_variant == "exact_weighted":
-        return sketch_lib.mg_fold_tile_exact_weighted, sketch_lib.bm_fold_tile
-    return sketch_lib.mg_fold_tile, sketch_lib.bm_fold_tile
+    degrees = np.asarray(graph.degrees)
+    plan = build_fold_plan(degrees, k=config.k, chunk=config.chunk)
+    fused_plan = None
+    if config.fold_backend == "pallas_fused":
+        fused_plan = build_fused_fold_plan(degrees, k=config.k,
+                                           chunk=config.chunk)
+    return LPAWorkspace(graph=graph, plan=plan, edge_src=graph.sources(),
+                        fused_plan=fused_plan)
 
 
 def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
-             seed: jnp.ndarray, config: LPAConfig
+             seed: jnp.ndarray, config: LPAConfig,
+             frontier: Optional[jnp.ndarray] = None
              ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One LPA iteration: returns (new_labels, changed_mask).
 
@@ -90,38 +106,52 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     across PL-on/off iterations; ``seed`` varies per iteration and drives
     the hash tie-breaking (DESIGN.md §8 — the synchronous stand-in for the
     async/hashtable-order tie randomness of the GPU implementation).
+    ``frontier`` (optional bool [N]) gates moves to unprocessed vertices
+    (config.frontier_gate).
     """
     graph, plan = ws.graph, ws.plan
     nbr_labels = labels[graph.indices]
-    mg_tile, bm_tile = _fold_tiles(config)
+    engine = get_engine(config.fold_backend, mg_variant=config.mg_variant)
 
     if config.method == "exact":
         want = exact_choose(ws.edge_src, nbr_labels, graph.weights,
                             graph.n_nodes, labels, seed)
     elif config.method == "mg":
-        s_k, s_v = sketch_lib.run_mg_plan(plan, nbr_labels, graph.weights,
-                                          fold_tile=mg_tile)
         if config.rescan:
+            # double-scan ablation re-reads the neighborhood through the
+            # round-0 buckets, so it walks the bucketed plan on every
+            # backend (with the engine's tile fold).
+            s_k, _ = sketch_lib.run_mg_plan(plan, nbr_labels, graph.weights,
+                                            fold_tile=engine.mg_fold_tile)
             want = sketch_lib.rescan_candidates(plan, s_k, nbr_labels,
                                                 graph.weights, labels, seed)
         else:
-            want = sketch_lib.select_best(plan, s_k, s_v, labels, seed)
+            want = engine.mg_select(plan, ws.fused_plan, nbr_labels,
+                                    graph.weights, labels, seed)
     elif config.method == "bm":
         # incumbency is built into the fold's initial carry (Alg. 3 l. 13)
         best, _ = sketch_lib.run_bm_plan(plan, nbr_labels, graph.weights,
-                                         labels, fold_tile=bm_tile)
+                                         labels,
+                                         fold_tile=engine.bm_fold_tile)
         want = jnp.where(best >= 0, best, labels)
     else:
         raise ValueError(f"unknown method {config.method!r}")
 
     allowed = jnp.where(pick_less, want < labels, want != labels)
+    if frontier is not None:
+        allowed = allowed & frontier
     new_labels = jnp.where(allowed, want, labels)
     changed = new_labels != labels
     return new_labels, changed
 
 
 def mark_frontier(ws: LPAWorkspace, changed: jnp.ndarray) -> jnp.ndarray:
-    """Mark neighbors of changed vertices as unprocessed (paper Alg. 1 l. 31)."""
+    """Mark neighbors of changed vertices as unprocessed (paper Alg. 1 l. 31).
+
+    This is the synchronous analogue of Traag & Šubelj's FLPA queue: after
+    an iteration, exactly the neighbors of vertices that changed label are
+    'in the queue' for the next one.
+    """
     n = ws.graph.n_nodes
     src_changed = changed[ws.edge_src].astype(jnp.int32)
     marked = jax.ops.segment_max(src_changed, ws.graph.indices, num_segments=n)
@@ -134,6 +164,9 @@ class LPAResult:
     iterations: int
     changed_history: list
     converged: bool
+    #: unprocessed-frontier fraction entering each iteration (diagnostics;
+    #: the gate only acts on it when config.frontier_gate is set)
+    frontier_history: list = dataclasses.field(default_factory=list)
 
 
 def lpa(graph: CSRGraph, config: LPAConfig = LPAConfig(),
@@ -141,27 +174,43 @@ def lpa(graph: CSRGraph, config: LPAConfig = LPAConfig(),
     """Run LPA to convergence (host loop; jitted move step)."""
     ws = ws if ws is not None else build_workspace(graph, config)
     move = lpa_move
+    frontier_fn = mark_frontier
     if jit:
         move = jax.jit(functools.partial(lpa_move, config=config))
+        frontier_fn = jax.jit(mark_frontier)
     n = graph.n_nodes
     labels = jnp.arange(n, dtype=jnp.int32)
+    frontier = jnp.ones((n,), dtype=jnp.bool_)  # every vertex starts queued
+    track = config.frontier_gate or config.track_frontier
     history = []
+    frontier_history = []
     converged = False
     it = 0
     for it in range(config.max_iters):
         pl = (it % config.rho) == 0
         seed = jnp.int32(it + 1)
+        gate = frontier if config.frontier_gate else None
         if jit:
-            labels, changed = move(ws, labels, jnp.asarray(pl), seed)
+            labels, changed = move(ws, labels, jnp.asarray(pl), seed,
+                                   frontier=gate)
         else:
-            labels, changed = lpa_move(ws, labels, jnp.asarray(pl), seed, config)
+            labels, changed = lpa_move(ws, labels, jnp.asarray(pl), seed,
+                                       config, frontier=gate)
+        if track:
+            frontier_history.append(float(jnp.mean(frontier)))
+            marked = frontier_fn(ws, changed)
+            # A Pick-Less round blocks legal moves (want > label), so its
+            # unchanged vertices are deferred, not settled — keep them
+            # queued instead of letting the gate freeze them (§8.5).
+            frontier = (frontier | marked) if pl else marked
         delta = int(jnp.sum(changed))
         history.append(delta)
         if not pl and delta / max(n, 1) < config.tau:
             converged = True
             break
     return LPAResult(labels=labels, iterations=it + 1,
-                     changed_history=history, converged=converged)
+                     changed_history=history, converged=converged,
+                     frontier_history=frontier_history)
 
 
 def lpa_step_fn(config: LPAConfig) -> Callable:

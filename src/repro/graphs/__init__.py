@@ -1,5 +1,7 @@
 """Graph substrate: CSR containers, generators, fold plans, samplers, partitioning."""
-from repro.graphs.csr import CSRGraph, FoldPlan, build_csr, build_fold_plan
+from repro.graphs.csr import (CSRGraph, FoldPlan, FusedFoldPlan, build_csr,
+                              build_fold_plan, build_fused_fold_plan)
 from repro.graphs import generators
 
-__all__ = ["CSRGraph", "FoldPlan", "build_csr", "build_fold_plan", "generators"]
+__all__ = ["CSRGraph", "FoldPlan", "FusedFoldPlan", "build_csr",
+           "build_fold_plan", "build_fused_fold_plan", "generators"]

@@ -242,3 +242,153 @@ def build_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
 def plan_padded_entries(plan: FoldPlan) -> int:
     """Total padded entry slots across all rounds (the fold's compute volume)."""
     return sum(b.width * b.n_rows for r in plan.rounds for b in r.buckets)
+
+
+# ---------------------------------------------------------------------------
+# Fused plan: one kernel dispatch per round (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# The bucketed FoldPlan above materializes a padded [R, D] gather tile per
+# width bucket — one pallas_call each, with the tile round-tripping HBM. The
+# fused layout exploits that every gather the plan ever produces is a
+# *masked contiguous range* (row_start + arange(width), masked by count), so
+# a round needs only two scalars per row: (start, count). The kernel
+# generates indices arithmetically and dynamic-slices entries straight from
+# the flat entry array, so the padded [R, D] tile exists only in VMEM.
+#
+# Rows are ordered vertex-major (all chunk rows of a vertex contiguous, in
+# rank order) with vertices sorted by ascending entry count. Contiguity is
+# load-bearing: round r+1 reads vertex v's round-r partial sketches as ONE
+# contiguous slice of the round-r output. The count sort is a compute
+# optimization only — it groups similar-width rows into the same tile_r
+# step so the per-step fold loop bound (step_dmax) stays near the true row
+# width instead of being dragged to `chunk` by one hub row.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FusedRound:
+    """Per-round metadata of the fused single-dispatch fold."""
+
+    row_start: jnp.ndarray  # [n_steps, tile_r] int32 — offset into the flat entries (0 on pad rows)
+    row_count: jnp.ndarray  # [n_steps, tile_r] int32 — valid entries of the row (0 on pad rows)
+    step_dmax: jnp.ndarray  # [n_steps, 1] int32 — max row_count within the step
+    n_rows: int             # real (unpadded) rows this round produces
+    n_entries_in: int       # flat entry-array length this round consumes
+
+    def tree_flatten(self):
+        return ((self.row_start, self.row_count, self.step_dmax),
+                (self.n_rows, self.n_entries_in))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_steps(self) -> int:
+        return self.row_start.shape[0]
+
+    @property
+    def tile_r(self) -> int:
+        return self.row_start.shape[1]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FusedFoldPlan:
+    """Static fused reduction plan: ~one kernel dispatch per round."""
+
+    rounds: Tuple[FusedRound, ...]
+    row_to_vertex: jnp.ndarray  # [last n_steps * tile_r] int32 — owning vertex (-1 pad)
+    n_nodes: int
+    k: int
+    chunk: int
+    tile_r: int
+
+    def tree_flatten(self):
+        return ((self.rounds, self.row_to_vertex),
+                (self.n_nodes, self.k, self.chunk, self.tile_r))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+
+def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
+                          tile_r: int = 128) -> FusedFoldPlan:
+    """Construct the fused multi-round plan from the degree sequence.
+
+    Folds the identical entry sequences as ``build_fold_plan`` (same chunking,
+    same within-row order), so per-vertex results are bit-identical; only the
+    row ordering and the dispatch structure differ.
+    """
+    degrees = np.asarray(degrees, dtype=np.int64)
+    n = len(degrees)
+    if chunk <= k:
+        raise ValueError(f"chunk ({chunk}) must exceed sketch slots k ({k})")
+
+    counts = degrees.copy()
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(degrees, out=offsets[1:])
+    starts = offsets[:-1].copy()
+    n_entries = int(degrees.sum())
+
+    rounds: List[FusedRound] = []
+    while True:
+        order = np.argsort(counts, kind="stable")  # ascending entry count
+        n_chunks = ((counts + chunk - 1) // chunk).astype(np.int64)
+        nc_ord = n_chunks[order]
+        total_rows = int(nc_ord.sum())
+        row_vertex = np.repeat(order, nc_ord)
+        row_rank = np.arange(total_rows, dtype=np.int64) - np.repeat(
+            np.cumsum(nc_ord) - nc_ord, nc_ord)
+        row_start = starts[row_vertex] + row_rank * chunk
+        row_count = np.minimum(counts[row_vertex] - row_rank * chunk, chunk)
+
+        pad = (-total_rows) % tile_r if total_rows else tile_r
+        rs = np.concatenate([row_start, np.zeros(pad, np.int64)])
+        rc = np.concatenate([row_count, np.zeros(pad, np.int64)])
+        n_steps = len(rs) // tile_r
+        rs2 = rs.reshape(n_steps, tile_r).astype(np.int32)
+        rc2 = rc.reshape(n_steps, tile_r).astype(np.int32)
+        rounds.append(FusedRound(
+            row_start=jnp.asarray(rs2), row_count=jnp.asarray(rc2),
+            step_dmax=jnp.asarray(rc2.max(axis=1, keepdims=True)),
+            n_rows=total_rows, n_entries_in=n_entries))
+        if np.all(n_chunks <= 1):
+            rtv = np.concatenate(
+                [row_vertex, np.full(pad, -1, np.int64)]).astype(np.int32)
+            break
+        # Next round consumes this round's padded output [n_steps*tile_r, k]
+        # flattened; vertex v's entries start at (v's first row) * k.
+        first_row = np.zeros(n, dtype=np.int64)
+        first_row[order] = np.cumsum(nc_ord) - nc_ord
+        starts = first_row * k
+        counts = n_chunks * k
+        n_entries = n_steps * tile_r * k
+
+    return FusedFoldPlan(rounds=tuple(rounds), row_to_vertex=jnp.asarray(rtv),
+                         n_nodes=n, k=k, chunk=chunk, tile_r=tile_r)
+
+
+def fused_hbm_entries(plan: FusedFoldPlan) -> int:
+    """Real entries the fused fold reads from HBM (padded lanes are generated
+    in-register, so — unlike ``plan_padded_entries`` — pad slots cost no
+    HBM traffic)."""
+    return int(sum(int(np.asarray(r.row_count).sum()) for r in plan.rounds))
+
+
+def fused_dispatches(plan: FusedFoldPlan) -> int:
+    """Kernel dispatches per MG iteration: one per round (the final round's
+    dispatch also performs candidate selection — see kernels.mg_sketch.fused)."""
+    return plan.n_rounds
+
+
+def plan_dispatches(plan: FoldPlan) -> int:
+    """Kernel dispatches per MG iteration of the per-bucket Pallas backend:
+    one pallas_call per width bucket per round."""
+    return sum(len(r.buckets) for r in plan.rounds)

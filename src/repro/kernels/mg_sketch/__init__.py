@@ -1,5 +1,15 @@
-"""Pallas TPU kernels for the weighted Misra-Gries / Boyer-Moore sketch folds."""
+"""Pallas TPU kernels for the weighted Misra-Gries / Boyer-Moore sketch folds.
+
+Two generations:
+  * ``ops`` / ``mg_sketch`` — per-width-bucket tile kernels (XLA gathers a
+    padded [R, D] tile per bucket, one dispatch each);
+  * ``fused`` — whole-round kernels with the gather inside the kernel and
+    the final round fused with move selection (one dispatch per round).
+"""
 from repro.kernels.mg_sketch.ops import (mg_fold_tile_pallas,
                                          bm_fold_tile_pallas)
+from repro.kernels.mg_sketch.fused import (run_mg_plan_fused,
+                                           select_best_fused)
 
-__all__ = ["mg_fold_tile_pallas", "bm_fold_tile_pallas"]
+__all__ = ["mg_fold_tile_pallas", "bm_fold_tile_pallas",
+           "run_mg_plan_fused", "select_best_fused"]

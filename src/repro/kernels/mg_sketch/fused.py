@@ -1,0 +1,295 @@
+"""Fused Pallas TPU kernels: whole-round MG sketch fold in one dispatch.
+
+The per-bucket kernel in ``mg_sketch.py`` needs XLA to materialize a padded
+[R, D] gather tile in HBM per width bucket per round — ``O(rounds x
+buckets)`` dispatches plus full gather/scatter round-trips. The fused
+kernels here exploit the structure of the fold plan (every gather is a
+masked contiguous range, see ``repro.graphs.csr.build_fused_fold_plan``):
+
+  * the *entry gather happens inside the kernel* — the flat entry arrays
+    are passed whole, and each grid step dynamic-slices the ``chunk``-wide
+    window of each of its ``tile_r`` rows straight into VMEM. The padded
+    [tile_r, chunk] tile never exists in HBM; pad lanes are masked
+    in-register from (start, count) scalars (8 bytes/row of metadata
+    instead of ``4*width`` bytes of gather indices);
+  * all width buckets of a round share ONE grid — per-step ``step_dmax``
+    bounds the fold loop, so a step of deg-2 road rows runs 2 accumulate
+    iterations, not 128, with no per-width dispatch;
+  * the final round is fused with move selection: the kernel folds the last
+    partial sketches AND picks the winning label (incumbent + per-iteration
+    hash tie-break, bit-identical to ``repro.core.sketch
+    .choose_from_candidates``), so one MG iteration costs ``n_rounds``
+    dispatches total and the [N, k] candidate scatter shrinks to an [N]
+    label scatter.
+
+VMEM budget per grid step (defaults tile_r=128, chunk=128, k=8): the
+gathered tile is 128*128*8 = 128 KiB + 8 KiB sketches — far inside a v5e
+core's ~16 MiB. The flat entry arrays are kept resident (round 0 size =
+|E| entries; ~8 bytes each), which caps a single-core fused round 0 at
+|E| ~ 1M entries — beyond that, shard the graph (repro.core.distributed)
+or fall back to the streaming per-bucket backend. Single-lane dynamic
+slices at unaligned starts are the price of the in-kernel gather; they are
+contiguous 128-wide loads, the pattern Mosaic handles without layout
+churn.
+
+Validated bit-identically against ``repro.core.sketch`` in interpret mode
+(tests/test_fused_engine.py); this container is CPU-only, TPU is the
+lowering target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.graphs.csr import FusedFoldPlan, FusedRound
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+UINT_MAX = np.uint32(0xFFFFFFFF)  # np scalar: inlines as a kernel literal
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk: int):
+    """Phase 1: in-kernel gather of [tile_r, chunk] (label, weight) tiles.
+
+    One contiguous ``chunk``-wide dynamic slice per row from the flat entry
+    arrays (VMEM-resident), then pad lanes beyond ``count`` are masked
+    in-register. The entry arrays carry ``chunk`` slack entries so the
+    full-width slice of a short final row never reads out of bounds.
+    """
+    starts = start_ref[0, :]  # [tile_r]
+    counts = count_ref[0, :]
+    tile_r = starts.shape[0]
+
+    def load_row(r, acc):
+        lab, wgt = acc
+        s = jax.lax.dynamic_slice(starts, (r,), (1,))[0]
+        row_l = elab_ref[pl.ds(s, chunk)]
+        row_w = ewgt_ref[pl.ds(s, chunk)]
+        lab = jax.lax.dynamic_update_slice(lab, row_l[None, :], (r, 0))
+        wgt = jax.lax.dynamic_update_slice(wgt, row_w[None, :], (r, 0))
+        return lab, wgt
+
+    init = (jnp.full((tile_r, chunk), -1, jnp.int32),
+            jnp.zeros((tile_r, chunk), jnp.float32))
+    lab, wgt = jax.lax.fori_loop(0, tile_r, load_row, init)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tile_r, chunk), 1)
+    valid = lane < counts[:, None]
+    return jnp.where(valid, lab, -1), jnp.where(valid, wgt, 0.0)
+
+
+def _mg_fold(labels, weights, k: int, dmax):
+    """Phase 2: lane-per-row weighted MG fold, loop bound = step's max
+    width (``dmax`` is traced — a deg-2 step runs 2 iterations, not 128).
+    Identical accumulate semantics to ``repro.core.sketch.mg_fold_tile``.
+    """
+    tile_r, _ = labels.shape
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (tile_r, k), 1)
+
+    def body(i, carry):
+        s_k, s_v = carry
+        c = jax.lax.dynamic_slice(labels, (0, i), (tile_r, 1))
+        w = jax.lax.dynamic_slice(weights, (0, i), (tile_r, 1))
+        valid = (w > 0) & (c >= 0)
+        occupied = s_v > 0
+        match = occupied & (s_k == c) & valid
+        any_match = match.any(axis=1, keepdims=True)
+        s_v = s_v + jnp.where(match, w, 0.0)
+        free = ~occupied
+        has_free = free.any(axis=1, keepdims=True)
+        first_free = jnp.min(jnp.where(free, slot_iota, k), axis=1,
+                             keepdims=True)
+        claim = (valid & ~any_match & has_free) & (slot_iota == first_free)
+        s_k = jnp.where(claim, c, s_k)
+        s_v = jnp.where(claim, w, s_v)
+        dec = valid & ~any_match & ~has_free
+        s_v = jnp.maximum(s_v - jnp.where(dec, w, 0.0), 0.0)
+        return s_k, s_v
+
+    init = (jnp.full((tile_r, k), -1, jnp.int32),
+            jnp.zeros((tile_r, k), jnp.float32))
+    return jax.lax.fori_loop(0, dmax, body, init)
+
+
+def _fused_fold_kernel(dmax_ref, start_ref, count_ref, elab_ref, ewgt_ref,
+                       out_k_ref, out_v_ref, *, k: int, chunk: int):
+    lab, wgt = _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk)
+    s_k, s_v = _mg_fold(lab, wgt, k, dmax_ref[0, 0])
+    out_k_ref[...] = s_k
+    out_v_ref[...] = s_v
+
+
+def _hash_mix(x, seed):
+    """In-kernel clone of repro.core.sketch.hash_mix (bit-identical)."""
+    h = x.astype(jnp.uint32) * jnp.uint32(2654435761)
+    h = h ^ (seed.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x85EBCA77)
+    return h ^ (h >> 13)
+
+
+def _fused_select_kernel(dmax_ref, start_ref, count_ref, inc_ref, seed_ref,
+                         elab_ref, ewgt_ref, out_c_ref, *, k: int,
+                         chunk: int):
+    """Final-round fold + move selection in one dispatch.
+
+    Folds the tile like ``_fused_fold_kernel``, then replays
+    ``select_best``'s candidate preprocessing and ``choose_from_candidates``
+    bit-for-bit over the [tile_r, k] sketch + the incumbent: max weight
+    wins, ties resolved by the per-iteration hash, then the smaller label;
+    no candidate -> keep the incumbent. The final round has at most one row
+    per vertex, so the row's choice IS the vertex's choice.
+    """
+    lab, wgt = _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk)
+    s_k, s_v = _mg_fold(lab, wgt, k, dmax_ref[0, 0])
+
+    inc = inc_ref[0, :][:, None]          # [tile_r, 1] incumbent labels
+    seed = seed_ref[0, 0]
+    cand_c = jnp.where(s_v > 0, s_k, -1)  # select_best's preprocessing
+    cur_w = jnp.max(jnp.where((cand_c == inc) & (s_v > 0), s_v, 0.0),
+                    axis=1, keepdims=True)
+    c_all = jnp.concatenate([cand_c, inc], axis=1)     # [tile_r, k+1]
+    w_all = jnp.concatenate([s_v, cur_w], axis=1)
+    valid = c_all >= 0
+    w = jnp.where(valid, w_all, -1.0)
+    w_best = jnp.max(w, axis=1, keepdims=True)
+    tied = valid & (w >= w_best)
+    h = _hash_mix(c_all, seed)
+    h = jnp.where(tied, h, UINT_MAX)
+    h_best = jnp.min(h, axis=1, keepdims=True)
+    in_hash = tied & (h <= h_best)
+    c_best = jnp.min(jnp.where(in_hash, c_all, INT_MAX), axis=1)
+    out_c_ref[...] = jnp.where(c_best == INT_MAX, inc[:, 0], c_best)[None, :]
+
+
+def _pad_entries(x: jnp.ndarray, length: int, chunk: int, fill):
+    """Pad the flat entry array to ``length + chunk`` (slack for the
+    full-width in-kernel slice of short rows near the array end)."""
+    need = length + chunk - x.shape[0]
+    if need <= 0:
+        return x
+    return jnp.concatenate([x, jnp.full((need,), fill, dtype=x.dtype)])
+
+
+def fused_fold_round(rnd: FusedRound, entry_labels: jnp.ndarray,
+                     entry_weights: jnp.ndarray, *, k: int, chunk: int,
+                     interpret: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One dispatch covering every width bucket of the round.
+
+    Returns padded ([n_steps*tile_r, k], [n_steps*tile_r, k]) sketches in
+    fused row order (pad rows fold to empty sketches).
+    """
+    n_steps, tile_r = rnd.row_start.shape
+    el = _pad_entries(entry_labels.astype(jnp.int32), rnd.n_entries_in,
+                      chunk, -1)
+    ew = _pad_entries(entry_weights.astype(jnp.float32), rnd.n_entries_in,
+                      chunk, 0.0)
+    e = el.shape[0]
+    rows = n_steps * tile_r
+    return pl.pallas_call(
+        functools.partial(_fused_fold_kernel, k=k, chunk=chunk),
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry labels
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry weights
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+            jax.ShapeDtypeStruct((rows, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count, el, ew)
+
+
+def fused_select_round(rnd: FusedRound, entry_labels: jnp.ndarray,
+                       entry_weights: jnp.ndarray, incumbents: jnp.ndarray,
+                       seed: jnp.ndarray, *, k: int, chunk: int,
+                       interpret: bool) -> jnp.ndarray:
+    """Final-round dispatch: fold + per-row winning label [n_steps*tile_r]."""
+    n_steps, tile_r = rnd.row_start.shape
+    el = _pad_entries(entry_labels.astype(jnp.int32), rnd.n_entries_in,
+                      chunk, -1)
+    ew = _pad_entries(entry_weights.astype(jnp.float32), rnd.n_entries_in,
+                      chunk, 0.0)
+    e = el.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_fused_select_kernel, k=k, chunk=chunk),
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # incumbents
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),        # seed
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry labels
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry weights
+        ],
+        out_specs=pl.BlockSpec((1, tile_r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_steps, tile_r), jnp.int32),
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count,
+      incumbents.reshape(n_steps, tile_r),
+      seed.astype(jnp.int32).reshape(1, 1), el, ew)
+    return out.reshape(-1)
+
+
+def run_mg_plan_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
+                      entry_weights: jnp.ndarray,
+                      interpret: bool | None = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All fold rounds, one dispatch each. Returns the final-round padded
+    sketches in fused row order (map to vertices via plan.row_to_vertex)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    labels, weights = entry_labels, entry_weights
+    for rnd in plan.rounds:
+        s_k, s_v = fused_fold_round(rnd, labels, weights, k=plan.k,
+                                    chunk=plan.chunk, interpret=interpret)
+        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    return s_k, s_v
+
+
+def select_best_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
+                      entry_weights: jnp.ndarray, labels: jnp.ndarray,
+                      seed: jnp.ndarray, interpret: bool | None = None
+                      ) -> jnp.ndarray:
+    """Full fused MG iteration: ``n_rounds`` dispatches, the last one fused
+    with move selection. Bit-identical to ``run_mg_plan`` + ``select_best``
+    on the reference backend."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if plan.n_nodes == 0:
+        return labels
+    el, ew = entry_labels, entry_weights
+    for rnd in plan.rounds[:-1]:
+        s_k, s_v = fused_fold_round(rnd, el, ew, k=plan.k, chunk=plan.chunk,
+                                    interpret=interpret)
+        el, ew = s_k.reshape(-1), s_v.reshape(-1)
+    n = plan.n_nodes
+    rtv = plan.row_to_vertex
+    real = rtv >= 0
+    incumbents = jnp.where(real, labels[jnp.maximum(rtv, 0)], -1)
+    choice = fused_select_round(plan.rounds[-1], el, ew, incumbents, seed,
+                                k=plan.k, chunk=plan.chunk,
+                                interpret=interpret)
+    # [N] scatter of per-row winners (pad rows land in the dump slot);
+    # vertices with no fold rows (degree 0) keep their label — identical to
+    # choose_from_candidates with an empty candidate set.
+    buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
+    buf = buf.at[jnp.where(real, rtv, n)].set(
+        jnp.where(real, choice, -1))
+    return buf[:n]

@@ -5,13 +5,28 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes, *, axis_types=None):
+    """Version-adaptive ``jax.make_mesh``.
+
+    ``jax.sharding.AxisType`` (and the matching ``axis_types`` kwarg) only
+    exist on newer JAX releases; on older installs (e.g. 0.4.x) every axis
+    is implicitly Auto, which is the only type we ever request. All mesh
+    construction in this repo goes through here so tests / benchmarks /
+    examples run on both.
+    """
+    if not hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes)
+    if axis_types is None:
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2x16x16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def batch_axes(mesh):

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import dense_init
+from repro.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,7 +166,7 @@ def moe_ffn(params, x: jnp.ndarray, cfg: MoEConfig) -> jnp.ndarray:
 
         espec = P(ep, None, dfs_ if len(dfs_) > 1 else dfs_[0])
         dspec = P(ep, dfs_ if len(dfs_) > 1 else dfs_[0], None)
-        y = jax.shard_map(
+        y = shard_map(
             body, mesh=mesh_,
             in_specs=(P(ba if len(ba) != 1 else ba[0], ep, None, None, None),
                       espec, espec, dspec),

@@ -1,0 +1,120 @@
+"""Property-testing shim: hypothesis when installed, seeded sweep otherwise.
+
+Tier-1 must collect and run offline (the CI container has no hypothesis).
+When hypothesis is importable this module re-exports the real ``given`` /
+``settings`` / ``strategies``; otherwise it provides a minimal drop-in that
+degrades ``@given(...)`` to a deterministic sweep of seeded random examples
+(one pseudo-random draw per example from ``np.random.default_rng``), honoring
+``@settings(max_examples=...)``. Only the strategy surface this test suite
+uses is implemented: integers, floats, sampled_from, lists, tuples.
+
+Usage in tests (instead of ``from hypothesis import ...``)::
+
+    from _propcheck import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A strategy is just a draw(rng) -> value callable."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, allow_nan=False,
+                   allow_infinity=False):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(lambda rng: float(lo + (hi - lo) * rng.random()))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    st = _Strategies()
+
+    _DEFAULT_MAX_EXAMPLES = 50
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        """Records max_examples on the (already @given-wrapped) function."""
+
+        def deco(fn):
+            fn._propcheck_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        """Seeded-example sweep standing in for hypothesis's @given.
+
+        Draws ``max_examples`` example dicts from a per-test deterministic
+        rng (seeded by the test name) and calls the test once per example.
+        Counterexamples are reported with the failing example attached.
+        """
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_propcheck_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                # crc32, not hash(): str hash is randomized per process,
+                # and the sweep must replay identically across runs
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    example = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **example, **kwargs)
+                    except Exception as e:  # annotate the counterexample
+                        raise AssertionError(
+                            f"propcheck example {i}/{n} failed for "
+                            f"{fn.__name__} with {example!r}: {e}") from e
+
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (hypothesis does the same via @impersonate)
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -69,8 +69,8 @@ def test_manifest_extra(tmp_path):
 
 def test_elastic_divisibility_check():
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("model",))
     tree = {"w": jnp.zeros((7, 4))}
     specs = {"w": P("model", None)}
     # divides with 1 device
@@ -87,8 +87,8 @@ def test_elastic_divisibility_check():
 
 def test_elastic_remesh_preserves_values():
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     tree = _tree()
     specs = {"params": {"w": P("data", None), "b": P()}, "step": P()}
     placed = remesh(tree, specs, mesh)

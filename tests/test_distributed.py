@@ -24,6 +24,7 @@ def _run(code: str, devices: int = 8, timeout: int = 560) -> str:
     return out.stdout
 
 
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_dist_lpa_matches_single_device():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
@@ -31,8 +32,8 @@ def test_dist_lpa_matches_single_device():
         from repro.core.distributed import build_dist_workspace, dist_lpa
         from repro.core.lpa import lpa, LPAConfig
         from repro.core.modularity import modularity
-        mesh = jax.make_mesh((8,), ("shard",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("shard",))
         g, _ = powerlaw_communities(1536, p_in=0.5, mix=0.02, seed=1)
         ws = build_dist_workspace(g, 8)
         labels, iters = dist_lpa(mesh, ws, rho=2)
@@ -44,6 +45,7 @@ def test_dist_lpa_matches_single_device():
     assert "Q=" in out
 
 
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_dist_lpa_2d_mesh_with_partitioner():
     """Distributed LPA over a 2-D mesh (flattened axes) with the
     LPA-community locality reorder feeding the shard layout."""
@@ -53,8 +55,8 @@ def test_dist_lpa_2d_mesh_with_partitioner():
         from repro.graphs.partition import lpa_partition
         from repro.core.distributed import build_dist_workspace, dist_lpa
         from repro.core.modularity import modularity
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         g, _ = powerlaw_communities(1024, p_in=0.5, mix=0.02, seed=3)
         part = lpa_partition(g, 8)
         ws = build_dist_workspace(g, 8, order=part.order)
@@ -65,12 +67,13 @@ def test_dist_lpa_2d_mesh_with_partitioner():
     """, devices=8)
 
 
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_dp_train_step_with_compression():
     _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.train.steps import make_dp_train_step
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("data",))
 
         def loss_fn(params, batch):
             pred = batch["x"] @ params["w"]
@@ -93,6 +96,7 @@ def test_dp_train_step_with_compression():
     """, devices=4)
 
 
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_compressed_vs_plain_allreduce_agree():
     """int8 EF all-reduce must track plain f32 within quantization error."""
     _run("""
@@ -100,15 +104,16 @@ def test_compressed_vs_plain_allreduce_agree():
         from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.optim.compression import compressed_psum
-        mesh = jax.make_mesh((4,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("d",))
 
         def body(g, e):
             mean, new_e = compressed_psum({"g": g}, {"g": e}, "d")
             plain = jax.lax.pmean(g, "d")
             return mean["g"], new_e["g"], plain
 
-        f = jax.jit(jax.shard_map(body, mesh=mesh,
+        from repro.compat import shard_map
+        f = jax.jit(shard_map(body, mesh=mesh,
                     in_specs=(P("d"), P("d")), out_specs=(P("d"), P("d"),
                     P("d")), check_vma=False))
         rng = np.random.default_rng(0)
@@ -142,6 +147,31 @@ def test_multihost_checkpoint_shards():
                                       np.arange(4.0) + 100)
 
 
+@pytest.mark.slow  # spawns a multi-device subprocess
+def test_dist_fused_engine_matches_reference():
+    """The fused fold engine under shard_map (plain and halo label
+    exchange) is bit-identical to the bucketed reference engine."""
+    _run("""
+        import numpy as np, jax
+        from repro.graphs.generators import powerlaw_communities
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("shard",))
+        g, _ = powerlaw_communities(1024, p_in=0.5, mix=0.02, seed=5)
+        ws = build_dist_workspace(g, 4)
+        ref, _ = dist_lpa(mesh, ws, rho=2)
+        ws_f = build_dist_workspace(g, 4, fused=True, tile_r=32)
+        got, _ = dist_lpa(mesh, ws_f, rho=2, engine="pallas_fused")
+        assert (np.asarray(ref) == np.asarray(got)).all(), "fused diverges"
+        ws_h = build_dist_workspace(g, 4, halo=True, fused=True, tile_r=32)
+        got_h, _ = dist_lpa(mesh, ws_h, rho=2, engine="pallas_fused")
+        assert (np.asarray(ref) == np.asarray(got_h)).all(), \\
+            "halo+fused diverges"
+        print("fused dist parity ok")
+    """, devices=4)
+
+
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_halo_exchange_matches_full_gather():
     """Hub+halo label exchange must be bit-identical to the full gather
     (EXPERIMENTS §Perf hillclimb 3) and strictly cheaper on the wire."""
@@ -150,8 +180,8 @@ def test_halo_exchange_matches_full_gather():
         from repro.graphs.generators import powerlaw_communities
         from repro.graphs.partition import lpa_partition
         from repro.core.distributed import build_dist_workspace, dist_lpa
-        mesh = jax.make_mesh((8,), ("shard",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("shard",))
         g, _ = powerlaw_communities(4096, p_in=0.5, mix=0.02, seed=1)
         part = lpa_partition(g, 8)
         ws_f = build_dist_workspace(g, 8, order=part.order)

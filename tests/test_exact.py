@@ -2,7 +2,7 @@
 force, including its tie-break semantics."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.exact import exact_choose, exact_linking_weights
 from repro.core.sketch import hash_mix

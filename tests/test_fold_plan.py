@@ -2,7 +2,7 @@
 sequences): exact entry coverage, canonical row mapping, round termination."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.graphs.csr import build_fold_plan, plan_padded_entries
 

@@ -197,6 +197,7 @@ def test_direct_attention_matches_blockwise():
     assert bool(jnp.isfinite(g).all())
 
 
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_cp_train_cell_smoke_on_tiny_mesh():
     """The optimized 'cp' train-cell layout lowers on a small host mesh
     (regression guard for the sharding-hint plumbing)."""
@@ -214,8 +215,8 @@ def test_cp_train_cell_smoke_on_tiny_mesh():
     from repro.configs.registry import get_arch
     from repro.launch.cells import build_lm_train
     from repro.configs.registry import ShapeCell
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     spec = get_arch("qwen3-1.7b")
     import dataclasses
     spec = dataclasses.replace(spec, config=dataclasses.replace(

@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.configs.registry import get_arch
 from repro.models.recsys.dcn_v2 import (dcn_forward, dcn_loss,

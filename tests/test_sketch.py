@@ -13,7 +13,7 @@ The theoretical contracts under test (paper §3.4/3.5 + Agarwal et al.):
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.sketch import (bm_fold_tile, choose_from_candidates,
                                hash_mix, mg_fold_tile, run_mg_plan,
