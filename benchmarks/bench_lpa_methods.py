@@ -6,16 +6,24 @@ target TPU; the memory columns are the real story being reproduced
 (exact = O(|E|) vs sketch = O(k|V|) / O(|V|)). For the MG method the rows
 additionally report the fold-engine dispatch economics: kernel dispatches
 per iteration (per-bucket ``pallas`` = one per width bucket per round,
-``pallas_fused`` = one per round, the last fused with move selection) and
-the entry volume each engine moves through HBM (bucketed = padded [R, D]
-tiles via ``plan_padded_entries``; fused = the real entries only, pad
-lanes are generated in-register).
+``pallas_fused``/``pallas_stream`` = one per round, the last fused with
+move selection), the entry volume each engine moves through HBM, and the
+per-step entry residency (fused = the whole flat entry arrays;
+streamed = one double-buffered window, reported as
+``stream_peak_resident_bytes``).
+
+``--engines`` (see ``benchmarks.common.engine_list``) selects which
+registered fold backends the MG method is additionally timed on — e.g.
+``--engines all`` or ``--engines jnp,pallas_stream,auto``. The default
+times the ``jnp`` reference only (the static engine stats are always
+reported); ``auto`` rows also show which backend the policy resolved to.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (fold_engine_stats, lpa_working_set_bytes,
+from benchmarks.common import (engine_list, fold_engine_stats,
+                               lpa_working_set_bytes,
                                measured_step_temp_bytes, suite)
 from repro.core.lpa import LPAConfig, lpa
 from repro.core.modularity import modularity
@@ -23,35 +31,47 @@ from repro.core.modularity import modularity
 METHODS = ("exact", "mg", "bm")
 
 
-def run(scale: str = "small"):
+def run(scale: str = "small", engines: str | None = None):
+    """One row per (graph, method) — plus one per extra MG fold engine.
+
+    ``engines``: ``None`` (time the jnp reference only), ``"all"``, or a
+    comma-separated subset of the registered engines + ``auto``.
+    """
+    mg_engines = engine_list(engines) if engines else ("jnp",)
     rows = []
     graphs = suite(scale)
     for gname, g in graphs.items():
         base = None
         for method in METHODS:
-            cfg = LPAConfig(method=method, rho=2)
-            import time
-            t0 = time.perf_counter()
-            res = lpa(g, cfg)
-            dt = time.perf_counter() - t0
-            q = float(modularity(g, res.labels))
-            ws = lpa_working_set_bytes(method, g, cfg)
-            temp = measured_step_temp_bytes(g, cfg)
-            if method == "exact":
-                base = dt
-            row = {
-                "bench": "fig7_methods", "graph": gname, "method": method,
-                "n_nodes": g.n_nodes, "n_edges": g.n_edges,
-                "runtime_s": round(dt, 3),
-                "speedup_vs_exact": round(base / dt, 2) if base else 1.0,
-                "iterations": res.iterations,
-                "modularity": round(q, 4),
-                "algo_bytes": int(ws["algo_bytes"]),
-                "xla_temp_bytes": int(temp),
-                "bytes_per_edge": round(ws["algo_bytes"] / max(g.n_edges, 1),
-                                        2),
-            }
-            if method == "mg":
-                row.update(fold_engine_stats(g, cfg))
-            rows.append(row)
+            backends = mg_engines if method == "mg" else ("jnp",)
+            for backend in backends:
+                cfg = LPAConfig(method=method, rho=2, fold_backend=backend)
+                import time
+                t0 = time.perf_counter()
+                res = lpa(g, cfg)
+                dt = time.perf_counter() - t0
+                q = float(modularity(g, res.labels))
+                ws = lpa_working_set_bytes(method, g, cfg)
+                if method == "exact":
+                    base = dt
+                row = {
+                    "bench": "fig7_methods", "graph": gname,
+                    "method": method, "engine": backend,
+                    "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                    "runtime_s": round(dt, 3),
+                    "speedup_vs_exact": round(base / dt, 2) if base else 1.0,
+                    "iterations": res.iterations,
+                    "modularity": round(q, 4),
+                    "algo_bytes": int(ws["algo_bytes"]),
+                    "bytes_per_edge": round(
+                        ws["algo_bytes"] / max(g.n_edges, 1), 2),
+                }
+                if backend == "jnp":
+                    # XLA's own temp accounting; measured once per method
+                    # (lowering every Pallas engine would dominate runtime)
+                    row["xla_temp_bytes"] = int(
+                        measured_step_temp_bytes(g, cfg))
+                if method == "mg" and backend == backends[0]:
+                    row.update(fold_engine_stats(g, cfg))
+                rows.append(row)
     return rows

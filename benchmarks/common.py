@@ -77,6 +77,25 @@ def fold_work_volume(graph: CSRGraph, config: LPAConfig) -> int:
     return plan_padded_entries(ws.plan)
 
 
+def engine_list(spec: str | None = None) -> tuple:
+    """Parse an ``--engines`` spec against the fold-engine registry.
+
+    ``spec`` is ``None``/``"all"`` (every registered engine plus the
+    ``auto`` policy) or a comma-separated subset (e.g.
+    ``"jnp,pallas_stream"``). New backends registered in
+    ``repro.core.fold_engine.ENGINES`` become benchable with no edits here.
+    """
+    from repro.core.fold_engine import ENGINES
+    names = ENGINES + ("auto",)
+    if spec in (None, "", "all"):
+        return names
+    chosen = tuple(s.strip() for s in spec.split(",") if s.strip())
+    bad = [c for c in chosen if c not in names]
+    if bad:
+        raise ValueError(f"unknown engines {bad}; registered: {names}")
+    return chosen
+
+
 def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     """Static dispatch/traffic accounting of the MG fold engines.
 
@@ -88,27 +107,59 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
       dispatches_per_iter_fused  : one per round; the final dispatch also
         performs move selection, so a full MG iteration is <= n_rounds + 1
         device computations (folds + the [N] label scatter).
+      dispatches_per_iter_stream : one per round, same as fused — the
+        window grid lives inside each dispatch.
       padded_entries      : entry slots the bucketed engines materialize as
         HBM [R, D] tiles (pad lanes included) — plan_padded_entries.
       fused_hbm_entries   : entries the fused engine actually reads (pad
         lanes are masked in-register from (start, count) metadata).
+      fused_resident_entry_bytes : flat entry bytes the fused engine keeps
+        VMEM-resident on round 0 (8 bytes/entry) — the quantity the auto
+        policy checks against the VMEM budget.
+      stream_windows             : total window grid steps per iteration.
+      stream_window_entries      : the widest round's window stride W.
+      stream_window_slots        : windowed entry slots materialized per
+        iteration (pads included) — the streamed re-layout's HBM cost.
+      stream_peak_resident_bytes : peak per-step entry residency of the
+        streamed kernels (double-buffered label+weight window) — bounded
+        by the config's ``stream_window``, independent of |E|.
+      auto_engine                : what ``fold_backend="auto"`` resolves to
+        for this graph under the config's VMEM budget.
     """
     import numpy as np
-    from repro.core.fold_engine import get_engine
+    from repro.core.fold_engine import get_engine, resolve_auto
     from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
-                                  fused_hbm_entries)
+                                  build_streamed_fold_plan,
+                                  fused_hbm_entries,
+                                  streamed_peak_window_bytes,
+                                  streamed_window_slots)
     degrees = np.asarray(graph.degrees)
     plan = build_fold_plan(degrees, k=config.k, chunk=config.chunk)
     fused_plan = build_fused_fold_plan(degrees, k=config.k,
                                        chunk=config.chunk)
+    stream_plan = build_streamed_fold_plan(
+        degrees, k=config.k, chunk=config.chunk,
+        window_entries=config.stream_window)
     return {
         "fold_rounds": plan.n_rounds,
         "dispatches_per_iter_pallas":
             get_engine("pallas").dispatches_per_iter(plan, None),
         "dispatches_per_iter_fused":
             get_engine("pallas_fused").dispatches_per_iter(plan, fused_plan),
+        "dispatches_per_iter_stream":
+            get_engine("pallas_stream").dispatches_per_iter(plan,
+                                                            stream_plan),
         "padded_entries": plan_padded_entries(plan),
         "fused_hbm_entries": fused_hbm_entries(fused_plan),
+        "fused_resident_entry_bytes": 8 * int(degrees.sum()),
+        "stream_windows": sum(r.n_windows for r in stream_plan.rounds),
+        "stream_window_entries": max(
+            (r.window_entries for r in stream_plan.rounds), default=0),
+        "stream_window_slots": streamed_window_slots(stream_plan),
+        "stream_peak_resident_bytes":
+            streamed_peak_window_bytes(stream_plan),
+        "auto_engine": resolve_auto(int(degrees.sum()),
+                                    config.vmem_budget_bytes),
     }
 
 

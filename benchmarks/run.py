@@ -1,6 +1,7 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--scale small|tiny] [--only NAME]
+                                          [--engines all|jnp,pallas_stream,...]
 
 Prints one CSV block per benchmark and writes the full row dump to
 bench_results/results.json. The roofline table itself comes from
@@ -44,6 +45,10 @@ def main() -> int:
     ap.add_argument("--scale", default="small", choices=["tiny", "small"])
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="bench_results")
+    ap.add_argument("--engines", default=None,
+                    help="fold engines to time where supported: 'all' or a "
+                         "comma list from the registry + 'auto' "
+                         "(e.g. jnp,pallas_stream,auto)")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -55,8 +60,13 @@ def main() -> int:
         t0 = time.time()
         try:
             import importlib
+            import inspect
             mod = importlib.import_module(module)
-            rows = mod.run(args.scale)
+            kwargs = {}
+            if (args.engines
+                    and "engines" in inspect.signature(mod.run).parameters):
+                kwargs["engines"] = args.engines
+            rows = mod.run(args.scale, **kwargs)
         except Exception as e:  # noqa: BLE001 — report and continue
             import traceback
             traceback.print_exc()

@@ -39,3 +39,11 @@ for method in ("exact", "mg", "bm"):
 
 print("\nνMG8 ~= exact quality at O(k|V|) instead of O(|E|) memory — the "
       "paper's claim, reproduced.")
+
+# The MG fold also runs on Pallas kernel engines (see README "Fold
+# engines"): fold_backend="auto" picks the VMEM-resident fused engine or
+# the HBM-streaming windowed engine from the graph's entry volume.
+from repro.core.fold_engine import resolve_auto  # noqa: E402
+
+print(f"fold_backend='auto' resolves to {resolve_auto(graph.n_edges)!r} "
+      f"for this graph ({graph.n_edges} entries).")

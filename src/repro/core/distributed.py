@@ -71,12 +71,21 @@ class DistLPAWorkspace:
     fused_counts: Tuple[jnp.ndarray, ...] | None = None  # per round [P, S_r, tile_r]
     fused_dmax: Tuple[jnp.ndarray, ...] | None = None    # per round [P, S_r, 1]
     fused_entries: Tuple[int, ...] = ()  # per round: flat entry-array length
+    # streaming-engine metadata (windowed layout per
+    # repro.graphs.csr.build_streamed_rounds, padded across shards):
+    stream_gathers: Tuple[jnp.ndarray, ...] | None = None  # per round [P, n_win_r, W_r]
+    stream_starts: Tuple[jnp.ndarray, ...] | None = None   # per round [P, n_win_r, tile_r]
+    stream_counts: Tuple[jnp.ndarray, ...] | None = None   # per round [P, n_win_r, tile_r]
+    stream_dmax: Tuple[jnp.ndarray, ...] | None = None     # per round [P, n_win_r, 1]
+    stream_final_rv: jnp.ndarray | None = None  # [P, n_win_last * tile_r] local vertex (-1 pad)
 
     def tree_flatten(self):
         children = (self.nbr_pos, self.weights, self.round_gathers,
                     self.final_row_vertex, self.init_labels, self.send_idx,
                     self.hub_idx, self.fused_starts, self.fused_counts,
-                    self.fused_dmax)
+                    self.fused_dmax, self.stream_gathers, self.stream_starts,
+                    self.stream_counts, self.stream_dmax,
+                    self.stream_final_rv)
         return children, (self.n_nodes, self.v_pad, self.k, self.chunk,
                           self.h_pad, self.hub_pad, self.fused_entries)
 
@@ -85,7 +94,10 @@ class DistLPAWorkspace:
         return cls(*children[:5], *aux[:4], send_idx=children[5],
                    h_pad=aux[4], hub_idx=children[6], hub_pad=aux[5],
                    fused_starts=children[7], fused_counts=children[8],
-                   fused_dmax=children[9], fused_entries=aux[6])
+                   fused_dmax=children[9], fused_entries=aux[6],
+                   stream_gathers=children[10], stream_starts=children[11],
+                   stream_counts=children[12], stream_dmax=children[13],
+                   stream_final_rv=children[14])
 
     @property
     def n_shards(self) -> int:
@@ -103,7 +115,8 @@ def _edge_balanced_ranges(degrees: np.ndarray, p: int) -> np.ndarray:
 def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
                          order: np.ndarray | None = None,
                          halo: bool = False, fused: bool = False,
-                         tile_r: int = 128) -> DistLPAWorkspace:
+                         tile_r: int = 128, stream: bool = False,
+                         window_entries: int = 8192) -> DistLPAWorkspace:
     """Host-side construction of the stacked distributed workspace.
 
     ``order`` optionally renumbers vertices first (e.g. the LPA-community
@@ -111,6 +124,10 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
     ``halo=True`` builds the halo-exchange tables (see DistLPAWorkspace).
     ``fused=True`` additionally builds the (start, count) range metadata the
     ``pallas_fused`` engine folds from (dist_lpa_step(engine=...)).
+    ``stream=True`` builds the per-shard windowed metadata for
+    ``engine="pallas_stream"`` — each shard folds through entry windows of
+    at most ``window_entries`` entries (padded uniformly across shards, so
+    the stacked [P, ...] pytree keeps static shapes).
     """
     offsets = np.asarray(graph.offsets, dtype=np.int64)
     indices = np.asarray(graph.indices, dtype=np.int64)
@@ -233,6 +250,49 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         fused_dmax = tuple(fused_dmax)
         fused_entries = tuple(entries)
 
+    stream_gathers = stream_starts = stream_counts = stream_dmax = None
+    stream_final_rv = None
+    if stream:
+        from repro.graphs.csr import build_streamed_rounds
+        per_shard = []
+        for p in range(n_shards):
+            lo, hi = bounds[p], bounds[p + 1]
+            counts0 = degrees[lo:hi]
+            starts0 = np.zeros(hi - lo, dtype=np.int64)
+            starts0[1:] = np.cumsum(counts0)[:-1]
+            per_shard.append(build_streamed_rounds(
+                counts0, starts0, m_pad, k=k, chunk=chunk, tile_r=tile_r,
+                window_cap=window_entries, min_rounds=n_rounds))
+        sg, ss, sc, sd = [], [], [], []
+        for r in range(n_rounds):
+            n_win = max(pr[0][r]["row_start"].shape[0] for pr in per_shard)
+            w_max = max(pr[0][r]["window_entries"] for pr in per_shard)
+            g = np.full((n_shards, n_win, w_max), PAD, dtype=np.int32)
+            rs = np.zeros((n_shards, n_win, tile_r), dtype=np.int32)
+            rc = np.zeros((n_shards, n_win, tile_r), dtype=np.int32)
+            dm = np.zeros((n_shards, n_win, 1), dtype=np.int32)
+            for p, (rounds_np, _) in enumerate(per_shard):
+                rr = rounds_np[r]
+                nw, w_s = rr["row_start"].shape[0], rr["window_entries"]
+                # widening the window stride / appending all-pad windows
+                # never moves a real row's slot, so later rounds' slot-based
+                # gathers stay valid
+                g[p, :nw, :w_s] = rr["entry_gather"].reshape(nw, w_s)
+                rs[p, :nw] = rr["row_start"]
+                rc[p, :nw] = rr["row_count"]
+                dm[p, :nw] = rr["step_dmax"]
+            sg.append(jnp.asarray(g))
+            ss.append(jnp.asarray(rs))
+            sc.append(jnp.asarray(rc))
+            sd.append(jnp.asarray(dm))
+        stream_gathers, stream_starts = tuple(sg), tuple(ss)
+        stream_counts, stream_dmax = tuple(sc), tuple(sd)
+        n_slots_last = sg[-1].shape[1] * tile_r
+        frv = np.full((n_shards, n_slots_last), PAD, dtype=np.int32)
+        for p, (_, rtv) in enumerate(per_shard):
+            frv[p, :len(rtv)] = rtv
+        stream_final_rv = jnp.asarray(frv)
+
     send_idx = hub_idx_arr = None
     h_pad = hub_pad = 0
     if halo:
@@ -309,18 +369,25 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         hub_idx=None if hub_idx_arr is None else jnp.asarray(hub_idx_arr),
         hub_pad=int(hub_pad),
         fused_starts=fused_starts, fused_counts=fused_counts,
-        fused_dmax=fused_dmax, fused_entries=fused_entries)
+        fused_dmax=fused_dmax, fused_entries=fused_entries,
+        stream_gathers=stream_gathers, stream_starts=stream_starts,
+        stream_counts=stream_counts, stream_dmax=stream_dmax,
+        stream_final_rv=stream_final_rv)
 
 
 def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed, *, k, v_pad, axis_names, fold_tile,
                 send_idx=None, hub_idx=None, fused_meta=None,
-                fused_entries=(), chunk=0):
+                fused_entries=(), chunk=0, stream_meta=None,
+                stream_frv=None):
     """Per-shard body of one distributed LPA iteration (runs inside shard_map).
 
     Shapes here are the *local* block shapes (leading P axis stripped).
     ``fused_meta`` (per round (starts, counts, dmax) blocks) switches the
     fold to the fused single-dispatch kernel — engine="pallas_fused".
+    ``stream_meta`` (per round (gather, starts, counts, dmax) windowed
+    blocks) + ``stream_frv`` (final row slot -> local vertex) switch it to
+    the HBM-streaming windowed kernel — engine="pallas_stream".
     """
     nbr_pos = nbr_pos[0]          # [M_pad]
     edge_w = edge_w[0]
@@ -348,7 +415,26 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     entry_labels = jnp.where(nbr_pos >= 0, label_table[safe], -1)
     entry_weights = jnp.where(nbr_pos >= 0, edge_w, 0.0)
 
-    if fused_meta is not None:
+    if stream_meta is not None:
+        # streaming engine: one dispatch per round, one window of entries
+        # resident per grid step (the shard-local analogue of
+        # kernels.mg_sketch.streaming.run_mg_plan_stream)
+        from repro.graphs.csr import StreamedRound
+        from repro.kernels.mg_sketch.fused import _interpret_default
+        from repro.kernels.mg_sketch.streaming import stream_fold_round
+        interpret = _interpret_default()
+        for g, rs, rc, dm in stream_meta:
+            rnd = StreamedRound(entry_gather=g[0].reshape(-1),
+                                row_start=rs[0], row_count=rc[0],
+                                step_dmax=dm[0], n_rows=0, n_entries_in=0,
+                                window_entries=g.shape[-1])
+            s_k, s_v = stream_fold_round(rnd, entry_labels, entry_weights,
+                                         k=k, chunk=chunk,
+                                         interpret=interpret)
+            entry_labels, entry_weights = s_k.reshape(-1), s_v.reshape(-1)
+        # window-slot row order: scatter below via the streaming slot map
+        final_row_vertex = stream_frv[0]
+    elif fused_meta is not None:
         # fused engine: one dispatch per round, gather inside the kernel
         from repro.graphs.csr import FusedRound
         from repro.kernels.mg_sketch.fused import (_interpret_default,
@@ -395,19 +481,24 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     (labels, delta_n). The caller jits it (dryrun lowers it).
 
     ``engine`` selects the fold backend uniformly with the single-host
-    driver ("jnp" | "pallas" | "pallas_fused" — see repro.core.fold_engine);
-    "pallas_fused" needs a workspace built with ``fused=True``. An explicit
-    ``fold_tile`` overrides the engine's tile fold.
+    driver ("jnp" | "pallas" | "pallas_fused" | "pallas_stream" — see
+    repro.core.fold_engine); "pallas_fused" needs a workspace built with
+    ``fused=True``, "pallas_stream" one built with ``stream=True``. An
+    explicit ``fold_tile`` overrides the engine's tile fold.
     """
     axis_names = tuple(mesh.axis_names) if axis_names is None else axis_names
     fused = engine == "pallas_fused"
-    if engine is not None and not fused and fold_tile is None:
+    stream = engine == "pallas_stream"
+    if engine is not None and not (fused or stream) and fold_tile is None:
         from repro.core.fold_engine import get_engine
         fold_tile = get_engine(engine).mg_fold_tile
     fold_tile = fold_tile or sketch_lib.mg_fold_tile
     if fused and ws.fused_starts is None:
         raise ValueError("engine='pallas_fused' requires "
                          "build_dist_workspace(..., fused=True)")
+    if stream and ws.stream_gathers is None:
+        raise ValueError("engine='pallas_stream' requires "
+                         "build_dist_workspace(..., stream=True)")
     spec = P(axis_names)
     n_rounds = len(ws.round_gathers)
     halo = ws.send_idx is not None
@@ -422,6 +513,8 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
                   fold_tile=fold_tile)
         if fused:
             kw.update(fused_entries=ws.fused_entries, chunk=ws.chunk)
+        if stream:
+            kw.update(chunk=ws.chunk)
         extra_names = []
         if send_idx is not None:
             in_specs += [spec, spec]
@@ -433,6 +526,12 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
             in_specs += [tuple([(spec, spec, spec)] * n_rounds)]
             args += [meta]
             extra_names += ["fused_meta"]
+        if stream:
+            meta = tuple(zip(ws.stream_gathers, ws.stream_starts,
+                             ws.stream_counts, ws.stream_dmax))
+            in_specs += [tuple([(spec, spec, spec, spec)] * n_rounds), spec]
+            args += [meta, ws.stream_final_rv]
+            extra_names += ["stream_meta", "stream_frv"]
 
         def body(*a):
             return _shard_move(*a[:7], **dict(zip(extra_names, a[7:])),

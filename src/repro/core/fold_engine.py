@@ -1,25 +1,37 @@
 """FoldEngine: uniform backend selection for the MG/BM sketch folds.
 
 One MG iteration = fold the neighbor entries into per-vertex k-slot
-sketches, then pick each vertex's winning label. Three interchangeable
+sketches, then pick each vertex's winning label. Four interchangeable
 engines compute it:
 
-  * ``jnp``          — dense reference (repro.core.sketch); also hosts the
-                       ``exact_weighted`` MG variant (DESIGN.md §8.4).
-  * ``pallas``       — per-width-bucket Pallas tile kernels; XLA gathers a
-                       padded [R, D] tile per bucket per round (HBM
-                       round-trip), one dispatch each. Kept as the
-                       streaming reference for graphs whose round-0 entries
-                       exceed the fused engine's VMEM budget.
-  * ``pallas_fused`` — whole-round fused kernels with an in-kernel gather
-                       and the final round fused with move selection:
-                       ``n_rounds`` dispatches per iteration instead of
-                       ``O(rounds x buckets)`` (kernels.mg_sketch.fused).
+  * ``jnp``           — dense reference (repro.core.sketch); also hosts the
+                        ``exact_weighted`` MG variant (DESIGN.md §8.4).
+  * ``pallas``        — per-width-bucket Pallas tile kernels; XLA gathers a
+                        padded [R, D] tile per bucket per round (HBM
+                        round-trip), one dispatch each. Kept as the
+                        pre-fusion baseline.
+  * ``pallas_fused``  — whole-round fused kernels with an in-kernel gather
+                        and the final round fused with move selection:
+                        ``n_rounds`` dispatches per iteration instead of
+                        ``O(rounds x buckets)`` (kernels.mg_sketch.fused).
+                        Keeps the flat entry arrays VMEM-resident, so a
+                        single core is bounded by the VMEM budget (round 0
+                        = |E| entries at ~8 bytes each).
+  * ``pallas_stream`` — the fused dataflow with every round streamed
+                        through fixed-size double-buffered HBM->VMEM entry
+                        windows (kernels.mg_sketch.streaming): same
+                        dispatch count, O(window) residency — for graphs
+                        past the fused VMEM budget (DESIGN.md §10).
+
+``"auto"`` resolves to ``pallas_fused`` or ``pallas_stream`` per graph by
+checking the round-0 entry volume against a configurable VMEM budget
+(:func:`resolve_auto`).
 
 ``repro.core.lpa``, ``repro.core.distributed`` and the benchmarks all
 resolve engines through :func:`get_engine`, so backend choice is a config
 string everywhere. All engines are bit-identical on the paper's MG rule
-(validated in tests/test_fused_engine.py and tests/test_kernels.py).
+(validated in tests/test_fused_engine.py, tests/test_stream_engine.py and
+tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -28,8 +40,20 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core import sketch as sketch_lib
-from repro.graphs.csr import (FoldPlan, FusedFoldPlan, fused_dispatches,
-                              plan_dispatches)
+from repro.graphs.csr import (FoldPlan, FusedFoldPlan, StreamedFoldPlan,
+                              fused_dispatches, plan_dispatches,
+                              streamed_dispatches)
+
+#: Default VMEM budget (bytes) the ``auto`` policy allows the fused engine's
+#: resident round-0 entry arrays (labels int32 + weights float32 = 8
+#: bytes/entry). 8 MiB ~= the "|E| ~ 1M entries per core" cap of
+#: kernels.mg_sketch.fused, leaving headroom inside a ~16 MiB v5e core for
+#: the gathered tile, sketches and double-buffered blocks.
+DEFAULT_VMEM_BUDGET_BYTES = 8 * 2**20
+
+#: HBM bytes per round-0 entry held resident by the fused engine
+#: (int32 label + float32 weight).
+_BYTES_PER_ENTRY = 8
 
 
 class FoldEngine:
@@ -38,6 +62,8 @@ class FoldEngine:
     name: str = "base"
     #: does mg_select consume the FusedFoldPlan (vs the bucketed FoldPlan)?
     uses_fused_plan: bool = False
+    #: does mg_select consume the StreamedFoldPlan?
+    uses_stream_plan: bool = False
 
     # -- tile-level folds (the distributed path and run_bm_plan plug in
     #    here; signatures match repro.core.sketch.{mg,bm}_fold_tile) -------
@@ -48,25 +74,32 @@ class FoldEngine:
         raise NotImplementedError
 
     # -- plan-level MG iteration ------------------------------------------
-    def mg_candidates(self, plan: FoldPlan,
-                      fused_plan: Optional[FusedFoldPlan],
+    # ``aux_plan`` is the engine's auxiliary plan: a FusedFoldPlan for
+    # pallas_fused, a StreamedFoldPlan for pallas_stream, ignored (None ok)
+    # by the bucketed jnp/pallas engines. The driver picks the right one
+    # from the workspace via uses_fused_plan/uses_stream_plan.
+    def mg_candidates(self, plan: FoldPlan, aux_plan,
                       entry_labels, entry_weights
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Per-vertex candidate sets ([N, k] labels, [N, k] weights)."""
         raise NotImplementedError
 
-    def mg_select(self, plan: FoldPlan, fused_plan: Optional[FusedFoldPlan],
+    def mg_select(self, plan: FoldPlan, aux_plan,
                   entry_labels, entry_weights, labels, seed) -> jnp.ndarray:
-        """Full iteration: fold + move selection -> wanted label per vertex."""
+        """Full iteration: fold + move selection -> wanted label per vertex
+        ([N] int32)."""
         raise NotImplementedError
 
-    def dispatches_per_iter(self, plan: FoldPlan,
-                            fused_plan: Optional[FusedFoldPlan]) -> int:
+    def dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
         """Pallas kernel dispatches one MG iteration costs on this engine."""
         raise NotImplementedError
 
 
 class JnpEngine(FoldEngine):
+    """Dense pure-XLA reference (repro.core.sketch); the bit-exactness
+    oracle for every Pallas engine, and the only host of the
+    ``exact_weighted`` MG variant (DESIGN.md §8.4)."""
+
     name = "jnp"
 
     def __init__(self, mg_variant: str = "paper"):
@@ -96,8 +129,8 @@ class JnpEngine(FoldEngine):
 
 
 class PallasEngine(FoldEngine):
-    """Per-bucket tile kernels (the pre-fusion Pallas path, kept as the
-    streaming reference: entry arrays never need to be VMEM-resident)."""
+    """Per-bucket tile kernels (the pre-fusion Pallas baseline; for
+    bounded-VMEM large graphs use ``pallas_stream`` instead)."""
 
     name = "pallas"
 
@@ -147,12 +180,8 @@ class PallasFusedEngine(FoldEngine):
                              "(build_workspace constructs one when "
                              "fold_backend='pallas_fused')")
         s_k, s_v = run_mg_plan_fused(fused_plan, entry_labels, entry_weights)
-        n, k = fused_plan.n_nodes, fused_plan.k
-        rtv = fused_plan.row_to_vertex
-        safe = jnp.where(rtv >= 0, rtv, n)  # pad rows -> dump slot
-        cand_c = jnp.full((n + 1, k), -1, jnp.int32).at[safe].set(s_k)[:n]
-        cand_w = jnp.zeros((n + 1, k), jnp.float32).at[safe].set(s_v)[:n]
-        return cand_c, cand_w
+        return _scatter_padded_rows(fused_plan.n_nodes, fused_plan.k,
+                                    fused_plan.row_to_vertex, s_k, s_v)
 
     def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
                   labels, seed):
@@ -168,20 +197,113 @@ class PallasFusedEngine(FoldEngine):
         return fused_dispatches(fused_plan)  # n_rounds (last one selects)
 
 
-ENGINES = ("jnp", "pallas", "pallas_fused")
+def _scatter_padded_rows(n: int, k: int, row_to_vertex, s_k, s_v
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter padded per-row sketches to per-vertex candidate sets.
+
+    ``row_to_vertex`` [rows] int32 (-1 on pad rows) maps each padded row of
+    ``s_k``/``s_v`` [rows, k] to its owning vertex; pad rows land in a dump
+    slot. Returns ([N, k] int32 candidate labels with -1 empties, [N, k]
+    float32 weights). Shared by the fused and streaming engines.
+    """
+    safe = jnp.where(row_to_vertex >= 0, row_to_vertex, n)
+    cand_c = jnp.full((n + 1, k), -1, jnp.int32).at[safe].set(s_k)[:n]
+    cand_w = jnp.zeros((n + 1, k), jnp.float32).at[safe].set(s_v)[:n]
+    return cand_c, cand_w
 
 
-def get_engine(name: str, mg_variant: str = "paper") -> FoldEngine:
+class PallasStreamEngine(FoldEngine):
+    """HBM-streaming windowed kernels — see kernels.mg_sketch.streaming.
+
+    Same dispatch structure as ``pallas_fused`` (one per round, the last
+    fused with move selection) but each round's entries are streamed
+    through fixed-size double-buffered VMEM windows, so per-step residency
+    is O(window_entries) instead of O(|E|).
+    """
+
+    name = "pallas_stream"
+    uses_stream_plan = True
+
+    def mg_fold_tile(self, labels, weights, k):
+        # tile-level callers (BM merge path) share the per-bucket kernel;
+        # streaming applies to the plan-level MG walk below.
+        from repro.kernels.mg_sketch import ops as kops
+        return kops.mg_fold_tile_pallas(labels, weights, k)
+
+    def bm_fold_tile(self, labels, weights, init_label=None):
+        from repro.kernels.mg_sketch import ops as kops
+        return kops.bm_fold_tile_pallas(labels, weights, init_label)
+
+    def mg_candidates(self, plan, stream_plan, entry_labels, entry_weights):
+        from repro.kernels.mg_sketch.streaming import run_mg_plan_stream
+        if stream_plan is None:
+            raise ValueError("pallas_stream engine needs a StreamedFoldPlan "
+                             "(build_workspace constructs one when "
+                             "fold_backend='pallas_stream')")
+        s_k, s_v = run_mg_plan_stream(stream_plan, entry_labels,
+                                      entry_weights)
+        return _scatter_padded_rows(stream_plan.n_nodes, stream_plan.k,
+                                    stream_plan.row_to_vertex, s_k, s_v)
+
+    def mg_select(self, plan, stream_plan, entry_labels, entry_weights,
+                  labels, seed):
+        from repro.kernels.mg_sketch.streaming import select_best_stream
+        if stream_plan is None:
+            raise ValueError("pallas_stream engine needs a StreamedFoldPlan "
+                             "(build_workspace constructs one when "
+                             "fold_backend='pallas_stream')")
+        return select_best_stream(stream_plan, entry_labels, entry_weights,
+                                  labels, seed)
+
+    def dispatches_per_iter(self, plan, stream_plan):
+        return streamed_dispatches(stream_plan)  # n_rounds (last selects)
+
+
+#: Concrete fold backends, resolvable by name. ``"auto"`` additionally
+#: resolves to one of the last two per graph (see :func:`resolve_auto`).
+ENGINES = ("jnp", "pallas", "pallas_fused", "pallas_stream")
+
+
+def resolve_auto(n_entries: int,
+                 vmem_budget_bytes: Optional[int] = None) -> str:
+    """Pick ``pallas_fused`` vs ``pallas_stream`` for a graph.
+
+    ``n_entries`` is the round-0 entry volume (= |E| directed CSR slots,
+    units: entries); the fused engine keeps ``8 * n_entries`` bytes of flat
+    entry arrays VMEM-resident, so it is selected only while that fits
+    ``vmem_budget_bytes`` (default :data:`DEFAULT_VMEM_BUDGET_BYTES`).
+    """
+    budget = (DEFAULT_VMEM_BUDGET_BYTES if vmem_budget_bytes is None
+              else vmem_budget_bytes)
+    return ("pallas_fused" if n_entries * _BYTES_PER_ENTRY <= budget
+            else "pallas_stream")
+
+
+def get_engine(name: str, mg_variant: str = "paper", *,
+               n_entries: Optional[int] = None,
+               vmem_budget_bytes: Optional[int] = None) -> FoldEngine:
     """Resolve a fold backend by config name.
 
     ``mg_variant='exact_weighted'`` is implemented on the jnp engine only;
     the Pallas engines always compute the paper's Alg. 2 rule.
+
+    ``name="auto"`` picks ``pallas_fused`` vs ``pallas_stream`` from the
+    round-0 entry volume ``n_entries`` against ``vmem_budget_bytes``
+    (:func:`resolve_auto`); both the driver and ``build_workspace`` resolve
+    with the same inputs, so the chosen engine always finds its plan.
     """
+    if name == "auto":
+        if n_entries is None:
+            raise ValueError("get_engine('auto') needs n_entries (the "
+                             "round-0 entry volume) to resolve the policy")
+        name = resolve_auto(n_entries, vmem_budget_bytes)
     if name == "jnp":
         return JnpEngine(mg_variant=mg_variant)
     if name == "pallas":
         return PallasEngine()
     if name == "pallas_fused":
         return PallasFusedEngine()
+    if name == "pallas_stream":
+        return PallasStreamEngine()
     raise ValueError(f"unknown fold backend {name!r}; expected one of "
-                     f"{ENGINES}")
+                     f"{ENGINES + ('auto',)}")

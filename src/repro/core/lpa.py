@@ -13,9 +13,12 @@ convergence when the changed fraction drops below ``tau`` in a non-PL
 iteration; hard cap ``max_iters``.
 
 The MG fold backend is a config string resolved through
-``repro.core.fold_engine`` ("jnp" | "pallas" | "pallas_fused" — the fused
-engine runs one kernel dispatch per fold round, the last fused with move
-selection; DESIGN.md §9).
+``repro.core.fold_engine`` ("jnp" | "pallas" | "pallas_fused" |
+"pallas_stream" | "auto" — the fused engine runs one kernel dispatch per
+fold round, the last fused with move selection, DESIGN.md §9; the
+streaming engine keeps that dispatch structure while bounding VMEM
+residency to fixed entry windows, DESIGN.md §10; "auto" picks between
+them from the round-0 entry volume vs ``vmem_budget_bytes``).
 
 Deviation from the paper (documented in DESIGN.md §8): iterations are
 synchronous (pure-functional JAX) rather than asynchronous in-place. The
@@ -37,9 +40,11 @@ import jax.numpy as jnp
 
 from repro.core import sketch as sketch_lib
 from repro.core.exact import exact_choose
-from repro.core.fold_engine import get_engine
+from repro.core.fold_engine import get_engine, resolve_auto
 from repro.graphs.csr import (CSRGraph, FoldPlan, FusedFoldPlan,
-                              build_fold_plan, build_fused_fold_plan)
+                              StreamedFoldPlan, build_fold_plan,
+                              build_fused_fold_plan,
+                              build_streamed_fold_plan)
 
 Method = Literal["exact", "mg", "bm"]
 
@@ -53,8 +58,15 @@ class LPAConfig:
     tau: float = 0.05          # convergence tolerance (paper: 0.05)
     max_iters: int = 20        # paper: 20
     rescan: bool = False       # double-scan mode (paper Fig. 5 ablation)
-    fold_backend: str = "jnp"  # "jnp" | "pallas" | "pallas_fused"
+    # "jnp" | "pallas" | "pallas_fused" | "pallas_stream" | "auto"
+    fold_backend: str = "jnp"
     mg_variant: str = "paper"  # "paper" | "exact_weighted" (DESIGN.md §8.4)
+    # pallas_stream: max entries per streamed window (bytes resident per
+    # step ~= 2 * window * 8); also the "auto" policy's stream granularity
+    stream_window: int = 8192
+    # "auto" picks pallas_fused while 8 * |E| <= this budget, else
+    # pallas_stream (None = fold_engine.DEFAULT_VMEM_BUDGET_BYTES)
+    vmem_budget_bytes: Optional[int] = None
     frontier_gate: bool = False  # Traag & Šubelj frontier gating (opt-in)
     # frontier_history diagnostics cost one O(|E|) segment_max per
     # iteration; disable for pure-throughput runs (implied on when gating)
@@ -66,18 +78,21 @@ class LPAConfig:
 class LPAWorkspace:
     """Graph + static fold plan(s) + CSR-expanded edge sources.
 
-    ``fused_plan`` is only built when the config selects the fused backend
-    (the bucketed ``plan`` is always present — BM folds and the rescan
-    ablation consume it on every backend).
+    ``fused_plan``/``stream_plan`` are only built when the config selects
+    the corresponding backend ("auto" resolves first, then builds exactly
+    one of them); the bucketed ``plan`` is always present — BM folds and
+    the rescan ablation consume it on every backend.
     """
 
     graph: CSRGraph
     plan: FoldPlan
     edge_src: jnp.ndarray  # [M] int32
     fused_plan: Optional[FusedFoldPlan] = None
+    stream_plan: Optional[StreamedFoldPlan] = None
 
     def tree_flatten(self):
-        return (self.graph, self.plan, self.edge_src, self.fused_plan), ()
+        return (self.graph, self.plan, self.edge_src, self.fused_plan,
+                self.stream_plan), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -88,12 +103,19 @@ def build_workspace(graph: CSRGraph, config: LPAConfig) -> LPAWorkspace:
     import numpy as np
     degrees = np.asarray(graph.degrees)
     plan = build_fold_plan(degrees, k=config.k, chunk=config.chunk)
-    fused_plan = None
-    if config.fold_backend == "pallas_fused":
+    backend = config.fold_backend
+    if backend == "auto":
+        backend = resolve_auto(int(degrees.sum()), config.vmem_budget_bytes)
+    fused_plan = stream_plan = None
+    if backend == "pallas_fused":
         fused_plan = build_fused_fold_plan(degrees, k=config.k,
                                            chunk=config.chunk)
+    elif backend == "pallas_stream":
+        stream_plan = build_streamed_fold_plan(
+            degrees, k=config.k, chunk=config.chunk,
+            window_entries=config.stream_window)
     return LPAWorkspace(graph=graph, plan=plan, edge_src=graph.sources(),
-                        fused_plan=fused_plan)
+                        fused_plan=fused_plan, stream_plan=stream_plan)
 
 
 def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
@@ -111,7 +133,11 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     """
     graph, plan = ws.graph, ws.plan
     nbr_labels = labels[graph.indices]
-    engine = get_engine(config.fold_backend, mg_variant=config.mg_variant)
+    # "auto" resolves from the round-0 entry volume (a static plan field),
+    # deterministically matching the plan build_workspace constructed.
+    engine = get_engine(config.fold_backend, mg_variant=config.mg_variant,
+                        n_entries=plan.rounds[0].n_entries_in,
+                        vmem_budget_bytes=config.vmem_budget_bytes)
 
     if config.method == "exact":
         want = exact_choose(ws.edge_src, nbr_labels, graph.weights,
@@ -126,7 +152,9 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
             want = sketch_lib.rescan_candidates(plan, s_k, nbr_labels,
                                                 graph.weights, labels, seed)
         else:
-            want = engine.mg_select(plan, ws.fused_plan, nbr_labels,
+            aux = (ws.stream_plan if engine.uses_stream_plan
+                   else ws.fused_plan)
+            want = engine.mg_select(plan, aux, nbr_labels,
                                     graph.weights, labels, seed)
     elif config.method == "bm":
         # incumbency is built into the fold's initial carry (Alg. 3 l. 13)

@@ -375,6 +375,303 @@ def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
                          n_nodes=n, k=k, chunk=chunk, tile_r=tile_r)
 
 
+# ---------------------------------------------------------------------------
+# Streamed plan: fixed-size entry windows through VMEM (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+#
+# The fused plan above keeps each round's flat entry arrays VMEM-resident
+# (round 0 = |E| entries), which caps a single core at |E| ~ 1M entries.
+# The streamed plan re-lays every round's entries into fixed-size windows
+# of at most ``window_entries`` slots such that **no row straddles a window
+# boundary**: each window owns at most ``tile_r`` rows whose entries are
+# packed contiguously at window-relative offsets, with the invariant
+# ``rel_start + chunk <= window_entries`` so the kernel's full-``chunk``
+# dynamic slice of any row stays inside the window. One grid step then
+# consumes exactly one window: the Pallas pipeline streams each window's
+# entry block HBM -> VMEM (double-buffered across grid steps) while the
+# previous window folds, so per-step residency is O(window_entries), not
+# O(|E|). Windows are closed greedily on whichever cap hits first (rows ==
+# tile_r or entries past the slice-safe limit), and the materialized window
+# stride is shrunk to the widest window actually produced (lane-aligned).
+
+_STREAM_ALIGN = 128  # lane-align the materialized window stride
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StreamedRound:
+    """Per-round metadata of the HBM-streaming windowed fold.
+
+    Shapes (W = ``window_entries``, R = rows per window = the plan's
+    ``tile_r``): the round covers ``n_windows`` windows; window ``w`` owns
+    entry slots ``[w*W, (w+1)*W)`` of the windowed layout and row slots
+    ``[w*R, (w+1)*R)`` of the padded output.
+    """
+
+    entry_gather: jnp.ndarray  # [n_windows * W] int32 — source position per windowed slot (-1 = pad)
+    row_start: jnp.ndarray     # [n_windows, R] int32 — window-RELATIVE entry offset (0 on pad rows)
+    row_count: jnp.ndarray     # [n_windows, R] int32 — valid entries of the row (0 on pad rows)
+    step_dmax: jnp.ndarray     # [n_windows, 1] int32 — max row_count within the window
+    n_rows: int                # real (unpadded) rows this round produces
+    n_entries_in: int          # flat source entry-array length this round consumes
+    window_entries: int        # W — entry slots per window (slice-safe: rel+chunk <= W)
+
+    def tree_flatten(self):
+        return ((self.entry_gather, self.row_start, self.row_count,
+                 self.step_dmax),
+                (self.n_rows, self.n_entries_in, self.window_entries))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_windows(self) -> int:
+        return self.row_start.shape[0]
+
+    @property
+    def tile_r(self) -> int:
+        return self.row_start.shape[1]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StreamedFoldPlan:
+    """Static windowed reduction plan: one dispatch per round, one window
+    of at most ``window_cap`` entries resident per grid step."""
+
+    rounds: Tuple[StreamedRound, ...]
+    row_to_vertex: jnp.ndarray  # [last n_windows * tile_r] int32 — owning vertex (-1 pad)
+    n_nodes: int
+    k: int         # sketch slots per row
+    chunk: int     # entries per virtual-vertex row (paper D_H)
+    tile_r: int    # row slots per window
+    window_cap: int  # requested max entries per window (actual W <= aligned cap)
+
+    def tree_flatten(self):
+        return ((self.rounds, self.row_to_vertex),
+                (self.n_nodes, self.k, self.chunk, self.tile_r,
+                 self.window_cap))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+
+def _pack_stream_windows(row_count: np.ndarray, chunk: int, tile_r: int,
+                         window_cap: int) -> dict:
+    """Greedily assign rows (kept in order) to slice-safe entry windows.
+
+    Rows pack contiguously: row i's window-relative start is the sum of the
+    counts of the rows before it in the same window. A window closes when it
+    holds ``tile_r`` rows or when the next row's ``rel_start + chunk`` would
+    exceed ``window_cap`` (so the kernel's full-chunk slice never crosses the
+    window edge — "no row straddles a window unsafely").
+
+    Returns numpy arrays: ``win_of_row``/``rel_start``/``slot_of_row`` per
+    row, plus ``n_windows`` and the lane-aligned ``window_entries`` stride
+    actually needed (<= aligned ``window_cap``; >= ``chunk``).
+    """
+    if window_cap < chunk:
+        raise ValueError(f"window_cap ({window_cap}) must be >= chunk "
+                         f"({chunk}) for slice-safe rows")
+    n_rows = len(row_count)
+    if n_rows == 0:
+        w = -(-chunk // _STREAM_ALIGN) * _STREAM_ALIGN
+        return dict(win_of_row=np.zeros(0, np.int64),
+                    rel_start=np.zeros(0, np.int64),
+                    slot_of_row=np.zeros(0, np.int64),
+                    n_windows=1, window_entries=w)
+    cum = np.zeros(n_rows + 1, dtype=np.int64)
+    np.cumsum(row_count, out=cum[1:])
+    firsts = []
+    p = 0
+    while p < n_rows:
+        # last includable row q has rel_start = cum[q]-cum[p] <= cap - chunk
+        q = int(np.searchsorted(cum, cum[p] + window_cap - chunk,
+                                side="right"))
+        q = max(min(q, p + tile_r, n_rows), p + 1)
+        firsts.append(p)
+        p = q
+    firsts_arr = np.asarray(firsts, dtype=np.int64)
+    n_windows = len(firsts)
+    rows_per_win = np.diff(np.concatenate([firsts_arr, [n_rows]]))
+    win_of_row = np.repeat(np.arange(n_windows, dtype=np.int64), rows_per_win)
+    rel_start = cum[:-1] - cum[firsts_arr[win_of_row]]
+    slot_of_row = win_of_row * tile_r + (np.arange(n_rows) -
+                                         firsts_arr[win_of_row])
+    need = int((rel_start + chunk).max())
+    w = -(-max(need, chunk) // _STREAM_ALIGN) * _STREAM_ALIGN
+    return dict(win_of_row=win_of_row, rel_start=rel_start,
+                slot_of_row=slot_of_row, n_windows=n_windows,
+                window_entries=w)
+
+
+def _materialize_stream_round(row_vstart: np.ndarray, row_count: np.ndarray,
+                              pack: dict, pos_table: np.ndarray | None,
+                              tile_r: int) -> dict:
+    """Build one round's device arrays from a window packing.
+
+    ``row_vstart`` is each row's start in the round's *virtual* vertex-major
+    entry space; ``pos_table`` (None on round 0) maps virtual positions to
+    actual positions in the previous round's padded flattened output.
+    Returns int32 numpy arrays: ``entry_gather`` [n_windows * W],
+    ``row_start``/``row_count`` [n_windows, R], ``step_dmax`` [n_windows, 1].
+    """
+    n_rows = len(row_count)
+    n_windows, w = pack["n_windows"], pack["window_entries"]
+    gather = np.full(n_windows * w, -1, dtype=np.int64)
+    if n_rows:
+        cum = np.zeros(n_rows + 1, dtype=np.int64)
+        np.cumsum(row_count, out=cum[1:])
+        total = int(cum[-1])
+        row_of_entry = np.repeat(np.arange(n_rows, dtype=np.int64), row_count)
+        intra = np.arange(total, dtype=np.int64) - np.repeat(cum[:-1],
+                                                             row_count)
+        out_pos = (pack["win_of_row"][row_of_entry] * w
+                   + pack["rel_start"][row_of_entry] + intra)
+        src = row_vstart[row_of_entry] + intra
+        if pos_table is not None:
+            src = pos_table[src]
+        gather[out_pos] = src
+    rs = np.zeros((n_windows * tile_r,), dtype=np.int64)
+    rc = np.zeros((n_windows * tile_r,), dtype=np.int64)
+    rs[pack["slot_of_row"]] = pack["rel_start"]
+    rc[pack["slot_of_row"]] = row_count
+    rs = rs.reshape(n_windows, tile_r).astype(np.int32)
+    rc = rc.reshape(n_windows, tile_r).astype(np.int32)
+    return dict(entry_gather=gather.astype(np.int32), row_start=rs,
+                row_count=rc,
+                step_dmax=rc.max(axis=1, keepdims=True).astype(np.int32))
+
+
+def build_streamed_rounds(counts: np.ndarray, starts: np.ndarray,
+                          n_entries: int, *, k: int, chunk: int, tile_r: int,
+                          window_cap: int, min_rounds: int = 1
+                          ) -> Tuple[List[dict], np.ndarray]:
+    """Host-side core of the streamed plan (shared with the distributed
+    workspace builder).
+
+    ``counts``/``starts`` [N] give each vertex's entry range in the round-0
+    source array of length ``n_entries`` (for the single-host plan: CSR
+    degrees/offsets). Folds the identical per-row entry sequences as
+    ``build_fused_fold_plan`` (same chunking, same ascending-count row
+    sort), so per-vertex results are bit-identical to the reference; only
+    the window re-layout differs. ``min_rounds`` forces extra merge rounds
+    (the distributed builder pads all shards to a common round count).
+
+    Returns (one numpy dict per round with the ``StreamedRound`` fields,
+    final ``row_to_vertex`` [last n_windows * tile_r], -1 on pad slots).
+    """
+    counts = np.asarray(counts, dtype=np.int64).copy()
+    starts = np.asarray(starts, dtype=np.int64).copy()
+    n = len(counts)
+    rounds: List[dict] = []
+    pos_table: np.ndarray | None = None
+    r = 0
+    while True:
+        order = np.argsort(counts, kind="stable")  # ascending entry count
+        n_chunks = ((counts + chunk - 1) // chunk).astype(np.int64)
+        nc_ord = n_chunks[order]
+        total_rows = int(nc_ord.sum())
+        row_vertex = np.repeat(order, nc_ord)
+        row_rank = np.arange(total_rows, dtype=np.int64) - np.repeat(
+            np.cumsum(nc_ord) - nc_ord, nc_ord)
+        row_vstart = starts[row_vertex] + row_rank * chunk
+        row_count = np.minimum(counts[row_vertex] - row_rank * chunk, chunk)
+        pack = _pack_stream_windows(row_count, chunk, tile_r, window_cap)
+        rnd = _materialize_stream_round(row_vstart, row_count, pack,
+                                        pos_table, tile_r)
+        rnd.update(n_rows=total_rows, n_entries_in=int(n_entries),
+                   window_entries=pack["window_entries"])
+        rounds.append(rnd)
+        if np.all(n_chunks <= 1) and (r + 1) >= min_rounds:
+            rtv = np.full(pack["n_windows"] * tile_r, -1, dtype=np.int64)
+            rtv[pack["slot_of_row"]] = row_vertex
+            return rounds, rtv.astype(np.int32)
+        # Next round consumes each vertex's partial [k]-slot sketches in
+        # (vertex, rank) order; pos_table maps that vertex-major virtual
+        # space to the actual padded slots of this round's output.
+        vm = np.lexsort((row_rank, row_vertex))
+        slots_vm = pack["slot_of_row"][vm]
+        pos_table = (slots_vm[:, None] * k
+                     + np.arange(k, dtype=np.int64)).reshape(-1)
+        counts = n_chunks * k
+        starts = np.zeros(n, dtype=np.int64)
+        starts[1:] = np.cumsum(counts)[:-1]
+        n_entries = pack["n_windows"] * tile_r * k
+        r += 1
+
+
+def build_streamed_fold_plan(degrees: np.ndarray, k: int = 8,
+                             chunk: int = 128, tile_r: int = 128,
+                             window_entries: int = 8192) -> StreamedFoldPlan:
+    """Construct the HBM-streaming windowed plan from the degree sequence.
+
+    ``window_entries`` caps the entry slots per window (units: entries; the
+    per-step VMEM residency is ~``2 * window_entries * 8`` bytes for the
+    double-buffered label+weight window). Folds the identical entry
+    sequences as ``build_fold_plan``/``build_fused_fold_plan``, so
+    per-vertex results are bit-identical; only the windowed layout and the
+    per-window grid differ.
+    """
+    degrees = np.asarray(degrees, dtype=np.int64)
+    n = len(degrees)
+    if chunk <= k:
+        raise ValueError(f"chunk ({chunk}) must exceed sketch slots k ({k})")
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(degrees, out=offsets[1:])
+    rounds_np, rtv = build_streamed_rounds(
+        degrees, offsets[:-1], int(degrees.sum()), k=k, chunk=chunk,
+        tile_r=tile_r, window_cap=window_entries)
+    rounds = tuple(
+        StreamedRound(entry_gather=jnp.asarray(r["entry_gather"]),
+                      row_start=jnp.asarray(r["row_start"]),
+                      row_count=jnp.asarray(r["row_count"]),
+                      step_dmax=jnp.asarray(r["step_dmax"]),
+                      n_rows=r["n_rows"], n_entries_in=r["n_entries_in"],
+                      window_entries=r["window_entries"])
+        for r in rounds_np)
+    return StreamedFoldPlan(rounds=rounds, row_to_vertex=jnp.asarray(rtv),
+                            n_nodes=n, k=k, chunk=chunk, tile_r=tile_r,
+                            window_cap=window_entries)
+
+
+def streamed_dispatches(plan: StreamedFoldPlan) -> int:
+    """Kernel dispatches per MG iteration: one per round (the final round's
+    dispatch also performs candidate selection), same as the fused engine —
+    the window grid lives *inside* each dispatch."""
+    return plan.n_rounds
+
+
+def streamed_window_slots(plan: StreamedFoldPlan) -> int:
+    """Total windowed entry slots materialized per iteration across rounds
+    (units: entries; the windowed re-layout's HBM footprint — pad slots
+    included, unlike :func:`streamed_hbm_entries`)."""
+    return sum(r.n_windows * r.window_entries for r in plan.rounds)
+
+
+def streamed_hbm_entries(plan: StreamedFoldPlan) -> int:
+    """Real entries the streamed fold reads per iteration (units: entries;
+    equals :func:`fused_hbm_entries` of the fused plan — the window
+    re-layout adds pad slots but no extra real entries)."""
+    return int(sum(int(np.asarray(r.row_count).sum()) for r in plan.rounds))
+
+
+def streamed_peak_window_bytes(plan: StreamedFoldPlan) -> int:
+    """Peak per-step resident entry bytes of the streamed kernels: the
+    double-buffered (label int32 + weight float32) window of the widest
+    round — ``2 * W * 8`` bytes. This replaces the fused engine's full
+    flat-entry residency (~``8 * n_entries_in`` bytes on round 0)."""
+    if not plan.rounds:
+        return 0
+    return max(2 * r.window_entries * 8 for r in plan.rounds)
+
+
 def fused_hbm_entries(plan: FusedFoldPlan) -> int:
     """Real entries the fused fold reads from HBM (padded lanes are generated
     in-register, so — unlike ``plan_padded_entries`` — pad slots cost no

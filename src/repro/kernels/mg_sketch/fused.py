@@ -26,11 +26,12 @@ VMEM budget per grid step (defaults tile_r=128, chunk=128, k=8): the
 gathered tile is 128*128*8 = 128 KiB + 8 KiB sketches — far inside a v5e
 core's ~16 MiB. The flat entry arrays are kept resident (round 0 size =
 |E| entries; ~8 bytes each), which caps a single-core fused round 0 at
-|E| ~ 1M entries — beyond that, shard the graph (repro.core.distributed)
-or fall back to the streaming per-bucket backend. Single-lane dynamic
-slices at unaligned starts are the price of the in-kernel gather; they are
-contiguous 128-wide loads, the pattern Mosaic handles without layout
-churn.
+|E| ~ 1M entries — past that budget use the HBM-streaming engine
+(``kernels.mg_sketch.streaming`` / ``fold_backend="pallas_stream"``, or
+``"auto"`` which picks per graph), or shard the graph
+(repro.core.distributed). Single-lane dynamic slices at unaligned starts
+are the price of the in-kernel gather; they are contiguous 128-wide
+loads, the pattern Mosaic handles without layout churn.
 
 Validated bit-identically against ``repro.core.sketch`` in interpret mode
 (tests/test_fused_engine.py); this container is CPU-only, TPU is the
@@ -135,23 +136,16 @@ def _hash_mix(x, seed):
     return h ^ (h >> 13)
 
 
-def _fused_select_kernel(dmax_ref, start_ref, count_ref, inc_ref, seed_ref,
-                         elab_ref, ewgt_ref, out_c_ref, *, k: int,
-                         chunk: int):
-    """Final-round fold + move selection in one dispatch.
+def _select_rows(s_k, s_v, inc, seed):
+    """In-kernel move selection over a folded [tile_r, k] sketch tile.
 
-    Folds the tile like ``_fused_fold_kernel``, then replays
-    ``select_best``'s candidate preprocessing and ``choose_from_candidates``
-    bit-for-bit over the [tile_r, k] sketch + the incumbent: max weight
-    wins, ties resolved by the per-iteration hash, then the smaller label;
-    no candidate -> keep the incumbent. The final round has at most one row
-    per vertex, so the row's choice IS the vertex's choice.
+    Replays ``select_best``'s candidate preprocessing and
+    ``choose_from_candidates`` bit-for-bit over the sketch + the incumbent
+    ``inc`` [tile_r, 1]: max weight wins, ties resolved by the
+    per-iteration hash, then the smaller label; no candidate -> keep the
+    incumbent. Returns the chosen label per row [tile_r]. Shared by the
+    fused and streaming (``streaming.py``) select kernels.
     """
-    lab, wgt = _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk)
-    s_k, s_v = _mg_fold(lab, wgt, k, dmax_ref[0, 0])
-
-    inc = inc_ref[0, :][:, None]          # [tile_r, 1] incumbent labels
-    seed = seed_ref[0, 0]
     cand_c = jnp.where(s_v > 0, s_k, -1)  # select_best's preprocessing
     cur_w = jnp.max(jnp.where((cand_c == inc) & (s_v > 0), s_v, 0.0),
                     axis=1, keepdims=True)
@@ -166,7 +160,22 @@ def _fused_select_kernel(dmax_ref, start_ref, count_ref, inc_ref, seed_ref,
     h_best = jnp.min(h, axis=1, keepdims=True)
     in_hash = tied & (h <= h_best)
     c_best = jnp.min(jnp.where(in_hash, c_all, INT_MAX), axis=1)
-    out_c_ref[...] = jnp.where(c_best == INT_MAX, inc[:, 0], c_best)[None, :]
+    return jnp.where(c_best == INT_MAX, inc[:, 0], c_best)
+
+
+def _fused_select_kernel(dmax_ref, start_ref, count_ref, inc_ref, seed_ref,
+                         elab_ref, ewgt_ref, out_c_ref, *, k: int,
+                         chunk: int):
+    """Final-round fold + move selection in one dispatch.
+
+    Folds the tile like ``_fused_fold_kernel``, then applies
+    :func:`_select_rows`. The final round has at most one row per vertex,
+    so the row's choice IS the vertex's choice.
+    """
+    lab, wgt = _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk)
+    s_k, s_v = _mg_fold(lab, wgt, k, dmax_ref[0, 0])
+    inc = inc_ref[0, :][:, None]          # [tile_r, 1] incumbent labels
+    out_c_ref[...] = _select_rows(s_k, s_v, inc, seed_ref[0, 0])[None, :]
 
 
 def _pad_entries(x: jnp.ndarray, length: int, chunk: int, fill):

@@ -1,0 +1,219 @@
+"""HBM-streaming fused Pallas kernels: windowed MG fold, one dispatch/round.
+
+The fused engine (``fused.py``) passes each round's flat entry arrays whole,
+so they are VMEM-resident for the duration of the dispatch — round 0 is |E|
+entries, capping a single core at |E| ~ 1M entries. The streaming kernels
+here remove that cap by processing each round in fixed-size **entry
+windows** (``repro.graphs.csr.build_streamed_fold_plan``):
+
+  * the round's entries are re-laid into ``[n_windows * W]`` windowed
+    arrays (one XLA gather per round; W = ``window_entries``). The plan
+    window-aligns every row — rows pack contiguously inside a window with
+    ``rel_start + chunk <= W`` — so no row's full-``chunk`` slice ever
+    crosses a window edge;
+  * the kernel grid runs one step per window. Each step's BlockSpec selects
+    only its own W-entry window, so the Pallas pipeline streams window
+    ``i+1`` HBM -> VMEM (the emitter's double-buffered block copies) while
+    window ``i`` folds: per-step entry residency is ``2 * W * 8`` bytes
+    (two label+weight window buffers), independent of |E|;
+  * within a step the dataflow is the fused kernel's, reused verbatim:
+    in-register gather of the [tile_r, chunk] row tile from the window
+    (``fused._gather_tile``), lane-per-row MG fold bounded by the window's
+    ``step_dmax`` (``fused._mg_fold``), and — on the final round — fused
+    move selection (``fused._select_rows``). Partial [tile_r, k] sketches
+    are carried across window steps through the padded per-window output
+    blocks; later rounds merge a vertex's partials via the plan's
+    position-table gather.
+
+Cost vs the fused engine: same dispatch count (``n_rounds`` per MG
+iteration, the last fused with selection) and the same real entries read,
+plus one windowed re-layout gather per round (<= ``streamed_window_slots``
+padded slots through HBM) — the price of bounded VMEM. Validated
+bit-identical to ``repro.core.sketch`` in interpret mode
+(tests/test_stream_engine.py); this container is CPU-only, TPU is the
+lowering target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.graphs.csr import StreamedFoldPlan, StreamedRound
+from repro.kernels.mg_sketch.fused import (_gather_tile, _interpret_default,
+                                           _mg_fold, _select_rows)
+
+
+def windowed_entries(gather: jnp.ndarray, entry_labels: jnp.ndarray,
+                     entry_weights: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Re-lay flat entry arrays into the plan's windowed layout.
+
+    ``gather`` is a round's ``entry_gather`` [n_windows * W] int32 (source
+    position per windowed slot, -1 = pad). Pad slots become (label -1,
+    weight 0.0) — no-ops for the fold. Returns ([n_windows * W] int32
+    labels, [n_windows * W] float32 weights).
+    """
+    if entry_labels.shape[0] == 0:  # edgeless graph: all slots are pads
+        return (jnp.full(gather.shape, -1, jnp.int32),
+                jnp.zeros(gather.shape, jnp.float32))
+    safe = jnp.maximum(gather, 0)
+    valid = gather >= 0
+    wl = jnp.where(valid, entry_labels.astype(jnp.int32)[safe], -1)
+    ww = jnp.where(valid, entry_weights.astype(jnp.float32)[safe], 0.0)
+    return wl, ww
+
+
+def _stream_fold_kernel(dmax_ref, start_ref, count_ref, wlab_ref, wwgt_ref,
+                        out_k_ref, out_v_ref, *, k: int, chunk: int):
+    """One window step: gather the row tile from the resident window and
+    fold it. ``start_ref`` holds window-relative offsets, so the fused
+    gather phase works unchanged against the [W]-entry window block."""
+    lab, wgt = _gather_tile(start_ref, count_ref, wlab_ref, wwgt_ref, chunk)
+    s_k, s_v = _mg_fold(lab, wgt, k, dmax_ref[0, 0])
+    out_k_ref[...] = s_k
+    out_v_ref[...] = s_v
+
+
+def _stream_select_kernel(dmax_ref, start_ref, count_ref, inc_ref, seed_ref,
+                          wlab_ref, wwgt_ref, out_c_ref, *, k: int,
+                          chunk: int):
+    """Final-round window step: fold + fused move selection (the streaming
+    analogue of ``fused._fused_select_kernel``)."""
+    lab, wgt = _gather_tile(start_ref, count_ref, wlab_ref, wwgt_ref, chunk)
+    s_k, s_v = _mg_fold(lab, wgt, k, dmax_ref[0, 0])
+    inc = inc_ref[0, :][:, None]          # [tile_r, 1] incumbent labels
+    out_c_ref[...] = _select_rows(s_k, s_v, inc, seed_ref[0, 0])[None, :]
+
+
+def stream_fold_round(rnd: StreamedRound, entry_labels: jnp.ndarray,
+                      entry_weights: jnp.ndarray, *, k: int, chunk: int,
+                      interpret: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One streamed dispatch: grid over windows, one W-entry window resident
+    per step.
+
+    ``entry_labels``/``entry_weights`` are the round's flat source arrays
+    (round 0: CSR-order neighbor labels/edge weights; later rounds: the
+    previous round's flattened padded [n_windows * tile_r * k] sketches).
+    Returns padded ([n_windows * tile_r, k] int32, [..., k] float32)
+    sketches in window-slot order (pad rows fold to empty sketches).
+    """
+    n_windows, tile_r = rnd.row_start.shape
+    w = rnd.window_entries
+    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    rows = n_windows * tile_r
+    return pl.pallas_call(
+        functools.partial(_stream_fold_kernel, k=k, chunk=chunk),
+        grid=(n_windows,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start (rel)
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((w,), lambda i: (i,)),            # label window
+            pl.BlockSpec((w,), lambda i: (i,)),            # weight window
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+            jax.ShapeDtypeStruct((rows, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count, wl, ww)
+
+
+def stream_select_round(rnd: StreamedRound, entry_labels: jnp.ndarray,
+                        entry_weights: jnp.ndarray, incumbents: jnp.ndarray,
+                        seed: jnp.ndarray, *, k: int, chunk: int,
+                        interpret: bool) -> jnp.ndarray:
+    """Final-round streamed dispatch: fold + per-row winning label.
+
+    ``incumbents`` [n_windows * tile_r] int32 carries each row slot's
+    current vertex label (-1 on pad slots). Returns the chosen label per
+    row slot [n_windows * tile_r] int32.
+    """
+    n_windows, tile_r = rnd.row_start.shape
+    w = rnd.window_entries
+    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    out = pl.pallas_call(
+        functools.partial(_stream_select_kernel, k=k, chunk=chunk),
+        grid=(n_windows,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start (rel)
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # incumbents
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),        # seed
+            pl.BlockSpec((w,), lambda i: (i,)),            # label window
+            pl.BlockSpec((w,), lambda i: (i,)),            # weight window
+        ],
+        out_specs=pl.BlockSpec((1, tile_r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_windows, tile_r), jnp.int32),
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count,
+      incumbents.reshape(n_windows, tile_r),
+      seed.astype(jnp.int32).reshape(1, 1), wl, ww)
+    return out.reshape(-1)
+
+
+def run_mg_plan_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
+                       entry_weights: jnp.ndarray,
+                       interpret: bool | None = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All fold rounds, one streamed dispatch each.
+
+    ``entry_labels``/``entry_weights`` are the round-0 arrays in CSR order
+    (the same inputs the jnp/pallas/fused engines take). Returns the
+    final-round padded sketches ([last n_windows * tile_r, k] labels,
+    weights) in window-slot order — map to vertices via
+    ``plan.row_to_vertex``.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    labels, weights = entry_labels, entry_weights
+    for rnd in plan.rounds:
+        s_k, s_v = stream_fold_round(rnd, labels, weights, k=plan.k,
+                                     chunk=plan.chunk, interpret=interpret)
+        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    return s_k, s_v
+
+
+def select_best_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
+                       entry_weights: jnp.ndarray, labels: jnp.ndarray,
+                       seed: jnp.ndarray, interpret: bool | None = None
+                       ) -> jnp.ndarray:
+    """Full streamed MG iteration: ``n_rounds`` dispatches, the last fused
+    with move selection. Bit-identical to ``run_mg_plan`` + ``select_best``
+    on the reference backend (and to ``fused.select_best_fused``).
+
+    ``labels`` [N] int32 are the incumbent vertex labels; returns the
+    wanted label per vertex [N] int32 (degree-0 vertices keep theirs).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if plan.n_nodes == 0:
+        return labels
+    el, ew = entry_labels, entry_weights
+    for rnd in plan.rounds[:-1]:
+        s_k, s_v = stream_fold_round(rnd, el, ew, k=plan.k, chunk=plan.chunk,
+                                     interpret=interpret)
+        el, ew = s_k.reshape(-1), s_v.reshape(-1)
+    n = plan.n_nodes
+    rtv = plan.row_to_vertex
+    real = rtv >= 0
+    incumbents = jnp.where(real, labels[jnp.maximum(rtv, 0)], -1)
+    choice = stream_select_round(plan.rounds[-1], el, ew, incumbents, seed,
+                                 k=plan.k, chunk=plan.chunk,
+                                 interpret=interpret)
+    # [N] scatter of per-row winners (pad rows land in the dump slot);
+    # degree-0 vertices keep their label — identical to
+    # choose_from_candidates with an empty candidate set.
+    buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
+    buf = buf.at[jnp.where(real, rtv, n)].set(
+        jnp.where(real, choice, -1))
+    return buf[:n]
