@@ -13,37 +13,42 @@ streamed = one double-buffered window, reported as
 ``stream_peak_resident_bytes``).
 
 ``--engines`` (see ``benchmarks.common.engine_list``) selects which
-registered fold backends the MG method is additionally timed on — e.g.
-``--engines all`` or ``--engines jnp,pallas_stream,auto``. The default
-times the ``jnp`` reference only (the static engine stats are always
-reported); ``auto`` rows also show which backend the policy resolved to.
+registered fold backends the sketch methods are additionally timed on —
+e.g. ``--engines all`` or ``--engines jnp,pallas_stream,auto`` — and
+``--sketch`` (``benchmarks.common.sketch_list``) selects which sketches
+get that sweep (``mg``, ``bm`` or ``all``; unswept sketches run the jnp
+reference only). The default times the ``jnp`` reference only (the
+static engine stats are always reported); ``auto`` rows also show which
+backend the policy resolved to.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import (engine_list, fold_engine_stats,
                                lpa_working_set_bytes,
-                               measured_step_temp_bytes, suite)
+                               measured_step_temp_bytes, sketch_list, suite)
 from repro.core.lpa import LPAConfig, lpa
 from repro.core.modularity import modularity
 
 METHODS = ("exact", "mg", "bm")
 
 
-def run(scale: str = "small", engines: str | None = None):
-    """One row per (graph, method) — plus one per extra MG fold engine.
+def run(scale: str = "small", engines: str | None = None,
+        sketches: str | None = None):
+    """One row per (graph, method) — plus one per extra sketch fold engine.
 
     ``engines``: ``None`` (time the jnp reference only), ``"all"``, or a
     comma-separated subset of the registered engines + ``auto``.
+    ``sketches``: which sketch methods get the engine sweep (``"all"`` or
+    a comma subset of ``mg,bm``; default: ``mg`` when engines are given).
     """
-    mg_engines = engine_list(engines) if engines else ("jnp",)
+    swept = engine_list(engines) if engines else ("jnp",)
+    swept_sketches = sketch_list(sketches) if sketches else ("mg",)
     rows = []
     graphs = suite(scale)
     for gname, g in graphs.items():
         base = None
         for method in METHODS:
-            backends = mg_engines if method == "mg" else ("jnp",)
+            backends = (swept if method in swept_sketches else ("jnp",))
             for backend in backends:
                 cfg = LPAConfig(method=method, rho=2, fold_backend=backend)
                 import time

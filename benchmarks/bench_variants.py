@@ -13,14 +13,12 @@ TPU where the CUDA mechanism has no analogue (DESIGN.md §2):
 from __future__ import annotations
 
 import time
-from typing import Tuple
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import fold_work_volume, suite, time_fn
-from repro.core.lpa import LPAConfig, build_workspace, lpa
+from repro.core.lpa import LPAConfig, lpa
 from repro.core.modularity import modularity
 from repro.core import sketch as sketch_lib
 

@@ -1,0 +1,109 @@
+"""Benchmark regression gate: compare a fresh ``benchmarks.run`` dump
+against the checked-in baseline and fail on per-engine slowdowns.
+
+  PYTHONPATH=src python benchmarks/check_regression.py \
+      --baseline bench_results/results.json --current out/results.json \
+      [--factor 1.5] [--min-seconds 0.05]
+
+Comparison model
+----------------
+CI runners and dev machines differ in absolute speed, so raw wall-clock
+deltas would gate on hardware, not code. Instead every timed row is
+normalized by the SAME run's calibration row — the ``exact`` method on
+the ``jnp`` engine for the same graph (always present in
+``fig7_methods``) — and the gate compares *normalized* runtimes:
+
+    regression  <=>  cur_norm > factor * base_norm
+
+A uniform machine slowdown cancels out; an engine that got slower
+*relative to the exact baseline* does not. (The calibration row itself is
+by construction ungateable — that is the price of machine independence.)
+
+Rows whose baseline runtime is under ``--min-seconds`` are skipped as
+noise. The gate also fails on *coverage loss*: every gateable baseline
+key (bench, graph, method, engine) must still be present in the current
+dump, so an engine silently dropping out of the sweep (or erroring —
+error rows carry no ``runtime_s``) trips CI instead of passing it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+CALIB_METHOD, CALIB_ENGINE = "exact", "jnp"
+
+
+def _key(row: dict) -> tuple:
+    return (row.get("bench"), row.get("graph"), row.get("method"),
+            row.get("engine"))
+
+
+def _timed_rows(rows: list) -> dict:
+    return {_key(r): float(r["runtime_s"]) for r in rows
+            if r.get("runtime_s") is not None and r.get("graph")}
+
+
+def _normalized(times: dict) -> dict:
+    """runtime / same-run exact-jnp runtime of the same (bench, graph)."""
+    calib = {(b, g): t for (b, g, m, e), t in times.items()
+             if m == CALIB_METHOD and e == CALIB_ENGINE}
+    out = {}
+    for (b, g, m, e), t in times.items():
+        if (m, e) == (CALIB_METHOD, CALIB_ENGINE):
+            continue
+        c = calib.get((b, g))
+        if c and c > 0:
+            out[(b, g, m, e)] = t / c
+    return out
+
+
+def check(baseline_rows: list, current_rows: list, factor: float = 1.5,
+          min_seconds: float = 0.05) -> list:
+    """Return a list of human-readable failures (empty = gate passes)."""
+    base_t, cur_t = _timed_rows(baseline_rows), _timed_rows(current_rows)
+    base_n, cur_n = _normalized(base_t), _normalized(cur_t)
+    failures = []
+    for key, bn in sorted(base_n.items()):
+        if base_t[key] < min_seconds:
+            continue  # too small to gate on
+        if key not in cur_n:
+            failures.append(f"MISSING  {key}: baseline ran it "
+                            f"({base_t[key]:.3f}s), current did not")
+            continue
+        cn = cur_n[key]
+        if cn > factor * bn:
+            failures.append(
+                f"REGRESSED {key}: normalized {cn:.3f} vs baseline "
+                f"{bn:.3f} (> {factor}x); raw {cur_t[key]:.3f}s vs "
+                f"{base_t[key]:.3f}s")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="bench_results/results.json")
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--factor", type=float, default=1.5,
+                    help="max allowed normalized-runtime ratio vs baseline")
+    ap.add_argument("--min-seconds", type=float, default=0.05,
+                    help="skip rows whose baseline runtime is below this")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    failures = check(baseline, current, args.factor, args.min_seconds)
+    n_gated = len(_normalized(_timed_rows(baseline)))
+    if failures:
+        print(f"benchmark regression gate FAILED "
+              f"({len(failures)}/{n_gated} keys):")
+        for line in failures:
+            print("  " + line)
+        return 1
+    print(f"benchmark regression gate passed ({n_gated} keys within "
+          f"{args.factor}x of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

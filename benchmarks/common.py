@@ -8,7 +8,7 @@ from typing import Callable, Dict
 import numpy as np
 import jax
 
-from repro.core.lpa import LPAConfig, LPAWorkspace, build_workspace
+from repro.core.lpa import LPAConfig, build_workspace
 from repro.graphs.csr import CSRGraph, plan_padded_entries
 
 
@@ -96,6 +96,23 @@ def engine_list(spec: str | None = None) -> tuple:
     return chosen
 
 
+SKETCHES = ("mg", "bm")
+
+
+def sketch_list(spec: str | None = None) -> tuple:
+    """Parse a ``--sketch`` spec: ``"all"`` / ``None`` (both paper
+    sketches) or a comma-separated subset of ``mg``/``bm``. Selected
+    sketches get the full ``--engines`` backend sweep; unselected ones are
+    timed on the ``jnp`` reference only."""
+    if spec in (None, "", "all"):
+        return SKETCHES
+    chosen = tuple(s.strip() for s in spec.split(",") if s.strip())
+    bad = [c for c in chosen if c not in SKETCHES]
+    if bad:
+        raise ValueError(f"unknown sketches {bad}; expected {SKETCHES}")
+    return chosen
+
+
 def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     """Static dispatch/traffic accounting of the MG fold engines.
 
@@ -125,6 +142,11 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
         by the config's ``stream_window``, independent of |E|.
       auto_engine                : what ``fold_backend="auto"`` resolves to
         for this graph under the config's VMEM budget.
+      bm_dispatches_per_iter_*   : dispatch economics of the BM fold (one
+        round-0-only pass): per round-0 width bucket on ``pallas``, ONE on
+        ``pallas_fused``/``pallas_stream``.
+      rescan_dispatches_per_iter_* : dispatch economics of the double-scan
+        MG iteration (fold + in-engine second pass).
     """
     import numpy as np
     from repro.core.fold_engine import get_engine, resolve_auto
@@ -140,15 +162,29 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     stream_plan = build_streamed_fold_plan(
         degrees, k=config.k, chunk=config.chunk,
         window_entries=config.stream_window)
+    pallas = get_engine("pallas")
+    fused = get_engine("pallas_fused")
+    stream = get_engine("pallas_stream")
     return {
         "fold_rounds": plan.n_rounds,
         "dispatches_per_iter_pallas":
-            get_engine("pallas").dispatches_per_iter(plan, None),
+            pallas.dispatches_per_iter(plan, None),
         "dispatches_per_iter_fused":
-            get_engine("pallas_fused").dispatches_per_iter(plan, fused_plan),
+            fused.dispatches_per_iter(plan, fused_plan),
         "dispatches_per_iter_stream":
-            get_engine("pallas_stream").dispatches_per_iter(plan,
-                                                            stream_plan),
+            stream.dispatches_per_iter(plan, stream_plan),
+        "bm_dispatches_per_iter_pallas":
+            pallas.bm_dispatches_per_iter(plan, None),
+        "bm_dispatches_per_iter_fused":
+            fused.bm_dispatches_per_iter(plan, fused_plan),
+        "bm_dispatches_per_iter_stream":
+            stream.bm_dispatches_per_iter(plan, stream_plan),
+        "rescan_dispatches_per_iter_pallas":
+            pallas.rescan_dispatches_per_iter(plan, None),
+        "rescan_dispatches_per_iter_fused":
+            fused.rescan_dispatches_per_iter(plan, fused_plan),
+        "rescan_dispatches_per_iter_stream":
+            stream.rescan_dispatches_per_iter(plan, stream_plan),
         "padded_entries": plan_padded_entries(plan),
         "fused_hbm_entries": fused_hbm_entries(fused_plan),
         "fused_resident_entry_bytes": 8 * int(degrees.sum()),

@@ -49,6 +49,10 @@ def main() -> int:
                     help="fold engines to time where supported: 'all' or a "
                          "comma list from the registry + 'auto' "
                          "(e.g. jnp,pallas_stream,auto)")
+    ap.add_argument("--sketch", default=None,
+                    help="sketch methods to sweep across --engines where "
+                         "supported: 'all' or a comma list of mg,bm "
+                         "(default: mg only)")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -62,10 +66,12 @@ def main() -> int:
             import importlib
             import inspect
             mod = importlib.import_module(module)
+            params = inspect.signature(mod.run).parameters
             kwargs = {}
-            if (args.engines
-                    and "engines" in inspect.signature(mod.run).parameters):
+            if args.engines and "engines" in params:
                 kwargs["engines"] = args.engines
+            if args.sketch and "sketches" in params:
+                kwargs["sketches"] = args.sketch
             rows = mod.run(args.scale, **kwargs)
         except Exception as e:  # noqa: BLE001 — report and continue
             import traceback

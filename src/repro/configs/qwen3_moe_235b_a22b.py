@@ -1,7 +1,7 @@
 """qwen3-moe-235b-a22b [hf:Qwen/Qwen3-30B-A3B family, scaled per assignment]:
 94L d_model=4096 64H (GQA kv=4) expert_ff=1536 vocab=151936, MoE 128e top-8,
 qk-norm."""
-from repro.configs.registry import ArchSpec, ShapeCell, _lm_cells, register
+from repro.configs.registry import ArchSpec, _lm_cells, register
 from repro.models.moe import MoEConfig
 from repro.models.transformer import TransformerConfig
 

@@ -7,7 +7,7 @@ Select with ``--arch <id>`` in launch/dryrun.py and launch/train.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,7 +23,6 @@ empty sketches (weight 0 entries are no-ops by construction).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Tuple
 
 import numpy as np
@@ -78,6 +77,11 @@ class DistLPAWorkspace:
     stream_counts: Tuple[jnp.ndarray, ...] | None = None   # per round [P, n_win_r, tile_r]
     stream_dmax: Tuple[jnp.ndarray, ...] | None = None     # per round [P, n_win_r, 1]
     stream_final_rv: jnp.ndarray | None = None  # [P, n_win_last * tile_r] local vertex (-1 pad)
+    # round-0 row -> local vertex maps, one per plan encoding (the BM fold
+    # walks only round 0; -1 on pad rows/slots):
+    row_vertex0: jnp.ndarray | None = None  # [P, R_pad_0] bucketed rows
+    fused_rv0: jnp.ndarray | None = None    # [P, S_0 * tile_r] fused rows
+    stream_rv0: jnp.ndarray | None = None   # [P, n_win_0 * tile_r] slots
 
     def tree_flatten(self):
         children = (self.nbr_pos, self.weights, self.round_gathers,
@@ -85,7 +89,8 @@ class DistLPAWorkspace:
                     self.hub_idx, self.fused_starts, self.fused_counts,
                     self.fused_dmax, self.stream_gathers, self.stream_starts,
                     self.stream_counts, self.stream_dmax,
-                    self.stream_final_rv)
+                    self.stream_final_rv, self.row_vertex0, self.fused_rv0,
+                    self.stream_rv0)
         return children, (self.n_nodes, self.v_pad, self.k, self.chunk,
                           self.h_pad, self.hub_pad, self.fused_entries)
 
@@ -97,7 +102,8 @@ class DistLPAWorkspace:
                    fused_dmax=children[9], fused_entries=aux[6],
                    stream_gathers=children[10], stream_starts=children[11],
                    stream_counts=children[12], stream_dmax=children[13],
-                   stream_final_rv=children[14])
+                   stream_final_rv=children[14], row_vertex0=children[15],
+                   fused_rv0=children[16], stream_rv0=children[17])
 
     @property
     def n_shards(self) -> int:
@@ -215,17 +221,21 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
     r_pads = per_round_rows.max(axis=0).clip(min=1)
     round_gathers = []
     final_row_vertex = np.full((n_shards, int(r_pads[-1])), PAD, dtype=np.int32)
+    row_vertex0 = np.full((n_shards, int(r_pads[0])), PAD, dtype=np.int32)
     for r in range(n_rounds):
         g = np.full((n_shards, int(r_pads[r]), chunk), PAD, dtype=np.int32)
         for p in range(n_shards):
             gather, row_vertex = shard_plans[p][r][:2]
             g[p, :len(gather)] = gather
+            if r == 0:
+                row_vertex0[p, :len(row_vertex)] = row_vertex
             if r == n_rounds - 1:
                 final_row_vertex[p, :len(row_vertex)] = row_vertex
         round_gathers.append(jnp.asarray(g))
 
     fused_starts = fused_counts = fused_dmax = None
     fused_entries: tuple = ()
+    fused_rv0 = None
     if fused:
         fused_starts, fused_counts, fused_dmax, entries = [], [], [], []
         n_entries = m_pad
@@ -234,6 +244,10 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
             n_steps = -(-rows // tile_r)
             rs = np.zeros((n_shards, n_steps * tile_r), np.int32)
             rc = np.zeros((n_shards, n_steps * tile_r), np.int32)
+            if r == 0:  # fused round-0 rows share the bucketed row order
+                fv = np.full((n_shards, n_steps * tile_r), PAD, np.int32)
+                fv[:, :row_vertex0.shape[1]] = row_vertex0
+                fused_rv0 = jnp.asarray(fv)
             for p in range(n_shards):
                 _, _, row_start, row_count = shard_plans[p][r]
                 rs[p, :len(row_start)] = row_start
@@ -251,7 +265,7 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         fused_entries = tuple(entries)
 
     stream_gathers = stream_starts = stream_counts = stream_dmax = None
-    stream_final_rv = None
+    stream_final_rv = stream_rv0 = None
     if stream:
         from repro.graphs.csr import build_streamed_rounds
         per_shard = []
@@ -292,6 +306,14 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         for p, (_, rtv) in enumerate(per_shard):
             frv[p, :len(rtv)] = rtv
         stream_final_rv = jnp.asarray(frv)
+        # round-0 window slot -> local vertex (appending all-pad windows
+        # never moves a real slot, so the per-shard slot maps pad safely)
+        n_slots0 = sg[0].shape[1] * tile_r
+        srv0 = np.full((n_shards, n_slots0), PAD, dtype=np.int32)
+        for p, (rounds_np, _) in enumerate(per_shard):
+            rv = rounds_np[0]["row_to_vertex"]
+            srv0[p, :len(rv)] = rv
+        stream_rv0 = jnp.asarray(srv0)
 
     send_idx = hub_idx_arr = None
     h_pad = hub_pad = 0
@@ -372,14 +394,16 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         fused_dmax=fused_dmax, fused_entries=fused_entries,
         stream_gathers=stream_gathers, stream_starts=stream_starts,
         stream_counts=stream_counts, stream_dmax=stream_dmax,
-        stream_final_rv=stream_final_rv)
+        stream_final_rv=stream_final_rv,
+        row_vertex0=jnp.asarray(row_vertex0), fused_rv0=fused_rv0,
+        stream_rv0=stream_rv0)
 
 
 def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed, *, k, v_pad, axis_names, fold_tile,
                 send_idx=None, hub_idx=None, fused_meta=None,
                 fused_entries=(), chunk=0, stream_meta=None,
-                stream_frv=None):
+                stream_frv=None, method="mg", bm_rv0=None):
     """Per-shard body of one distributed LPA iteration (runs inside shard_map).
 
     Shapes here are the *local* block shapes (leading P axis stripped).
@@ -388,6 +412,12 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     ``stream_meta`` (per round (gather, starts, counts, dmax) windowed
     blocks) + ``stream_frv`` (final row slot -> local vertex) switch it to
     the HBM-streaming windowed kernel — engine="pallas_stream".
+    ``method="bm"`` runs the Boyer-Moore sketch instead of MG: only round
+    0 is folded (one fused/streamed dispatch, or the bucketed tile fold),
+    per-row partial states merge shard-locally with the max-reduce of
+    ``sketch.bm_merge_rows`` — every vertex's rows live on its own shard,
+    so no extra collective is needed. ``bm_rv0`` carries the matching
+    round-0 row -> local vertex map.
     """
     nbr_pos = nbr_pos[0]          # [M_pad]
     edge_w = edge_w[0]
@@ -414,6 +444,43 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     safe = jnp.maximum(nbr_pos, 0)
     entry_labels = jnp.where(nbr_pos >= 0, label_table[safe], -1)
     entry_weights = jnp.where(nbr_pos >= 0, edge_w, 0.0)
+
+    if method == "bm":
+        rv0 = bm_rv0[0]
+        # init + merge go through the same sketch helpers as the
+        # single-host engines (fused.run_bm_plan_generic) — only the
+        # engine-specific fold call differs per branch below
+        init = sketch_lib.bm_init_rows(rv0, labels)
+        if stream_meta is not None:
+            from repro.graphs.csr import StreamedRound
+            from repro.kernels.mg_sketch.fused import _interpret_default
+            from repro.kernels.mg_sketch.streaming import bm_fold_round_stream
+            g, rs, rc, dm = stream_meta[0]
+            rnd = StreamedRound(entry_gather=g[0].reshape(-1),
+                                row_start=rs[0], row_count=rc[0],
+                                step_dmax=dm[0], n_rows=0, n_entries_in=0,
+                                window_entries=g.shape[-1])
+            ck, wk = bm_fold_round_stream(rnd, entry_labels, entry_weights,
+                                          init, chunk=chunk,
+                                          interpret=_interpret_default())
+        elif fused_meta is not None:
+            from repro.graphs.csr import FusedRound
+            from repro.kernels.mg_sketch.fused import (_interpret_default,
+                                                       bm_fold_round_fused)
+            rs, rc, dm = fused_meta[0]
+            rnd = FusedRound(row_start=rs[0], row_count=rc[0],
+                             step_dmax=dm[0], n_rows=0,
+                             n_entries_in=fused_entries[0])
+            ck, wk = bm_fold_round_fused(rnd, entry_labels, entry_weights,
+                                         init, chunk=chunk,
+                                         interpret=_interpret_default())
+        else:
+            gl, gw = sketch_lib._gather_entries(round_gathers[0],
+                                                entry_labels, entry_weights)
+            ck, wk = fold_tile(gl, gw, init)
+        best_c, _ = sketch_lib.bm_merge_rows(v_pad, labels, rv0, ck, wk)
+        want = jnp.where(best_c >= 0, best_c, labels)
+        return _move_epilogue(want, labels, pick_less, axis_names)
 
     if stream_meta is not None:
         # streaming engine: one dispatch per round, one window of entries
@@ -465,6 +532,13 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     cand_c = jnp.where(cand_w > 0, cand_c, -1)
 
     want = sketch_lib.choose_from_candidates(cand_c, cand_w, labels, seed)
+    return _move_epilogue(want, labels, pick_less, axis_names)
+
+
+def _move_epilogue(want, labels, pick_less, axis_names):
+    """Shared per-shard move rule: apply the Pick-Less/changed gating to
+    the wanted labels (pad slots excluded) and psum the global ΔN. One
+    copy for every method — the MG and BM paths must never drift."""
     allowed = jnp.where(pick_less, want < labels, want != labels)
     is_real = labels >= 0
     new_labels = jnp.where(allowed & is_real, want, labels)
@@ -474,7 +548,8 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
 
 
 def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
-                  fold_tile=None, engine: str | None = None):
+                  fold_tile=None, engine: str | None = None,
+                  method: str = "mg"):
     """Build the shard_map'd single-iteration function for ``mesh``.
 
     Returns step(ws_arrays..., labels [P, V_pad], pick_less, seed) ->
@@ -485,14 +560,22 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     repro.core.fold_engine); "pallas_fused" needs a workspace built with
     ``fused=True``, "pallas_stream" one built with ``stream=True``. An
     explicit ``fold_tile`` overrides the engine's tile fold.
+
+    ``method`` selects the sketch ("mg" | "bm") uniformly with the
+    single-host driver; both run on every engine (halo or full-gather
+    label exchange is orthogonal).
     """
     axis_names = tuple(mesh.axis_names) if axis_names is None else axis_names
+    if method not in ("mg", "bm"):
+        raise ValueError(f"unknown method {method!r}; expected 'mg' | 'bm'")
     fused = engine == "pallas_fused"
     stream = engine == "pallas_stream"
     if engine is not None and not (fused or stream) and fold_tile is None:
         from repro.core.fold_engine import get_engine
-        fold_tile = get_engine(engine).mg_fold_tile
-    fold_tile = fold_tile or sketch_lib.mg_fold_tile
+        eng = get_engine(engine)
+        fold_tile = eng.bm_fold_tile if method == "bm" else eng.mg_fold_tile
+    fold_tile = fold_tile or (sketch_lib.bm_fold_tile if method == "bm"
+                              else sketch_lib.mg_fold_tile)
     if fused and ws.fused_starts is None:
         raise ValueError("engine='pallas_fused' requires "
                          "build_dist_workspace(..., fused=True)")
@@ -510,7 +593,7 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
         args = [nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed]
         kw = dict(k=ws.k, v_pad=ws.v_pad, axis_names=axis_names,
-                  fold_tile=fold_tile)
+                  fold_tile=fold_tile, method=method)
         if fused:
             kw.update(fused_entries=ws.fused_entries, chunk=ws.chunk)
         if stream:
@@ -532,6 +615,12 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
             in_specs += [tuple([(spec, spec, spec, spec)] * n_rounds), spec]
             args += [meta, ws.stream_final_rv]
             extra_names += ["stream_meta", "stream_frv"]
+        if method == "bm":
+            rv0 = (ws.stream_rv0 if stream
+                   else ws.fused_rv0 if fused else ws.row_vertex0)
+            in_specs += [spec]
+            args += [rv0]
+            extra_names += ["bm_rv0"]
 
         def body(*a):
             return _shard_move(*a[:7], **dict(zip(extra_names, a[7:])),
@@ -552,9 +641,13 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
 
 
 def dist_lpa(mesh, ws: DistLPAWorkspace, rho: int = 8, tau: float = 0.05,
-             max_iters: int = 20, engine: str | None = None):
-    """Run distributed LPA to convergence. Returns (labels [N], iterations)."""
-    step = jax.jit(dist_lpa_step(mesh, ws, engine=engine))
+             max_iters: int = 20, engine: str | None = None,
+             method: str = "mg"):
+    """Run distributed LPA to convergence. Returns (labels [N], iterations).
+
+    ``method`` selects the sketch ("mg" | "bm"), ``engine`` the fold
+    backend — both uniform with the single-host driver."""
+    step = jax.jit(dist_lpa_step(mesh, ws, engine=engine, method=method))
     labels = ws.init_labels
     n = ws.n_nodes
     it = 0

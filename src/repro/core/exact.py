@@ -8,8 +8,6 @@ contrasts against, and serves as the quality oracle for the sketch methods.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -1,8 +1,17 @@
-"""FoldEngine: uniform backend selection for the MG/BM sketch folds.
+"""FoldEngine: uniform backend selection for the sketch folds.
 
-One MG iteration = fold the neighbor entries into per-vertex k-slot
-sketches, then pick each vertex's winning label. Four interchangeable
-engines compute it:
+Every engine computes BOTH of the paper's sketches through the same
+interface — selection is per ``(sketch, backend)``:
+
+  * **MG** (``mg_candidates``/``mg_select``/``mg_rescan``): fold the
+    neighbor entries into per-vertex k-slot Misra-Gries sketches, then pick
+    each vertex's winning label (optionally re-scoring the candidates with
+    the exact double-scan pass, paper §4.4);
+  * **BM** (``bm_fold_plan``): fold round 0 into per-row weighted
+    Boyer-Moore majority states and max-reduce-merge them per vertex
+    (paper Alg. 3 / §4.7).
+
+Four interchangeable backends compute them:
 
   * ``jnp``           — dense reference (repro.core.sketch); also hosts the
                         ``exact_weighted`` MG variant (DESIGN.md §8.4).
@@ -12,16 +21,18 @@ engines compute it:
                         pre-fusion baseline.
   * ``pallas_fused``  — whole-round fused kernels with an in-kernel gather
                         and the final round fused with move selection:
-                        ``n_rounds`` dispatches per iteration instead of
-                        ``O(rounds x buckets)`` (kernels.mg_sketch.fused).
-                        Keeps the flat entry arrays VMEM-resident, so a
-                        single core is bounded by the VMEM budget (round 0
-                        = |E| entries at ~8 bytes each).
+                        ``n_rounds`` dispatches per MG iteration instead of
+                        ``O(rounds x buckets)``, ONE dispatch for the BM
+                        fold and ONE for the rescan second pass
+                        (kernels.mg_sketch.fused). Keeps the flat entry
+                        arrays VMEM-resident, so a single core is bounded
+                        by the VMEM budget (round 0 = |E| entries at ~8
+                        bytes each).
   * ``pallas_stream`` — the fused dataflow with every round streamed
                         through fixed-size double-buffered HBM->VMEM entry
                         windows (kernels.mg_sketch.streaming): same
-                        dispatch count, O(window) residency — for graphs
-                        past the fused VMEM budget (DESIGN.md §10).
+                        dispatch counts, O(window) residency — for graphs
+                        past the fused VMEM budget (DESIGN.md §10/§11).
 
 ``"auto"`` resolves to ``pallas_fused`` or ``pallas_stream`` per graph by
 checking the round-0 entry volume against a configurable VMEM budget
@@ -29,9 +40,10 @@ checking the round-0 entry volume against a configurable VMEM budget
 
 ``repro.core.lpa``, ``repro.core.distributed`` and the benchmarks all
 resolve engines through :func:`get_engine`, so backend choice is a config
-string everywhere. All engines are bit-identical on the paper's MG rule
-(validated in tests/test_fused_engine.py, tests/test_stream_engine.py and
-tests/test_kernels.py).
+string everywhere. All engines are bit-identical on the paper's MG, BM
+and double-scan rules (validated in tests/test_fused_engine.py,
+tests/test_stream_engine.py, tests/test_bm_engines.py,
+tests/test_rescan_engines.py and tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -40,9 +52,8 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core import sketch as sketch_lib
-from repro.graphs.csr import (FoldPlan, FusedFoldPlan, StreamedFoldPlan,
-                              fused_dispatches, plan_dispatches,
-                              streamed_dispatches)
+from repro.graphs.csr import (FoldPlan, fused_dispatches, plan_dispatches,
+                              plan_round0_dispatches, streamed_dispatches)
 
 #: Default VMEM budget (bytes) the ``auto`` policy allows the fused engine's
 #: resident round-0 entry arrays (labels int32 + weights float32 = 8
@@ -54,6 +65,17 @@ DEFAULT_VMEM_BUDGET_BYTES = 8 * 2**20
 #: HBM bytes per round-0 entry held resident by the fused engine
 #: (int32 label + float32 weight).
 _BYTES_PER_ENTRY = 8
+
+
+
+def _require_plan(aux_plan, engine: str, plan_name: str):
+    """Guard for the plan-consuming engines: the aux plan is built by
+    build_workspace exactly when the config selects the engine."""
+    if aux_plan is None:
+        raise ValueError(f"{engine} engine needs a {plan_name} "
+                         f"(build_workspace constructs one when "
+                         f"fold_backend={engine!r})")
+    return aux_plan
 
 
 class FoldEngine:
@@ -90,8 +112,37 @@ class FoldEngine:
         ([N] int32)."""
         raise NotImplementedError
 
+    def mg_rescan(self, plan: FoldPlan, aux_plan,
+                  entry_labels, entry_weights, labels, seed) -> jnp.ndarray:
+        """Full double-scan iteration (paper §4.4): MG fold, then re-read
+        the round-0 neighborhood to score the k candidates *exactly*, then
+        select -> wanted label per vertex ([N] int32). Bit-identical to
+        ``sketch.run_mg_plan`` + ``sketch.rescan_candidates`` on every
+        engine."""
+        raise NotImplementedError
+
+    # -- plan-level BM iteration ------------------------------------------
+    def bm_fold_plan(self, plan: FoldPlan, aux_plan,
+                     entry_labels, entry_weights, labels
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """νBM iteration core: fold round 0 into per-row weighted
+        Boyer-Moore partial states (incumbent-initialized, paper Alg. 3
+        l. 13) and max-reduce-merge them per vertex. Returns per-vertex
+        ([N] majority label, -1 when the vertex has no entries; [N] vote
+        weight). Bit-identical to ``sketch.run_bm_plan`` on every
+        engine."""
+        raise NotImplementedError
+
     def dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
         """Pallas kernel dispatches one MG iteration costs on this engine."""
+        raise NotImplementedError
+
+    def bm_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
+        """Pallas kernel dispatches one BM iteration costs on this engine."""
+        raise NotImplementedError
+
+    def rescan_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
+        """Pallas kernel dispatches one double-scan MG iteration costs."""
         raise NotImplementedError
 
 
@@ -124,8 +175,26 @@ class JnpEngine(FoldEngine):
                                           fold_tile=self.mg_fold_tile)
         return sketch_lib.select_best(plan, s_k, s_v, labels, seed)
 
+    def mg_rescan(self, plan, fused_plan, entry_labels, entry_weights,
+                  labels, seed):
+        s_k, _ = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
+                                        fold_tile=self.mg_fold_tile)
+        return sketch_lib.rescan_candidates(plan, s_k, entry_labels,
+                                            entry_weights, labels, seed)
+
+    def bm_fold_plan(self, plan, fused_plan, entry_labels, entry_weights,
+                     labels):
+        return sketch_lib.run_bm_plan(plan, entry_labels, entry_weights,
+                                      labels, fold_tile=self.bm_fold_tile)
+
     def dispatches_per_iter(self, plan, fused_plan):
         return 0  # pure XLA — no pallas dispatches
+
+    def bm_dispatches_per_iter(self, plan, fused_plan):
+        return 0
+
+    def rescan_dispatches_per_iter(self, plan, fused_plan):
+        return 0
 
 
 class PallasEngine(FoldEngine):
@@ -153,19 +222,39 @@ class PallasEngine(FoldEngine):
                                           fold_tile=self.mg_fold_tile)
         return sketch_lib.select_best(plan, s_k, s_v, labels, seed)
 
+    def mg_rescan(self, plan, fused_plan, entry_labels, entry_weights,
+                  labels, seed):
+        # the second (re-scoring) scan is an XLA pass over the bucketed
+        # round-0 tiles; only the MG fold itself dispatches kernels here
+        s_k, _ = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
+                                        fold_tile=self.mg_fold_tile)
+        return sketch_lib.rescan_candidates(plan, s_k, entry_labels,
+                                            entry_weights, labels, seed)
+
+    def bm_fold_plan(self, plan, fused_plan, entry_labels, entry_weights,
+                     labels):
+        return sketch_lib.run_bm_plan(plan, entry_labels, entry_weights,
+                                      labels, fold_tile=self.bm_fold_tile)
+
     def dispatches_per_iter(self, plan, fused_plan):
         return plan_dispatches(plan)  # one per bucket per round
 
+    def bm_dispatches_per_iter(self, plan, fused_plan):
+        return plan_round0_dispatches(plan)  # one per round-0 bucket
+
+    def rescan_dispatches_per_iter(self, plan, fused_plan):
+        return plan_dispatches(plan)  # fold kernels; the rescan is XLA
+
 
 class PallasFusedEngine(FoldEngine):
-    """Whole-round fused kernels — see kernels.mg_sketch.fused."""
+    """Whole-round fused kernels — see kernels.mg_sketch.fused. MG, BM and
+    the rescan second pass all run plan-level fused dispatches; the tile
+    folds below are kept for ad-hoc tile-level callers only."""
 
     name = "pallas_fused"
     uses_fused_plan = True
 
     def mg_fold_tile(self, labels, weights, k):
-        # tile-level callers (BM merge path) share the per-bucket kernel;
-        # fusion applies to the plan-level MG walk below.
         from repro.kernels.mg_sketch import ops as kops
         return kops.mg_fold_tile_pallas(labels, weights, k)
 
@@ -175,10 +264,7 @@ class PallasFusedEngine(FoldEngine):
 
     def mg_candidates(self, plan, fused_plan, entry_labels, entry_weights):
         from repro.kernels.mg_sketch.fused import run_mg_plan_fused
-        if fused_plan is None:
-            raise ValueError("pallas_fused engine needs a FusedFoldPlan "
-                             "(build_workspace constructs one when "
-                             "fold_backend='pallas_fused')")
+        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
         s_k, s_v = run_mg_plan_fused(fused_plan, entry_labels, entry_weights)
         return _scatter_padded_rows(fused_plan.n_nodes, fused_plan.k,
                                     fused_plan.row_to_vertex, s_k, s_v)
@@ -186,15 +272,33 @@ class PallasFusedEngine(FoldEngine):
     def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
                   labels, seed):
         from repro.kernels.mg_sketch.fused import select_best_fused
-        if fused_plan is None:
-            raise ValueError("pallas_fused engine needs a FusedFoldPlan "
-                             "(build_workspace constructs one when "
-                             "fold_backend='pallas_fused')")
+        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
         return select_best_fused(fused_plan, entry_labels, entry_weights,
                                  labels, seed)
 
+    def mg_rescan(self, plan, fused_plan, entry_labels, entry_weights,
+                  labels, seed):
+        from repro.kernels.mg_sketch.fused import rescan_select_fused
+        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
+        return rescan_select_fused(fused_plan, entry_labels, entry_weights,
+                                   labels, seed)
+
+    def bm_fold_plan(self, plan, fused_plan, entry_labels, entry_weights,
+                     labels):
+        from repro.kernels.mg_sketch.fused import run_bm_plan_fused
+        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
+        return run_bm_plan_fused(fused_plan, entry_labels, entry_weights,
+                                 labels)
+
     def dispatches_per_iter(self, plan, fused_plan):
         return fused_dispatches(fused_plan)  # n_rounds (last one selects)
+
+    def bm_dispatches_per_iter(self, plan, fused_plan):
+        return 1  # the BM fold only ever walks round 0
+
+    def rescan_dispatches_per_iter(self, plan, fused_plan):
+        # all fold rounds + one in-kernel rescan of round 0
+        return fused_dispatches(fused_plan) + 1
 
 
 def _scatter_padded_rows(n: int, k: int, row_to_vertex, s_k, s_v
@@ -225,8 +329,8 @@ class PallasStreamEngine(FoldEngine):
     uses_stream_plan = True
 
     def mg_fold_tile(self, labels, weights, k):
-        # tile-level callers (BM merge path) share the per-bucket kernel;
-        # streaming applies to the plan-level MG walk below.
+        # tile-level callers share the per-bucket kernel; MG, BM and the
+        # rescan second pass all stream plan-level windowed dispatches.
         from repro.kernels.mg_sketch import ops as kops
         return kops.mg_fold_tile_pallas(labels, weights, k)
 
@@ -236,10 +340,7 @@ class PallasStreamEngine(FoldEngine):
 
     def mg_candidates(self, plan, stream_plan, entry_labels, entry_weights):
         from repro.kernels.mg_sketch.streaming import run_mg_plan_stream
-        if stream_plan is None:
-            raise ValueError("pallas_stream engine needs a StreamedFoldPlan "
-                             "(build_workspace constructs one when "
-                             "fold_backend='pallas_stream')")
+        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
         s_k, s_v = run_mg_plan_stream(stream_plan, entry_labels,
                                       entry_weights)
         return _scatter_padded_rows(stream_plan.n_nodes, stream_plan.k,
@@ -248,15 +349,33 @@ class PallasStreamEngine(FoldEngine):
     def mg_select(self, plan, stream_plan, entry_labels, entry_weights,
                   labels, seed):
         from repro.kernels.mg_sketch.streaming import select_best_stream
-        if stream_plan is None:
-            raise ValueError("pallas_stream engine needs a StreamedFoldPlan "
-                             "(build_workspace constructs one when "
-                             "fold_backend='pallas_stream')")
+        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
         return select_best_stream(stream_plan, entry_labels, entry_weights,
                                   labels, seed)
 
+    def mg_rescan(self, plan, stream_plan, entry_labels, entry_weights,
+                  labels, seed):
+        from repro.kernels.mg_sketch.streaming import rescan_select_stream
+        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
+        return rescan_select_stream(stream_plan, entry_labels,
+                                    entry_weights, labels, seed)
+
+    def bm_fold_plan(self, plan, stream_plan, entry_labels, entry_weights,
+                     labels):
+        from repro.kernels.mg_sketch.streaming import run_bm_plan_stream
+        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
+        return run_bm_plan_stream(stream_plan, entry_labels, entry_weights,
+                                  labels)
+
     def dispatches_per_iter(self, plan, stream_plan):
         return streamed_dispatches(stream_plan)  # n_rounds (last selects)
+
+    def bm_dispatches_per_iter(self, plan, stream_plan):
+        return 1  # one dispatch; the round-0 window grid lives inside it
+
+    def rescan_dispatches_per_iter(self, plan, stream_plan):
+        # all fold rounds + one windowed in-kernel rescan of round 0
+        return streamed_dispatches(stream_plan) + 1
 
 
 #: Concrete fold backends, resolvable by name. ``"auto"`` additionally

@@ -12,13 +12,15 @@ iteration 0 (a vertex may only adopt a *smaller* label while PL is active);
 convergence when the changed fraction drops below ``tau`` in a non-PL
 iteration; hard cap ``max_iters``.
 
-The MG fold backend is a config string resolved through
+The sketch fold backend is a config string resolved through
 ``repro.core.fold_engine`` ("jnp" | "pallas" | "pallas_fused" |
-"pallas_stream" | "auto" — the fused engine runs one kernel dispatch per
-fold round, the last fused with move selection, DESIGN.md §9; the
-streaming engine keeps that dispatch structure while bounding VMEM
-residency to fixed entry windows, DESIGN.md §10; "auto" picks between
-them from the round-0 entry volume vs ``vmem_budget_bytes``).
+"pallas_stream" | "auto") and applies uniformly to every sketch: the MG
+fold (one fused dispatch per round, the last fused with move selection,
+DESIGN.md §9), the BM fold and the rescan second pass (one dispatch
+each on the fused/streamed engines, DESIGN.md §11). The streaming
+engine keeps the fused dispatch structure while bounding VMEM residency
+to fixed entry windows (DESIGN.md §10); "auto" picks between fused and
+streamed from the round-0 entry volume vs ``vmem_budget_bytes``.
 
 Deviation from the paper (documented in DESIGN.md §8): iterations are
 synchronous (pure-functional JAX) rather than asynchronous in-place. The
@@ -38,7 +40,6 @@ from typing import Callable, Literal, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import sketch as sketch_lib
 from repro.core.exact import exact_choose
 from repro.core.fold_engine import get_engine, resolve_auto
 from repro.graphs.csr import (CSRGraph, FoldPlan, FusedFoldPlan,
@@ -80,8 +81,10 @@ class LPAWorkspace:
 
     ``fused_plan``/``stream_plan`` are only built when the config selects
     the corresponding backend ("auto" resolves first, then builds exactly
-    one of them); the bucketed ``plan`` is always present — BM folds and
-    the rescan ablation consume it on every backend.
+    one of them); the aux plan serves every sketch — MG, BM and the rescan
+    ablation all fold through it on the fused/streamed engines. The
+    bucketed ``plan`` is always present (the jnp/pallas engines and the
+    reference oracles consume it).
     """
 
     graph: CSRGraph
@@ -139,28 +142,24 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
                         n_entries=plan.rounds[0].n_entries_in,
                         vmem_budget_bytes=config.vmem_budget_bytes)
 
+    aux = ws.stream_plan if engine.uses_stream_plan else ws.fused_plan
     if config.method == "exact":
         want = exact_choose(ws.edge_src, nbr_labels, graph.weights,
                             graph.n_nodes, labels, seed)
     elif config.method == "mg":
         if config.rescan:
-            # double-scan ablation re-reads the neighborhood through the
-            # round-0 buckets, so it walks the bucketed plan on every
-            # backend (with the engine's tile fold).
-            s_k, _ = sketch_lib.run_mg_plan(plan, nbr_labels, graph.weights,
-                                            fold_tile=engine.mg_fold_tile)
-            want = sketch_lib.rescan_candidates(plan, s_k, nbr_labels,
-                                                graph.weights, labels, seed)
+            # double-scan ablation (paper Fig. 5): the second, exact
+            # re-scoring pass runs in-engine — one fused/streamed kernel
+            # dispatch on the Pallas engines, never a per-bucket fallback.
+            want = engine.mg_rescan(plan, aux, nbr_labels, graph.weights,
+                                    labels, seed)
         else:
-            aux = (ws.stream_plan if engine.uses_stream_plan
-                   else ws.fused_plan)
             want = engine.mg_select(plan, aux, nbr_labels,
                                     graph.weights, labels, seed)
     elif config.method == "bm":
         # incumbency is built into the fold's initial carry (Alg. 3 l. 13)
-        best, _ = sketch_lib.run_bm_plan(plan, nbr_labels, graph.weights,
-                                         labels,
-                                         fold_tile=engine.bm_fold_tile)
+        best, _ = engine.bm_fold_plan(plan, aux, nbr_labels, graph.weights,
+                                      labels)
         want = jnp.where(best >= 0, best, labels)
     else:
         raise ValueError(f"unknown method {config.method!r}")

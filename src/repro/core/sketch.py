@@ -235,6 +235,49 @@ def run_bm_plan(plan: FoldPlan, entry_labels: jnp.ndarray,
     return jnp.where(has, best_c, -1), jnp.where(has, jnp.maximum(best_w, 0.0), 0.0)
 
 
+def bm_init_rows(row_vertex: jnp.ndarray, cur_labels: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Per-row BM initial carries: each row starts as its owning vertex's
+    incumbent label (paper Alg. 3 l. 13), -1 on pad rows. THE init
+    convention for every engine row order (single-host fused/streamed and
+    the distributed paths all build their kernel inits here, so the
+    convention cannot drift between them)."""
+    real = row_vertex >= 0
+    return jnp.where(real, cur_labels[jnp.maximum(row_vertex, 0)], -1)
+
+
+def bm_merge_rows(n: int, cur_labels: jnp.ndarray, row_vertex: jnp.ndarray,
+                  ck: jnp.ndarray, wk: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge per-row BM partial states into per-vertex (label, weight).
+
+    The vectorized form of :func:`run_bm_plan`'s max-reduce merge, over ONE
+    flat row set instead of per-bucket tiles: ``row_vertex`` [R] maps each
+    partial (``ck``, ``wk``) to its owner (-1 = pad row, ignored via a dump
+    slot). Every reduction is a max/min scatter — order-insensitive and
+    exact — so any engine row order (bucketed, fused-sorted, window-slot)
+    merges bit-identically to the reference. Semantics match run_bm_plan:
+    ties prefer the incumbent, then the smaller label; vertices with no
+    rows get (label -1, weight 0).
+    """
+    real = row_vertex >= 0
+    safe = jnp.where(real, row_vertex, n)  # dump slot for pad rows
+    cur_ext = jnp.concatenate(
+        [cur_labels, jnp.full((1,), -1, cur_labels.dtype)])
+    best_w_ext = jnp.full((n + 1,), -1.0, jnp.float32).at[safe].max(
+        jnp.where(real, wk, -1.0))
+    at_best = real & (wk >= best_w_ext[safe])
+    keep_ext = jnp.zeros((n + 1,), jnp.bool_).at[safe].max(
+        at_best & (ck == cur_ext[safe]))
+    is_best = at_best & (ck >= 0) & ~keep_ext[safe]
+    best_c = jnp.full((n + 1,), INT_MAX, jnp.int32).at[safe].min(
+        jnp.where(is_best, ck, INT_MAX))[:n]
+    best_c = jnp.where(keep_ext[:n], cur_labels, best_c)
+    has = best_c != INT_MAX
+    return (jnp.where(has, best_c, -1),
+            jnp.where(has, jnp.maximum(best_w_ext[:n], 0.0), 0.0))
+
+
 def choose_from_candidates(cand_c: jnp.ndarray, cand_w: jnp.ndarray,
                            labels: jnp.ndarray, seed: jnp.ndarray
                            ) -> jnp.ndarray:
@@ -280,6 +323,65 @@ def select_best(plan: FoldPlan, s_k: jnp.ndarray, s_v: jnp.ndarray,
     return choose_from_candidates(cand_c, cand_w, labels, seed)
 
 
+def rescan_row_partials(labels: jnp.ndarray, weights: jnp.ndarray,
+                        row_cand: jnp.ndarray) -> jnp.ndarray:
+    """Per-row exact candidate weights for the rescan second pass.
+
+    ``labels``/``weights`` [R, D] are a padded round-0 entry tile;
+    ``row_cand`` [R, k] each row's (owning vertex's) consolidated candidate
+    labels (-1 empties). Accumulates *sequentially* over the entry axis —
+    the same order as the fused/streamed rescan kernels' ``fori_loop``, so
+    all backends produce bit-identical partials (trailing pad columns add
+    exact 0.0 no-ops). Returns [R, k] float32 partial linking weights.
+    """
+    def step(acc, xs):
+        c, w = xs  # [R]
+        hit = (row_cand == c[:, None]) & (row_cand >= 0)
+        return acc + jnp.where(hit, w[:, None], 0.0), None
+
+    init = jnp.zeros(row_cand.shape, dtype=jnp.float32)
+    acc, _ = jax.lax.scan(step, init, (labels.T, weights.T))
+    return acc
+
+
+#: Rank slots materialized per merge pass in :func:`merge_rescan_partials`
+#: — bounds the dense table at O(N · _RANK_CHUNK · k) even when a hub
+#: vertex drives max_rows0 (= ceil(d_max / chunk)) into the thousands.
+_RANK_CHUNK = 8
+
+
+def merge_rescan_partials(n: int, k: int, max_rows: int,
+                          row_vertex: jnp.ndarray, row_rank: jnp.ndarray,
+                          parts: jnp.ndarray) -> jnp.ndarray:
+    """Reduce per-row rescan partials [R, k] to per-vertex weights [N, k].
+
+    Each row's partial lands at its static (vertex, chunk-rank) coordinate
+    of a dense [N, c, k] table covering ``_RANK_CHUNK`` ranks at a time —
+    every real coordinate is written exactly once (out-of-chunk and pad
+    rows write 0.0 into a dump slot), so there is no duplicate-scatter
+    ordering to worry about — then the rank axis is summed with a
+    fixed-shape ``jnp.sum`` and the rank chunks accumulate in static
+    ascending order. Every backend reduces through the same shapes with
+    the same ops in the same order, which is what makes the merged
+    accumulators bit-identical regardless of the engine's row order
+    (bucketed, fused-sorted, or window-slot). Peak memory is
+    O(N · min(max_rows0, _RANK_CHUNK) · k), independent of d_max.
+    """
+    real = row_vertex >= 0
+    masked = jnp.where(real[:, None], parts, 0.0)
+    acc = jnp.zeros((n, k), dtype=jnp.float32)
+    for lo in range(0, max_rows, _RANK_CHUNK):
+        c = min(_RANK_CHUNK, max_rows - lo)
+        in_chunk = real & (row_rank >= lo) & (row_rank < lo + c)
+        v_idx = jnp.where(in_chunk, row_vertex, n)  # else -> dump slot
+        r_idx = jnp.where(in_chunk, row_rank - lo, 0)
+        dense = jnp.zeros((n + 1, c, k), dtype=jnp.float32)
+        dense = dense.at[v_idx, r_idx].set(
+            jnp.where(in_chunk[:, None], masked, 0.0))
+        acc = acc + jnp.sum(dense[:n], axis=1)
+    return acc
+
+
 def rescan_candidates(plan: FoldPlan, s_k: jnp.ndarray,
                       entry_labels: jnp.ndarray, entry_weights: jnp.ndarray,
                       labels: jnp.ndarray, seed: jnp.ndarray) -> jnp.ndarray:
@@ -287,16 +389,26 @@ def rescan_candidates(plan: FoldPlan, s_k: jnp.ndarray,
     weight of each of the k candidate labels by re-reading the neighborhood,
     then pick the heaviest. Costs a second full pass over the edges — kept
     for the Fig. 5 ablation; single-scan is the production default.
+
+    This is the reference (bucketed) implementation; the fused/streamed
+    engines run the same pass as one in-kernel dispatch
+    (``kernels.mg_sketch.fused.rescan_select_fused`` /
+    ``streaming.rescan_select_stream``) and share
+    :func:`rescan_row_partials` order and :func:`merge_rescan_partials`,
+    so all backends agree bit-for-bit.
     """
     n, k = plan.n_nodes, plan.k
     # Broadcast each vertex's consolidated candidate set to its chunk rows.
     cand = jnp.full((n, k), -1, dtype=jnp.int32).at[plan.row_to_vertex].set(s_k)
-    acc = jnp.zeros((n, k), dtype=jnp.float32)
     rnd = plan.rounds[0]
+    rows0 = rnd.n_rows_total
+    parts = jnp.zeros((rows0, k), dtype=jnp.float32)
+    row_v = jnp.full((rows0,), -1, dtype=jnp.int32)
     for bucket in rnd.buckets:
         gl, gw = _gather_entries(bucket.gather, entry_labels, entry_weights)
-        row_cand = cand[bucket.vertex]  # [R, k]
-        hit = (gl[:, :, None] == row_cand[:, None, :]) & (row_cand[:, None, :] >= 0)
-        part = jnp.sum(jnp.where(hit, gw[:, :, None], 0.0), axis=1)  # [R, k]
-        acc = acc.at[bucket.vertex].add(part)
+        p = rescan_row_partials(gl, gw, cand[bucket.vertex])
+        parts = parts.at[bucket.out_pos].set(p)
+        row_v = row_v.at[bucket.out_pos].set(bucket.vertex)
+    acc = merge_rescan_partials(n, k, plan.max_rows0, row_v,
+                                plan.row_rank0, parts)
     return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc, labels, seed)

@@ -19,7 +19,7 @@ structure, never on labels), so the whole multi-round fold jits cleanly.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -137,20 +137,31 @@ class FoldRound:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class FoldPlan:
-    """Static multi-round reduction plan for the sketch folds."""
+    """Static multi-round reduction plan for the sketch folds.
+
+    ``row_rank0`` maps each *canonical* round-0 row (the out_pos space the
+    buckets scatter into) to its chunk rank within its vertex; together
+    with ``FoldBucket.vertex`` it gives every round-0 partial a static
+    (vertex, rank) coordinate — what the BM merge and the rescan second
+    pass reduce over (``max_rows0`` = max chunk rows any vertex owns).
+    """
 
     rounds: Tuple[FoldRound, ...]
     row_to_vertex: jnp.ndarray  # [final n_rows] — owning vertex of each final sketch
     n_nodes: int
     k: int
     chunk: int
+    row_rank0: Optional[jnp.ndarray] = None  # [round-0 n_rows] chunk rank
+    max_rows0: int = 1
 
     def tree_flatten(self):
-        return (self.rounds, self.row_to_vertex), (self.n_nodes, self.k, self.chunk)
+        return ((self.rounds, self.row_to_vertex, self.row_rank0),
+                (self.n_nodes, self.k, self.chunk, self.max_rows0))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], *aux)
+        return cls(children[0], children[1], *aux[:3],
+                   row_rank0=children[2], max_rows0=aux[3])
 
     @property
     def n_rounds(self) -> int:
@@ -213,9 +224,15 @@ def build_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
     rounds: List[FoldRound] = []
     counts, starts = degrees, offsets[:-1].copy()
     n_entries = int(degrees.sum())
+    row_rank0 = None
+    max_rows0 = 1
     while True:
         np_buckets, n_chunks, row_vertex = _plan_round(counts, starts, chunk, widths)
         n_rows = int(n_chunks.sum())
+        if row_rank0 is None:  # round 0: static (vertex, rank) coordinates
+            row_rank0 = np.arange(n_rows, dtype=np.int64) - np.repeat(
+                np.cumsum(n_chunks) - n_chunks, n_chunks)
+            max_rows0 = max(int(n_chunks.max()) if len(n_chunks) else 0, 1)
         rounds.append(FoldRound(
             buckets=tuple(
                 FoldBucket(width=w, gather=jnp.asarray(g), out_pos=jnp.asarray(p),
@@ -236,7 +253,9 @@ def build_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
 
     return FoldPlan(rounds=tuple(rounds),
                     row_to_vertex=jnp.asarray(final_row_vertex, dtype=jnp.int32),
-                    n_nodes=n, k=k, chunk=chunk)
+                    n_nodes=n, k=k, chunk=chunk,
+                    row_rank0=jnp.asarray(row_rank0, dtype=jnp.int32),
+                    max_rows0=max_rows0)
 
 
 def plan_padded_entries(plan: FoldPlan) -> int:
@@ -296,7 +315,13 @@ class FusedRound:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class FusedFoldPlan:
-    """Static fused reduction plan: ~one kernel dispatch per round."""
+    """Static fused reduction plan: ~one kernel dispatch per round.
+
+    ``row_to_vertex0``/``row_rank0`` map each *round-0* padded row to its
+    (owning vertex, chunk rank) — the static coordinates the BM fold and
+    the rescan second pass (both round-0-only walks) reduce over. For
+    single-round plans ``row_to_vertex0`` equals ``row_to_vertex``.
+    """
 
     rounds: Tuple[FusedRound, ...]
     row_to_vertex: jnp.ndarray  # [last n_steps * tile_r] int32 — owning vertex (-1 pad)
@@ -304,14 +329,21 @@ class FusedFoldPlan:
     k: int
     chunk: int
     tile_r: int
+    row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_steps * tile_r]
+    row_rank0: Optional[jnp.ndarray] = None       # [round-0 n_steps * tile_r]
+    max_rows0: int = 1  # max chunk rows any vertex owns on round 0
 
     def tree_flatten(self):
-        return ((self.rounds, self.row_to_vertex),
-                (self.n_nodes, self.k, self.chunk, self.tile_r))
+        return ((self.rounds, self.row_to_vertex, self.row_to_vertex0,
+                 self.row_rank0),
+                (self.n_nodes, self.k, self.chunk, self.tile_r,
+                 self.max_rows0))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], *aux)
+        return cls(children[0], children[1], *aux[:4],
+                   row_to_vertex0=children[2], row_rank0=children[3],
+                   max_rows0=aux[4])
 
     @property
     def n_rounds(self) -> int:
@@ -338,6 +370,8 @@ def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
     n_entries = int(degrees.sum())
 
     rounds: List[FusedRound] = []
+    rtv0 = rank0 = None
+    max_rows0 = 1
     while True:
         order = np.argsort(counts, kind="stable")  # ascending entry count
         n_chunks = ((counts + chunk - 1) // chunk).astype(np.int64)
@@ -359,6 +393,12 @@ def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
             row_start=jnp.asarray(rs2), row_count=jnp.asarray(rc2),
             step_dmax=jnp.asarray(rc2.max(axis=1, keepdims=True)),
             n_rows=total_rows, n_entries_in=n_entries))
+        if rtv0 is None:  # round 0: (vertex, rank) per padded row
+            rtv0 = np.concatenate(
+                [row_vertex, np.full(pad, -1, np.int64)]).astype(np.int32)
+            rank0 = np.concatenate(
+                [row_rank, np.zeros(pad, np.int64)]).astype(np.int32)
+            max_rows0 = max(int(n_chunks.max()) if len(n_chunks) else 0, 1)
         if np.all(n_chunks <= 1):
             rtv = np.concatenate(
                 [row_vertex, np.full(pad, -1, np.int64)]).astype(np.int32)
@@ -372,7 +412,9 @@ def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
         n_entries = n_steps * tile_r * k
 
     return FusedFoldPlan(rounds=tuple(rounds), row_to_vertex=jnp.asarray(rtv),
-                         n_nodes=n, k=k, chunk=chunk, tile_r=tile_r)
+                         n_nodes=n, k=k, chunk=chunk, tile_r=tile_r,
+                         row_to_vertex0=jnp.asarray(rtv0),
+                         row_rank0=jnp.asarray(rank0), max_rows0=max_rows0)
 
 
 # ---------------------------------------------------------------------------
@@ -447,15 +489,23 @@ class StreamedFoldPlan:
     chunk: int     # entries per virtual-vertex row (paper D_H)
     tile_r: int    # row slots per window
     window_cap: int  # requested max entries per window (actual W <= aligned cap)
+    # round-0 slot coordinates (BM fold / rescan second pass — see
+    # FusedFoldPlan.row_to_vertex0):
+    row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_windows * tile_r]
+    row_rank0: Optional[jnp.ndarray] = None       # [round-0 n_windows * tile_r]
+    max_rows0: int = 1
 
     def tree_flatten(self):
-        return ((self.rounds, self.row_to_vertex),
+        return ((self.rounds, self.row_to_vertex, self.row_to_vertex0,
+                 self.row_rank0),
                 (self.n_nodes, self.k, self.chunk, self.tile_r,
-                 self.window_cap))
+                 self.window_cap, self.max_rows0))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], *aux)
+        return cls(children[0], children[1], *aux[:5],
+                   row_to_vertex0=children[2], row_rank0=children[3],
+                   max_rows0=aux[5])
 
     @property
     def n_rounds(self) -> int:
@@ -588,6 +638,16 @@ def build_streamed_rounds(counts: np.ndarray, starts: np.ndarray,
                                         pos_table, tile_r)
         rnd.update(n_rows=total_rows, n_entries_in=int(n_entries),
                    window_entries=pack["window_entries"])
+        # slot -> (owning vertex, chunk rank) of this round's rows (-1/0 on
+        # pad slots) — round 0's is what the BM fold and rescan reduce over
+        slot_v = np.full(pack["n_windows"] * tile_r, -1, dtype=np.int64)
+        slot_r = np.zeros(pack["n_windows"] * tile_r, dtype=np.int64)
+        slot_v[pack["slot_of_row"]] = row_vertex
+        slot_r[pack["slot_of_row"]] = row_rank
+        rnd.update(row_to_vertex=slot_v.astype(np.int32),
+                   row_rank=slot_r.astype(np.int32),
+                   max_rows=max(int(n_chunks.max()) if len(n_chunks) else 0,
+                                1))
         rounds.append(rnd)
         if np.all(n_chunks <= 1) and (r + 1) >= min_rounds:
             rtv = np.full(pack["n_windows"] * tile_r, -1, dtype=np.int64)
@@ -638,7 +698,11 @@ def build_streamed_fold_plan(degrees: np.ndarray, k: int = 8,
         for r in rounds_np)
     return StreamedFoldPlan(rounds=rounds, row_to_vertex=jnp.asarray(rtv),
                             n_nodes=n, k=k, chunk=chunk, tile_r=tile_r,
-                            window_cap=window_entries)
+                            window_cap=window_entries,
+                            row_to_vertex0=jnp.asarray(
+                                rounds_np[0]["row_to_vertex"]),
+                            row_rank0=jnp.asarray(rounds_np[0]["row_rank"]),
+                            max_rows0=rounds_np[0]["max_rows"])
 
 
 def streamed_dispatches(plan: StreamedFoldPlan) -> int:
@@ -689,3 +753,12 @@ def plan_dispatches(plan: FoldPlan) -> int:
     """Kernel dispatches per MG iteration of the per-bucket Pallas backend:
     one pallas_call per width bucket per round."""
     return sum(len(r.buckets) for r in plan.rounds)
+
+
+def plan_round0_dispatches(plan: FoldPlan) -> int:
+    """Kernel dispatches of one round-0-only pass on the per-bucket Pallas
+    backend (the BM fold and the rescan second scan both walk only round 0:
+    one pallas_call per round-0 width bucket). The fused and streamed
+    engines cover the same pass in ONE dispatch each (the window grid of
+    the streamed BM/rescan kernels lives inside the dispatch)."""
+    return len(plan.rounds[0].buckets) if plan.rounds else 0

@@ -13,7 +13,6 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core.lpa import LPAConfig, lpa
 from repro.graphs.csr import CSRGraph

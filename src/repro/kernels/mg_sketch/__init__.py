@@ -1,23 +1,31 @@
 """Pallas TPU kernels for the weighted Misra-Gries / Boyer-Moore sketch folds.
 
-Three generations:
+Three generations, each covering both sketches (MG and BM) plus the
+double-scan (rescan) second pass:
   * ``ops`` / ``mg_sketch`` — per-width-bucket tile kernels (XLA gathers a
     padded [R, D] tile per bucket, one dispatch each);
   * ``fused`` — whole-round kernels with the gather inside the kernel and
-    the final round fused with move selection (one dispatch per round;
-    flat entry arrays stay VMEM-resident);
+    the final MG round fused with move selection (one dispatch per round;
+    the BM fold and the rescan pass are one dispatch each; flat entry
+    arrays stay VMEM-resident);
   * ``streaming`` — the fused dataflow with each round's entries streamed
     through fixed-size double-buffered HBM->VMEM windows, for graphs past
-    the fused engine's VMEM budget (one dispatch per round, O(window)
+    the fused engine's VMEM budget (same dispatch counts, O(window)
     residency).
 """
 from repro.kernels.mg_sketch.ops import (mg_fold_tile_pallas,
                                          bm_fold_tile_pallas)
-from repro.kernels.mg_sketch.fused import (run_mg_plan_fused,
+from repro.kernels.mg_sketch.fused import (rescan_select_fused,
+                                           run_bm_plan_fused,
+                                           run_mg_plan_fused,
                                            select_best_fused)
-from repro.kernels.mg_sketch.streaming import (run_mg_plan_stream,
+from repro.kernels.mg_sketch.streaming import (rescan_select_stream,
+                                               run_bm_plan_stream,
+                                               run_mg_plan_stream,
                                                select_best_stream)
 
 __all__ = ["mg_fold_tile_pallas", "bm_fold_tile_pallas",
            "run_mg_plan_fused", "select_best_fused",
-           "run_mg_plan_stream", "select_best_stream"]
+           "run_bm_plan_fused", "rescan_select_fused",
+           "run_mg_plan_stream", "select_best_stream",
+           "run_bm_plan_stream", "rescan_select_stream"]

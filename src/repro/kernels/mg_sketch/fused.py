@@ -1,4 +1,10 @@
-"""Fused Pallas TPU kernels: whole-round MG sketch fold in one dispatch.
+"""Fused Pallas TPU kernels: whole-round sketch folds in one dispatch.
+
+Covers every paper sketch family through one plan/kernel split (DESIGN.md
+§11): the MG fold (one dispatch per round, the last fused with move
+selection), the BM fold (ONE dispatch — only round 0 is ever folded, the
+partials merge with an XLA max-reduce), and the rescan second pass of the
+double-scan ablation (ONE dispatch re-reading round 0).
 
 The per-bucket kernel in ``mg_sketch.py`` needs XLA to materialize a padded
 [R, D] gather tile in HBM per width bucket per round — ``O(rounds x
@@ -119,12 +125,74 @@ def _mg_fold(labels, weights, k: int, dmax):
     return jax.lax.fori_loop(0, dmax, body, init)
 
 
+def _bm_fold(labels, weights, init, dmax):
+    """Phase 2 (BM): lane-per-row weighted Boyer-Moore scan, loop bound =
+    the step's max width. ``init`` [tile_r, 1] carries each row's incumbent
+    label (paper Alg. 3 l. 13). Identical accumulate semantics to
+    ``repro.core.sketch.bm_fold_tile`` (pad columns are exact no-ops).
+    Returns ([tile_r, 1] candidate, [tile_r, 1] vote weight).
+    """
+    tile_r, _ = labels.shape
+
+    def body(i, carry):
+        ck, wk = carry
+        c = jax.lax.dynamic_slice(labels, (0, i), (tile_r, 1))
+        w = jax.lax.dynamic_slice(weights, (0, i), (tile_r, 1))
+        valid = (w > 0) & (c >= 0)
+        same = valid & (c == ck)
+        bigger = valid & ~same & (wk > w)
+        replace = valid & ~same & ~bigger
+        wk = wk + jnp.where(same, w, 0.0) - jnp.where(bigger, w, 0.0)
+        ck = jnp.where(replace, c, ck)
+        wk = jnp.where(replace, w, wk)
+        return ck, wk
+
+    return jax.lax.fori_loop(
+        0, dmax, body, (init, jnp.zeros((tile_r, 1), jnp.float32)))
+
+
+def _rescan_acc(labels, weights, cand, dmax):
+    """Phase 2 (rescan): exact per-candidate linking weights of a gathered
+    tile. Accumulates sequentially over the entry axis — the same order as
+    ``repro.core.sketch.rescan_row_partials``, so partials are
+    bit-identical to the reference (pad columns add exact 0.0 no-ops).
+    ``cand`` [tile_r, k] holds each row's candidate labels (-1 empties).
+    """
+    tile_r, k = cand.shape
+
+    def body(i, acc):
+        c = jax.lax.dynamic_slice(labels, (0, i), (tile_r, 1))
+        w = jax.lax.dynamic_slice(weights, (0, i), (tile_r, 1))
+        hit = (cand == c) & (cand >= 0)
+        return acc + jnp.where(hit, w, 0.0)
+
+    return jax.lax.fori_loop(0, dmax, body,
+                             jnp.zeros((tile_r, k), jnp.float32))
+
+
 def _fused_fold_kernel(dmax_ref, start_ref, count_ref, elab_ref, ewgt_ref,
                        out_k_ref, out_v_ref, *, k: int, chunk: int):
     lab, wgt = _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk)
     s_k, s_v = _mg_fold(lab, wgt, k, dmax_ref[0, 0])
     out_k_ref[...] = s_k
     out_v_ref[...] = s_v
+
+
+def _bm_fold_kernel(dmax_ref, start_ref, count_ref, init_ref, elab_ref,
+                    ewgt_ref, out_c_ref, out_w_ref, *, chunk: int):
+    """One BM step: gather the tile and run the majority-vote scan."""
+    lab, wgt = _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk)
+    init = init_ref[0, :][:, None]         # [tile_r, 1] incumbent labels
+    ck, wk = _bm_fold(lab, wgt, init, dmax_ref[0, 0])
+    out_c_ref[...] = ck[:, 0][None, :]
+    out_w_ref[...] = wk[:, 0][None, :]
+
+
+def _rescan_fold_kernel(dmax_ref, start_ref, count_ref, cand_ref, elab_ref,
+                        ewgt_ref, out_ref, *, k: int, chunk: int):
+    """One rescan step: gather the tile and score the row candidates."""
+    lab, wgt = _gather_tile(start_ref, count_ref, elab_ref, ewgt_ref, chunk)
+    out_ref[...] = _rescan_acc(lab, wgt, cand_ref[...], dmax_ref[0, 0])
 
 
 def _hash_mix(x, seed):
@@ -302,3 +370,182 @@ def select_best_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
     buf = buf.at[jnp.where(real, rtv, n)].set(
         jnp.where(real, choice, -1))
     return buf[:n]
+
+
+# ---------------------------------------------------------------------------
+# Boyer-Moore fold: round 0 in one dispatch (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def bm_fold_round_fused(rnd: FusedRound, entry_labels: jnp.ndarray,
+                        entry_weights: jnp.ndarray,
+                        init_labels: jnp.ndarray, *, chunk: int,
+                        interpret: bool) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One dispatch covering the whole BM fold (only round 0 is ever
+    folded — BM partials merge by max-reduce, not by re-folding).
+
+    ``init_labels`` [n_steps * tile_r] int32 carries each row's incumbent
+    label (-1 on pad rows). Returns per-row ([rows] candidate label,
+    [rows] vote weight) partial states in fused row order.
+    """
+    n_steps, tile_r = rnd.row_start.shape
+    el = _pad_entries(entry_labels.astype(jnp.int32), rnd.n_entries_in,
+                      chunk, -1)
+    ew = _pad_entries(entry_weights.astype(jnp.float32), rnd.n_entries_in,
+                      chunk, 0.0)
+    e = el.shape[0]
+    ck, wk = pl.pallas_call(
+        functools.partial(_bm_fold_kernel, chunk=chunk),
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # init labels
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry labels
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry weights
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_steps, tile_r), jnp.int32),
+            jax.ShapeDtypeStruct((n_steps, tile_r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count,
+      init_labels.reshape(n_steps, tile_r), el, ew)
+    return ck.reshape(-1), wk.reshape(-1)
+
+
+def run_bm_plan_generic(plan, entry_labels: jnp.ndarray,
+                        entry_weights: jnp.ndarray, cur_labels: jnp.ndarray,
+                        fold_round_fn, interpret: bool
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared νBM driver for the fused and streamed engines.
+
+    Incumbent-initializes each round-0 row from ``plan.row_to_vertex0``,
+    runs the engine's single round-0 dispatch
+    (``fold_round_fn(rnd, el, ew, init, *, chunk, interpret)``) and merges
+    the per-row partial states per vertex with the order-insensitive
+    ``sketch.bm_merge_rows`` max-reduce. One copy of this logic keeps the
+    engines' init-label and merge conventions from ever diverging.
+    Returns per-vertex (label [N], weight [N]); no-entry vertices get -1.
+    """
+    from repro.core.sketch import bm_init_rows, bm_merge_rows
+    n = plan.n_nodes
+    if n == 0:
+        return (jnp.full((0,), -1, jnp.int32), jnp.zeros((0,), jnp.float32))
+    rtv0 = plan.row_to_vertex0
+    init = bm_init_rows(rtv0, cur_labels)
+    ck, wk = fold_round_fn(plan.rounds[0], entry_labels, entry_weights,
+                           init, chunk=plan.chunk, interpret=interpret)
+    return bm_merge_rows(n, cur_labels, rtv0, ck, wk)
+
+
+def run_bm_plan_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
+                      entry_weights: jnp.ndarray, cur_labels: jnp.ndarray,
+                      interpret: bool | None = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused νBM iteration core: ONE kernel dispatch (vs one per round-0
+    width bucket) + the max-reduce merge of per-row partial states.
+    Bit-identical to ``repro.core.sketch.run_bm_plan`` — per-row folds
+    replay the same entry sequences, and the merge
+    (``sketch.bm_merge_rows``) is an order-insensitive max/min scatter.
+    Returns per-vertex (label [N], weight [N]); no-entry vertices get -1.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return run_bm_plan_generic(plan, entry_labels, entry_weights,
+                               cur_labels, bm_fold_round_fused, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Rescan (double-scan ablation): the second pass in one dispatch
+# ---------------------------------------------------------------------------
+
+
+def rescan_round_fused(rnd: FusedRound, entry_labels: jnp.ndarray,
+                       entry_weights: jnp.ndarray, cand_rows: jnp.ndarray,
+                       *, k: int, chunk: int, interpret: bool
+                       ) -> jnp.ndarray:
+    """One dispatch re-reading round 0 to score each row's candidates.
+
+    ``cand_rows`` [n_steps * tile_r, k] int32 holds each row's (owning
+    vertex's) consolidated candidate labels. Returns [n_steps * tile_r, k]
+    float32 partial linking weights in fused row order.
+    """
+    n_steps, tile_r = rnd.row_start.shape
+    el = _pad_entries(entry_labels.astype(jnp.int32), rnd.n_entries_in,
+                      chunk, -1)
+    ew = _pad_entries(entry_weights.astype(jnp.float32), rnd.n_entries_in,
+                      chunk, 0.0)
+    e = el.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_rescan_fold_kernel, k=k, chunk=chunk),
+        grid=(n_steps,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),   # candidates
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry labels
+            pl.BlockSpec((e,), lambda i: (0,)),            # entry weights
+        ],
+        out_specs=pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_steps * tile_r, k), jnp.float32),
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count, cand_rows, el, ew)
+    return out
+
+
+def rescan_select_generic(plan, entry_labels: jnp.ndarray,
+                          entry_weights: jnp.ndarray, labels: jnp.ndarray,
+                          seed: jnp.ndarray, run_plan_fn, rescan_round_fn,
+                          interpret: bool) -> jnp.ndarray:
+    """Shared double-scan driver for the fused and streamed engines.
+
+    Runs the engine's MG fold (``run_plan_fn``), scatters the final
+    sketches to per-vertex candidate sets, broadcasts them to round-0 rows
+    via ``plan.row_to_vertex0`` and runs the engine's single rescan
+    dispatch (``rescan_round_fn``); partials merge through the shared
+    deterministic ``sketch.merge_rescan_partials``. One copy of this logic
+    keeps the engines' candidate-mask and merge conventions aligned (they
+    are what the cross-backend bit-parity rests on).
+    """
+    from repro.core.sketch import choose_from_candidates, merge_rescan_partials
+    n, k = plan.n_nodes, plan.k
+    if n == 0:
+        return labels
+    s_k, _ = run_plan_fn(plan, entry_labels, entry_weights,
+                         interpret=interpret)
+    rtv = plan.row_to_vertex
+    cand = jnp.full((n + 1, k), -1, jnp.int32).at[
+        jnp.where(rtv >= 0, rtv, n)].set(s_k)[:n]
+    rtv0 = plan.row_to_vertex0
+    cand_ext = jnp.concatenate([cand, jnp.full((1, k), -1, jnp.int32)])
+    cand_rows = cand_ext[jnp.where(rtv0 >= 0, rtv0, n)]
+    parts = rescan_round_fn(plan.rounds[0], entry_labels, entry_weights,
+                            cand_rows, k=k, chunk=plan.chunk,
+                            interpret=interpret)
+    acc = merge_rescan_partials(n, k, plan.max_rows0, rtv0,
+                                plan.row_rank0, parts)
+    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc,
+                                  labels, seed)
+
+
+def rescan_select_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
+                        entry_weights: jnp.ndarray, labels: jnp.ndarray,
+                        seed: jnp.ndarray, interpret: bool | None = None
+                        ) -> jnp.ndarray:
+    """Full double-scan MG iteration on the fused engine: ``n_rounds``
+    fold dispatches + ONE rescan dispatch (vs a per-bucket second walk).
+    Bit-identical to the reference ``run_mg_plan`` + ``rescan_candidates``
+    — shared accumulate order and merge (see ``sketch.rescan_candidates``).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return rescan_select_generic(plan, entry_labels, entry_weights, labels,
+                                 seed, run_mg_plan_fused,
+                                 rescan_round_fused, interpret)

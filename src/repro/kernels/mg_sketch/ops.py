@@ -9,7 +9,6 @@ kernels target TPU and are validated in interpret mode per the brief).
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

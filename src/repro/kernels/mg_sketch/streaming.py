@@ -1,4 +1,7 @@
-"""HBM-streaming fused Pallas kernels: windowed MG fold, one dispatch/round.
+"""HBM-streaming fused Pallas kernels: windowed sketch folds, one
+dispatch per round — MG, BM (one round-0 dispatch) and the rescan second
+pass (one round-0 dispatch), all with O(window) residency (DESIGN.md
+§10/§11).
 
 The fused engine (``fused.py``) passes each round's flat entry arrays whole,
 so they are VMEM-resident for the duration of the dispatch — round 0 is |E|
@@ -43,8 +46,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.graphs.csr import StreamedFoldPlan, StreamedRound
-from repro.kernels.mg_sketch.fused import (_gather_tile, _interpret_default,
-                                           _mg_fold, _select_rows)
+from repro.kernels.mg_sketch.fused import (_bm_fold, _gather_tile,
+                                           _interpret_default, _mg_fold,
+                                           _rescan_acc, _select_rows,
+                                           rescan_select_generic,
+                                           run_bm_plan_generic)
 
 
 def windowed_entries(gather: jnp.ndarray, entry_labels: jnp.ndarray,
@@ -217,3 +223,133 @@ def select_best_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
     buf = buf.at[jnp.where(real, rtv, n)].set(
         jnp.where(real, choice, -1))
     return buf[:n]
+
+
+# ---------------------------------------------------------------------------
+# Boyer-Moore fold: round 0 streamed through windows (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _stream_bm_kernel(dmax_ref, start_ref, count_ref, init_ref, wlab_ref,
+                      wwgt_ref, out_c_ref, out_w_ref, *, chunk: int):
+    """One BM window step: gather the row tile from the resident window
+    and run the majority-vote scan (the streaming analogue of
+    ``fused._bm_fold_kernel``)."""
+    lab, wgt = _gather_tile(start_ref, count_ref, wlab_ref, wwgt_ref, chunk)
+    init = init_ref[0, :][:, None]         # [tile_r, 1] incumbent labels
+    ck, wk = _bm_fold(lab, wgt, init, dmax_ref[0, 0])
+    out_c_ref[...] = ck[:, 0][None, :]
+    out_w_ref[...] = wk[:, 0][None, :]
+
+
+def _stream_rescan_kernel(dmax_ref, start_ref, count_ref, cand_ref,
+                          wlab_ref, wwgt_ref, out_ref, *, k: int,
+                          chunk: int):
+    """One rescan window step: gather the row tile from the resident
+    window and score the row candidates."""
+    lab, wgt = _gather_tile(start_ref, count_ref, wlab_ref, wwgt_ref, chunk)
+    out_ref[...] = _rescan_acc(lab, wgt, cand_ref[...], dmax_ref[0, 0])
+
+
+def bm_fold_round_stream(rnd: StreamedRound, entry_labels: jnp.ndarray,
+                         entry_weights: jnp.ndarray,
+                         init_labels: jnp.ndarray, *, chunk: int,
+                         interpret: bool
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One streamed dispatch covering the whole BM fold: grid over round-0
+    windows, one W-entry window resident per step.
+
+    ``init_labels`` [n_windows * tile_r] int32 carries each row slot's
+    incumbent label (-1 on pad slots). Returns per-slot ([rows] candidate
+    label, [rows] vote weight) partial states in window-slot order.
+    """
+    n_windows, tile_r = rnd.row_start.shape
+    w = rnd.window_entries
+    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    ck, wk = pl.pallas_call(
+        functools.partial(_stream_bm_kernel, chunk=chunk),
+        grid=(n_windows,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start (rel)
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # init labels
+            pl.BlockSpec((w,), lambda i: (i,)),            # label window
+            pl.BlockSpec((w,), lambda i: (i,)),            # weight window
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_windows, tile_r), jnp.int32),
+            jax.ShapeDtypeStruct((n_windows, tile_r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count,
+      init_labels.reshape(n_windows, tile_r), wl, ww)
+    return ck.reshape(-1), wk.reshape(-1)
+
+
+def run_bm_plan_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
+                       entry_weights: jnp.ndarray, cur_labels: jnp.ndarray,
+                       interpret: bool | None = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Streamed νBM iteration core: ONE dispatch (window grid inside) +
+    the max-reduce merge of per-slot partial states. Bit-identical to
+    ``repro.core.sketch.run_bm_plan`` (same per-row entry sequences; the
+    ``sketch.bm_merge_rows`` merge is order-insensitive). Per-step entry
+    residency is the double-buffered window, independent of |E|. Returns
+    per-vertex (label [N], weight [N]); no-entry vertices get -1.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return run_bm_plan_generic(plan, entry_labels, entry_weights,
+                               cur_labels, bm_fold_round_stream, interpret)
+
+
+def rescan_round_stream(rnd: StreamedRound, entry_labels: jnp.ndarray,
+                        entry_weights: jnp.ndarray, cand_rows: jnp.ndarray,
+                        *, k: int, chunk: int, interpret: bool
+                        ) -> jnp.ndarray:
+    """One streamed dispatch re-reading round 0 to score each row slot's
+    candidates through the windowed layout. ``cand_rows``
+    [n_windows * tile_r, k] int32. Returns [n_windows * tile_r, k] float32
+    partial linking weights in window-slot order.
+    """
+    n_windows, tile_r = rnd.row_start.shape
+    w = rnd.window_entries
+    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    out = pl.pallas_call(
+        functools.partial(_stream_rescan_kernel, k=k, chunk=chunk),
+        grid=(n_windows,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),        # step_dmax
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_start (rel)
+            pl.BlockSpec((1, tile_r), lambda i: (i, 0)),   # row_count
+            pl.BlockSpec((tile_r, k), lambda i: (i, 0)),   # candidates
+            pl.BlockSpec((w,), lambda i: (i,)),            # label window
+            pl.BlockSpec((w,), lambda i: (i,)),            # weight window
+        ],
+        out_specs=pl.BlockSpec((tile_r, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_windows * tile_r, k),
+                                       jnp.float32),
+        interpret=interpret,
+    )(rnd.step_dmax, rnd.row_start, rnd.row_count, cand_rows, wl, ww)
+    return out
+
+
+def rescan_select_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
+                         entry_weights: jnp.ndarray, labels: jnp.ndarray,
+                         seed: jnp.ndarray, interpret: bool | None = None
+                         ) -> jnp.ndarray:
+    """Full double-scan MG iteration on the streaming engine: ``n_rounds``
+    fold dispatches + ONE rescan dispatch, all with O(window) residency.
+    Bit-identical to the reference ``run_mg_plan`` + ``rescan_candidates``
+    (shared accumulate order and merge — see ``sketch.rescan_candidates``).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    return rescan_select_generic(plan, entry_labels, entry_weights, labels,
+                                 seed, run_mg_plan_stream,
+                                 rescan_round_stream, interpret)

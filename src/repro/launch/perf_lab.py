@@ -5,8 +5,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=256")
 report the three roofline terms + dominant collectives (EXPERIMENTS.md
 §Perf methodology). Not part of the public API."""
 import argparse
-import dataclasses
-import json
 from collections import Counter
 
 import jax

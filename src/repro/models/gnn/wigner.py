@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import math
 from functools import lru_cache
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 import jax.numpy as jnp

@@ -9,7 +9,7 @@ embedding matrix with a batched dot (the retrieval_cand shape) — no loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -2,8 +2,6 @@
 -> AdamW, as a single jitted function."""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

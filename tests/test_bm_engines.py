@@ -1,0 +1,204 @@
+"""BM fold engines vs the repro.core.sketch reference — bit-identical.
+
+Engine parity for the paper's 1-slot memory floor (νBM, Alg. 3): the
+fused engine runs the whole BM fold in ONE dispatch (vs one per round-0
+width bucket), the streaming engine in one dispatch with O(window)
+residency, and both must reproduce ``run_bm_plan`` bit-for-bit — the
+per-row majority scans replay identical entry sequences, and the
+max-reduce merge (``sketch.bm_merge_rows``) is order-insensitive.
+
+Fixtures per the brief: power-law, road-like (deg~2), star/hub,
+zero-degree-vertex, and empty graphs; plus distributed parity (plain +
+halo) and a slow streamed large-graph end-to-end run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import zlib
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fold_engine import get_engine
+from repro.core.lpa import LPAConfig, lpa
+from repro.core.sketch import run_bm_plan
+from repro.graphs.csr import (build_csr, build_fold_plan,
+                              build_fused_fold_plan,
+                              build_streamed_fold_plan)
+from repro.graphs.generators import chain_kmer, powerlaw_communities
+from repro.kernels.mg_sketch.fused import run_bm_plan_fused
+from repro.kernels.mg_sketch.streaming import run_bm_plan_stream
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _star_graph(n_leaves=300):
+    """One hub + leaves: the hub's 300 entries chunk into multiple rows,
+    exercising the cross-row max-reduce merge of partial BM states."""
+    edges = np.stack([np.zeros(n_leaves, np.int64),
+                      np.arange(1, n_leaves + 1)], axis=1)
+    return build_csr(edges, n_leaves + 1)
+
+
+FIXTURES = {
+    "powerlaw": lambda: powerlaw_communities(1024, p_in=0.4, mix=0.05,
+                                             seed=7)[0],
+    "road_deg2": lambda: chain_kmer(600, branch_prob=0.05, seed=3),
+    "star_hub": lambda: _star_graph(300),
+    "zero_degree": lambda: build_csr(
+        np.asarray([[0, 1], [1, 2], [2, 0]]), 7),  # vertices 3..6 isolated
+    "empty": lambda: build_csr(np.zeros((0, 2), np.int64), 5),
+}
+
+
+def _entries(g, rng):
+    labels = jnp.asarray(rng.integers(0, max(g.n_nodes, 2),
+                                      g.n_edges).astype(np.int32))
+    weights = jnp.asarray((rng.random(g.n_edges) * 3 + 0.25)
+                          .astype(np.float32))
+    return labels, weights
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+@pytest.mark.parametrize("k,chunk,tile_r,window",
+                         [(8, 128, 128, 8192),  # production shape
+                          (4, 16, 8, 64)])      # tiny windows, hub chunks
+def test_bm_fold_parity(name, k, chunk, tile_r, window):
+    """Per-vertex (majority label, vote weight) bit-match the reference on
+    both the fused and the streamed plan encodings."""
+    g = FIXTURES[name]()
+    rng = np.random.default_rng(zlib.crc32(name.encode()) + 7)
+    el, ew = _entries(g, rng)
+    labels = jnp.asarray(rng.integers(0, max(g.n_nodes, 2),
+                                      g.n_nodes).astype(np.int32))
+    degrees = np.asarray(g.degrees)
+    plan = build_fold_plan(degrees, k=k, chunk=chunk)
+    fplan = build_fused_fold_plan(degrees, k=k, chunk=chunk, tile_r=tile_r)
+    splan = build_streamed_fold_plan(degrees, k=k, chunk=chunk,
+                                     tile_r=tile_r, window_entries=window)
+    ref_c, ref_w = run_bm_plan(plan, el, ew, labels)
+    for impl, got in (("fused", run_bm_plan_fused(fplan, el, ew, labels)),
+                      ("stream", run_bm_plan_stream(splan, el, ew, labels))):
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref_c),
+                                      err_msg=f"{name} {impl} labels")
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref_w),
+                                      err_msg=f"{name} {impl} weights")
+
+
+def test_bm_engine_registry_parity():
+    """bm_fold_plan resolves through get_engine on every backend and
+    agrees bit-exactly; missing aux plans raise instead of falling back."""
+    g = FIXTURES["powerlaw"]()
+    rng = np.random.default_rng(1)
+    el, ew = _entries(g, rng)
+    labels = jnp.asarray(rng.integers(0, g.n_nodes,
+                                      g.n_nodes).astype(np.int32))
+    degrees = np.asarray(g.degrees)
+    plan = build_fold_plan(degrees, k=8, chunk=128)
+    fplan = build_fused_fold_plan(degrees, k=8, chunk=128, tile_r=32)
+    splan = build_streamed_fold_plan(degrees, k=8, chunk=128, tile_r=32,
+                                     window_entries=1024)
+    ref_c, ref_w = get_engine("jnp").bm_fold_plan(plan, None, el, ew, labels)
+    for backend, aux in (("pallas", None), ("pallas_fused", fplan),
+                         ("pallas_stream", splan)):
+        c, w = get_engine(backend).bm_fold_plan(plan, aux, el, ew, labels)
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(ref_c),
+                                      err_msg=backend)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(ref_w),
+                                      err_msg=backend)
+    with pytest.raises(ValueError):
+        get_engine("pallas_fused").bm_fold_plan(plan, None, el, ew, labels)
+    with pytest.raises(ValueError):
+        get_engine("pallas_stream").bm_fold_plan(plan, None, el, ew, labels)
+
+
+def test_bm_dispatch_economics():
+    """The BM headline numbers: ONE dispatch on the fused/streamed engines
+    vs one per round-0 width bucket on the per-bucket baseline."""
+    g = FIXTURES["powerlaw"]()
+    degrees = np.asarray(g.degrees)
+    plan = build_fold_plan(degrees, k=8, chunk=128)
+    fplan = build_fused_fold_plan(degrees, k=8, chunk=128)
+    splan = build_streamed_fold_plan(degrees, k=8, chunk=128)
+    n_buckets0 = len(plan.rounds[0].buckets)
+    assert n_buckets0 >= 1
+    assert get_engine("pallas").bm_dispatches_per_iter(plan, None) \
+        == n_buckets0
+    assert get_engine("pallas_fused").bm_dispatches_per_iter(plan, fplan) == 1
+    assert get_engine("pallas_stream").bm_dispatches_per_iter(plan,
+                                                              splan) == 1
+    assert get_engine("jnp").bm_dispatches_per_iter(plan, None) == 0
+
+
+def test_lpa_e2e_bm_all_backends():
+    """End-to-end νBM-LPA: labels bit-match the jnp backend through full
+    convergence on every engine (including the auto policy)."""
+    g, _ = powerlaw_communities(2048, p_in=0.5, mix=0.02, seed=1)
+    ref = lpa(g, LPAConfig(method="bm", rho=2, fold_backend="jnp"))
+    for backend in ("pallas", "pallas_fused", "pallas_stream", "auto"):
+        kw = {"stream_window": 1024} if backend == "pallas_stream" else {}
+        res = lpa(g, LPAConfig(method="bm", rho=2, fold_backend=backend,
+                               **kw))
+        np.testing.assert_array_equal(np.asarray(res.labels),
+                                      np.asarray(ref.labels),
+                                      err_msg=backend)
+        assert res.iterations == ref.iterations
+
+
+@pytest.mark.slow  # spawns a multi-device subprocess
+def test_dist_bm_matches_single_host():
+    """Distributed νBM (plain and halo label exchange) on the jnp, fused
+    and streamed engines is bit-identical to the single-host driver."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import numpy as np
+        from repro.graphs.generators import powerlaw_communities
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.core.lpa import lpa, LPAConfig
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("shard",))
+        g, _ = powerlaw_communities(1024, p_in=0.5, mix=0.02, seed=5)
+        ref = lpa(g, LPAConfig(method="bm", rho=2)).labels
+        for kw, engine in (({}, None),
+                           (dict(fused=True, tile_r=32), "pallas_fused"),
+                           (dict(stream=True, tile_r=32,
+                                 window_entries=512), "pallas_stream"),
+                           (dict(halo=True, stream=True, tile_r=32,
+                                 window_entries=512), "pallas_stream")):
+            ws = build_dist_workspace(g, 4, **kw)
+            got, _ = dist_lpa(mesh, ws, rho=2, engine=engine, method="bm")
+            assert (np.asarray(got) == np.asarray(ref)).all(), (kw, engine)
+        print("dist bm parity ok")
+    """)], capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "dist bm parity ok" in out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.streaming_e2e  # |E| >= 4M BM fold in interpret mode (~30 s)
+def test_bm_stream_large_graph_e2e():
+    """Streamed BM at scale: a 4M+-entry graph runs νBM end-to-end through
+    the pallas_stream engine with window-bounded residency, bit-matching
+    the reference."""
+    from repro.core.lpa import build_workspace
+    from repro.graphs.csr import streamed_peak_window_bytes
+    from repro.graphs.generators import rmat
+    g = rmat(17, edge_factor=20, seed=2)
+    n_entries = int(np.asarray(g.degrees).sum())
+    assert n_entries >= 4_000_000, n_entries
+    cfg = LPAConfig(method="bm", rho=2, fold_backend="pallas_stream",
+                    max_iters=2, track_frontier=False)
+    ws = build_workspace(g, cfg)
+    peak = streamed_peak_window_bytes(ws.stream_plan)
+    assert peak <= 2 * cfg.stream_window * 8
+    assert peak * 100 < 8 * n_entries
+    res = lpa(g, cfg, ws=ws)
+    ref = lpa(g, LPAConfig(method="bm", rho=2, fold_backend="jnp",
+                           max_iters=2, track_frontier=False))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(ref.labels))

@@ -1,7 +1,6 @@
 """Multi-device tests. These need >1 XLA host device, so each runs in a
 subprocess with its own XLA_FLAGS (conftest keeps the main process at one
 device so smoke tests see the real topology)."""
-import json
 import os
 import subprocess
 import sys

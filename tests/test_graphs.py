@@ -1,12 +1,10 @@
 """CSR construction, generators, sampler, and the LPA-driven partitioner."""
 import numpy as np
-import pytest
 
-from repro.core.modularity import modularity, nmi
+from repro.core.modularity import nmi
 from repro.graphs.csr import build_csr
 from repro.graphs.generators import (chain_kmer, grid2d, paper_suite,
-                                     powerlaw_communities, ring_of_cliques,
-                                     rmat, sbm)
+                                     powerlaw_communities, rmat, sbm)
 from repro.graphs.partition import (contiguous_parts, edge_cut_fraction,
                                     lpa_partition)
 from repro.graphs.sampler import sample_fanout, sampled_shape

@@ -1,6 +1,5 @@
 """Launch-layer tests: registry completeness (the assigned 40-cell matrix),
 mesh builders, the HLO collective-bytes parser, and roofline arithmetic."""
-import numpy as np
 import pytest
 
 from repro.configs.registry import all_arch_ids, get_arch

@@ -2,13 +2,12 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 from _propcheck import given, settings, st
 
 from repro.configs.registry import get_arch
 from repro.models.recsys.dcn_v2 import (dcn_forward, dcn_loss,
                                         dcn_retrieval_scores, init_dcn)
-from repro.models.recsys.embedding import embedding_bag, init_embedding_bag
+from repro.models.recsys.embedding import embedding_bag
 
 
 def test_embedding_bag_single_hot_is_gather():

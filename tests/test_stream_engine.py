@@ -253,7 +253,8 @@ def test_lpa_e2e_stream_bit_matches_jnp():
                                   np.asarray(res_auto.labels))
 
 
-@pytest.mark.slow  # |E| >= 4M end-to-end in interpret mode (~30 s)
+@pytest.mark.slow
+@pytest.mark.streaming_e2e  # |E| >= 4M end-to-end in interpret mode (~30 s)
 def test_stream_large_graph_e2e():
     """The ROADMAP's scale blocker: a 4M+-entry graph runs the streamed
     engine end-to-end in interpret mode with bounded per-window residency,
