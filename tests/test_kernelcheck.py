@@ -1,0 +1,72 @@
+"""kernelcheck self-tests: the seeded corpus trips every rule exactly
+once, the real tree is clean, and the CLI exit codes are stable."""
+import collections
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)  # the `tools` package lives at the repo root
+
+from tools.kernelcheck import build_index, run_all  # noqa: E402
+
+TESTDATA = os.path.join(REPO, "tools", "kernelcheck", "testdata")
+
+
+def _corpus_findings():
+    return run_all(build_index(TESTDATA), tests_dir=None)
+
+
+def test_corpus_triggers_every_rule_exactly_once():
+    counts = collections.Counter(f.rule for f in _corpus_findings())
+    assert counts == {"R1": 1, "R2": 1, "R3": 1, "R4": 1, "R5": 1}, [
+        f.format() for f in _corpus_findings()]
+
+
+def test_corpus_findings_point_at_the_seeded_files():
+    by_rule = {f.rule: os.path.basename(f.path) for f in _corpus_findings()}
+    assert by_rule == {
+        "R1": "r1_wide_dtype.py",
+        "R2": "r2_window_guard.py",
+        "R3": "r3_dispatch.py",
+        "R4": "r4_impure.py",
+        "R5": "r5_registry.py",
+    }
+
+
+def test_findings_carry_machine_readable_hints():
+    for f in _corpus_findings():
+        d = f.to_dict()
+        assert set(d) == {"rule", "path", "line", "message", "hint"}
+        assert d["rule"].startswith("R") and d["line"] > 0
+        assert d["hint"]  # every rule ships a fix-it hint
+
+
+def test_repo_tree_is_clean():
+    findings = run_all(
+        build_index(os.path.join(REPO, "src", "repro")),
+        tests_dir=os.path.join(REPO, "tests"))
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_cli_exit_codes_and_json_report(tmp_path):
+    report = tmp_path / "report.json"
+    dirty = subprocess.run(
+        [sys.executable, "-m", "tools.kernelcheck",
+         os.path.join("tools", "kernelcheck", "testdata"),
+         "--tests", "", "--json", str(report)],
+        cwd=REPO, capture_output=True, text=True)
+    assert dirty.returncode == 1, dirty.stdout + dirty.stderr
+    assert report.exists()
+
+    clean = subprocess.run(
+        [sys.executable, "-m", "tools.kernelcheck",
+         os.path.join("src", "repro")],
+        cwd=REPO, capture_output=True, text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+
+    usage = subprocess.run(
+        [sys.executable, "-m", "tools.kernelcheck", "no/such/dir"],
+        cwd=REPO, capture_output=True, text=True)
+    assert usage.returncode == 2

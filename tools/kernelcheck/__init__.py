@@ -1,0 +1,22 @@
+"""kernelcheck: static contract checker for the Pallas fold stack.
+
+AST + lightweight-dataflow rules over the repo's kernels, fold plans and
+engine registry (DESIGN.md §12):
+
+  R1  plan/kernel dtype agreement (no silent 64-bit widening; no dead
+      plan fields)
+  R2  window/grid slice safety (guarded packers; 1-D kernel operands come
+      from a pad/window producer)
+  R3  dispatch accounting (declared ``*_dispatches_per_iter`` match the
+      ``pl.pallas_call`` sites reachable per engine per iteration)
+  R4  purity of traced code (no host calls/branches in kernel bodies or
+      index_maps; no mutable defaults in kernel modules)
+  R5  registry closure (every engine ``get_engine`` claims resolves and
+      has parity fixtures in tests/)
+
+Run ``python -m tools.kernelcheck src/repro`` from the repo root.
+"""
+from tools.kernelcheck.analyzer import Finding, RepoIndex, build_index
+from tools.kernelcheck.rules import run_all
+
+__all__ = ["Finding", "RepoIndex", "build_index", "run_all"]

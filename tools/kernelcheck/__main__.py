@@ -1,0 +1,64 @@
+"""CLI: ``python -m tools.kernelcheck <target> [--tests DIR] [--json PATH]``.
+
+Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from tools.kernelcheck.analyzer import build_index
+from tools.kernelcheck.rules import run_all
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.kernelcheck",
+        description="Static contract checker for the Pallas fold stack "
+                    "(rules R1-R5; see DESIGN.md §12).")
+    parser.add_argument("target",
+                        help="package directory or file to analyze "
+                             "(e.g. src/repro)")
+    parser.add_argument("--tests", default="tests",
+                        help="tests directory for R5 parity-fixture checks "
+                             "(pass '' to disable; default: tests)")
+    parser.add_argument("--json", dest="json_path", default=None,
+                        help="also write findings as a JSON report")
+    args = parser.parse_args(argv)
+
+    if not os.path.exists(args.target):
+        print(f"kernelcheck: no such target: {args.target}", file=sys.stderr)
+        return 2
+    try:
+        index = build_index(args.target)
+    except (OSError, SyntaxError) as exc:
+        print(f"kernelcheck: cannot analyze {args.target}: {exc}",
+              file=sys.stderr)
+        return 2
+
+    tests_dir = args.tests or None
+    findings = run_all(index, tests_dir=tests_dir)
+
+    for f in findings:
+        print(f.format())
+    n_mod = len(index.modules)
+    print(f"kernelcheck: {len(findings)} finding(s) across {n_mod} "
+          f"module(s) in {args.target}")
+
+    if args.json_path:
+        report = {
+            "target": args.target,
+            "modules": sorted(index.modules),
+            "findings": [f.to_dict() for f in findings],
+        }
+        with open(args.json_path, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

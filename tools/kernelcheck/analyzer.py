@@ -1,0 +1,244 @@
+"""Shared AST infrastructure for the kernelcheck rules.
+
+Builds a light repo index (modules, functions, classes, import maps) plus
+the handful of resolution helpers every rule leans on: dotted-name
+resolution through import aliases, call-target resolution into the index,
+and the kernel-reachability closure (functions transitively called from
+Pallas kernel bodies, i.e. functions with ``*_ref`` parameters).
+
+Everything here is intentionally conservative: when a name cannot be
+resolved, rules treat it as unknown rather than guessing — kernelcheck
+must stay zero-false-positive on a clean tree.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, List, Optional, Set, Tuple
+
+#: canonical dotted suffixes for the external APIs the rules care about
+PALLAS_CALL = "pallas_call"
+BLOCK_SPEC = "BlockSpec"
+SHAPE_DTYPE_STRUCT = "ShapeDtypeStruct"
+
+#: dtype attribute names wider than the kernels' 32-bit contract
+WIDE_DTYPES = ("int64", "float64", "uint64", "complex128")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation: machine-readable ID + location + fix-it hint."""
+
+    rule: str      # "R1" .. "R5"
+    path: str      # file path as given on the command line
+    line: int
+    message: str
+    hint: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}: [{self.rule}] {self.message}\n"
+                f"    fix: {self.hint}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """Parsed module + the symbol tables the rules query."""
+
+    name: str                # dotted module name (e.g. repro.graphs.csr)
+    path: str
+    tree: ast.Module
+    #: local name -> dotted target, merged over module- AND function-level
+    #: imports (``import a.b as c``, ``from m import x as y``)
+    imports: Dict[str, str] = dataclasses.field(default_factory=dict)
+    #: qualname ("fn" or "Cls.meth") -> def node
+    functions: Dict[str, ast.FunctionDef] = dataclasses.field(
+        default_factory=dict)
+    classes: Dict[str, ast.ClassDef] = dataclasses.field(default_factory=dict)
+    #: module-level assigned names (constants, registries)
+    module_vars: Dict[str, ast.AST] = dataclasses.field(default_factory=dict)
+
+
+def _collect_imports(tree: ast.Module) -> Dict[str, str]:
+    imports: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                target = alias.name if alias.asname else alias.name.split(".")[0]
+                imports[local] = target
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:  # relative imports are not used in this repo
+                continue
+            for alias in node.names:
+                local = alias.asname or alias.name
+                imports[local] = f"{node.module}.{alias.name}"
+    return imports
+
+
+def parse_module(name: str, path: str) -> ModuleInfo:
+    with open(path, "r", encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    mi = ModuleInfo(name=name, path=path, tree=tree)
+    mi.imports = _collect_imports(tree)
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            mi.functions[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            mi.classes[node.name] = node
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    mi.functions[f"{node.name}.{item.name}"] = item
+        elif isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    mi.module_vars[tgt.id] = node.value
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            if node.value is not None:
+                mi.module_vars[node.target.id] = node.value
+    return mi
+
+
+class RepoIndex:
+    """All analyzed modules, keyed by dotted name."""
+
+    def __init__(self) -> None:
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.root_packages: Set[str] = set()
+
+    # -- name resolution --------------------------------------------------
+
+    def dotted(self, mi: ModuleInfo, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to a canonical dotted path via the
+        module's import aliases (``pl.pallas_call`` ->
+        ``jax.experimental.pallas.pallas_call``). None when the base name is
+        not an import (a local variable, say)."""
+        parts: List[str] = []
+        cur = node
+        while isinstance(cur, ast.Attribute):
+            parts.append(cur.attr)
+            cur = cur.value
+        if not isinstance(cur, ast.Name):
+            return None
+        base = cur.id
+        parts.append(base)
+        parts.reverse()
+        if base in mi.imports:
+            return ".".join([mi.imports[base]] + parts[1:])
+        return None
+
+    def resolve_function(self, dotted: str
+                         ) -> Optional[Tuple[ModuleInfo, str]]:
+        """Map a dotted path to an in-index (module, qualname) function."""
+        for cut in range(len(dotted), 0, -1):
+            if dotted[cut:cut + 1] not in ("", "."):
+                continue
+            mod, rest = dotted[:cut], dotted[cut + 1:]
+            mi = self.modules.get(mod)
+            if mi is not None and rest in mi.functions:
+                return mi, rest
+        return None
+
+    def resolve_call(self, mi: ModuleInfo, func: ast.AST
+                     ) -> Optional[Tuple[ModuleInfo, str]]:
+        """Resolve a call's func expression to an in-index function: a
+        module-local name, or an imported/aliased dotted path."""
+        if isinstance(func, ast.Name):
+            if func.id in mi.functions:
+                return mi, func.id
+            target = mi.imports.get(func.id)
+            if target is not None:
+                return self.resolve_function(target)
+            return None
+        if isinstance(func, ast.Attribute):
+            dotted = self.dotted(mi, func)
+            if dotted is not None:
+                return self.resolve_function(dotted)
+        return None
+
+    def is_external(self, mi: ModuleInfo, node: ast.AST, suffix: str) -> bool:
+        """Does this Name/Attribute resolve to an external API whose dotted
+        path ends with ``.{suffix}`` (or is exactly ``suffix``)?"""
+        dotted = self.dotted(mi, node)
+        if dotted is None:
+            return False
+        return dotted == suffix or dotted.endswith(f".{suffix}")
+
+    # -- kernel discovery --------------------------------------------------
+
+    @staticmethod
+    def func_params(fn: ast.FunctionDef) -> List[str]:
+        args = fn.args
+        names = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        return names
+
+    @classmethod
+    def is_kernel_fn(cls, fn: ast.FunctionDef) -> bool:
+        """A Pallas kernel body: at least one ``*_ref`` parameter."""
+        return any(p.endswith("_ref") for p in cls.func_params(fn))
+
+    def kernel_reachable(self) -> Set[Tuple[str, str]]:
+        """(module, qualname) of kernel bodies plus every in-index function
+        transitively *called* from one (helpers like ``_gather_tile``).
+        Functions only passed as arguments (wrappers, index_maps) are not
+        reachable — they run on the host."""
+        seeds = [(mi.name, qual) for mi in self.modules.values()
+                 for qual, fn in mi.functions.items() if self.is_kernel_fn(fn)]
+        reached: Set[Tuple[str, str]] = set()
+        frontier = list(seeds)
+        while frontier:
+            key = frontier.pop()
+            if key in reached:
+                continue
+            reached.add(key)
+            mi = self.modules[key[0]]
+            fn = mi.functions[key[1]]
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                target = self.resolve_call(mi, node.func)
+                if target is not None:
+                    frontier.append((target[0].name, target[1]))
+        return reached
+
+
+def _iter_py_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__", ".git"))
+        for fname in sorted(filenames):
+            if fname.endswith(".py"):
+                yield os.path.join(dirpath, fname)
+
+
+def build_index(target: str) -> RepoIndex:
+    """Index every .py under ``target``.
+
+    Directory targets are rooted at their basename (``src/repro`` ->
+    ``repro.graphs.csr``) so in-repo absolute imports resolve; this also
+    covers namespace packages with no top-level ``__init__.py``.
+    """
+    index = RepoIndex()
+    target = target.rstrip(os.sep)
+    if os.path.isfile(target):
+        files = [target]
+        base = os.path.dirname(target)
+    else:
+        files = list(_iter_py_files(target))
+        base = os.path.dirname(target)
+    for path in files:
+        rel = os.path.relpath(path, base)
+        dotted = rel[:-3].replace(os.sep, ".")
+        if dotted.endswith(".__init__"):
+            dotted = dotted[: -len(".__init__")]
+        index.modules[dotted] = parse_module(dotted, path)
+        index.root_packages.add(dotted.split(".")[0])
+    return index

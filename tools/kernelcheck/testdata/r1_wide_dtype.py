@@ -1,0 +1,7 @@
+"""Seeded R1 violation: 64-bit widening inside a kernel body."""
+import jax.numpy as jnp
+
+
+def _widen_kernel(x_ref, o_ref):
+    # BUG: widens to int64 inside the kernel; plans feed 32-bit refs.
+    o_ref[...] = x_ref[...].astype(jnp.int64)

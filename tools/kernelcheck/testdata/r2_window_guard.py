@@ -1,0 +1,10 @@
+"""Seeded R2 violation: window packer without the cap >= chunk guard."""
+
+
+def _pack_bad_windows(row_count, chunk, window_cap):
+    # BUG: never validates window_cap against chunk, so a cap smaller
+    # than the chunk width lets `rel_start + chunk` overrun the window.
+    windows = []
+    for count in row_count:
+        windows.append((count // window_cap, count % window_cap))
+    return windows

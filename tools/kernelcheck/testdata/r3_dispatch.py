@@ -1,0 +1,27 @@
+"""Seeded R3 violation: declared dispatch count disagrees with the body."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _toy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1
+
+
+class ToyEngine:
+    name = "toy"
+
+    def dispatches_per_iter(self, plan):
+        # BUG: claims two dispatches, but mg_select reaches exactly one
+        # pl.pallas_call site.
+        return 2
+
+    def mg_select(self, plan, labels):
+        return pl.pallas_call(
+            _toy_kernel,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((8, 8), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((8, 8), jnp.int32),
+            interpret=True,
+        )(labels)

@@ -1,0 +1,7 @@
+"""Seeded R4 violation: host-side cast inside a kernel body."""
+
+
+def _impure_kernel(x_ref, o_ref):
+    # BUG: float() forces a host readback of a traced value.
+    scale = float(x_ref[0])
+    o_ref[...] = x_ref[...] * scale

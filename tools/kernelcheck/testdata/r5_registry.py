@@ -1,0 +1,17 @@
+"""Seeded R5 violation: ENGINES claims a backend get_engine cannot build."""
+
+ENGINES = ("jnp", "ghost")
+
+
+class JnpToy:
+    name = "jnp"
+
+    def fold(self, x):
+        return x
+
+
+def get_engine(name):
+    # BUG: the registry claims "ghost" but there is no resolving branch.
+    if name == "jnp":
+        return JnpToy()
+    raise ValueError(f"unknown engine: {name!r}")
