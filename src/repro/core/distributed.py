@@ -458,7 +458,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
             g, rs, rc, dm = stream_meta[0]
             rnd = StreamedRound(entry_gather=g[0].reshape(-1),
                                 row_start=rs[0], row_count=rc[0],
-                                step_dmax=dm[0], n_rows=0, n_entries_in=0,
+                                step_dmax=dm[0], n_entries_in=0,
                                 window_entries=g.shape[-1])
             ck, wk = bm_fold_round_stream(rnd, entry_labels, entry_weights,
                                           init, chunk=chunk,
@@ -469,7 +469,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                                                        bm_fold_round_fused)
             rs, rc, dm = fused_meta[0]
             rnd = FusedRound(row_start=rs[0], row_count=rc[0],
-                             step_dmax=dm[0], n_rows=0,
+                             step_dmax=dm[0],
                              n_entries_in=fused_entries[0])
             ck, wk = bm_fold_round_fused(rnd, entry_labels, entry_weights,
                                          init, chunk=chunk,
@@ -493,7 +493,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
         for g, rs, rc, dm in stream_meta:
             rnd = StreamedRound(entry_gather=g[0].reshape(-1),
                                 row_start=rs[0], row_count=rc[0],
-                                step_dmax=dm[0], n_rows=0, n_entries_in=0,
+                                step_dmax=dm[0], n_entries_in=0,
                                 window_entries=g.shape[-1])
             s_k, s_v = stream_fold_round(rnd, entry_labels, entry_weights,
                                          k=k, chunk=chunk,
@@ -509,7 +509,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
         interpret = _interpret_default()
         for r, (rs, rc, dm) in enumerate(fused_meta):
             rnd = FusedRound(row_start=rs[0], row_count=rc[0],
-                             step_dmax=dm[0], n_rows=0,
+                             step_dmax=dm[0],
                              n_entries_in=fused_entries[r])
             s_k, s_v = fused_fold_round(rnd, entry_labels, entry_weights,
                                         k=k, chunk=chunk,

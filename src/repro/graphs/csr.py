@@ -292,12 +292,11 @@ class FusedRound:
     row_start: jnp.ndarray  # [n_steps, tile_r] int32 — offset into the flat entries (0 on pad rows)
     row_count: jnp.ndarray  # [n_steps, tile_r] int32 — valid entries of the row (0 on pad rows)
     step_dmax: jnp.ndarray  # [n_steps, 1] int32 — max row_count within the step
-    n_rows: int             # real (unpadded) rows this round produces
     n_entries_in: int       # flat entry-array length this round consumes
 
     def tree_flatten(self):
         return ((self.row_start, self.row_count, self.step_dmax),
-                (self.n_rows, self.n_entries_in))
+                (self.n_entries_in,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -328,7 +327,6 @@ class FusedFoldPlan:
     n_nodes: int
     k: int
     chunk: int
-    tile_r: int
     row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_steps * tile_r]
     row_rank0: Optional[jnp.ndarray] = None       # [round-0 n_steps * tile_r]
     max_rows0: int = 1  # max chunk rows any vertex owns on round 0
@@ -336,14 +334,13 @@ class FusedFoldPlan:
     def tree_flatten(self):
         return ((self.rounds, self.row_to_vertex, self.row_to_vertex0,
                  self.row_rank0),
-                (self.n_nodes, self.k, self.chunk, self.tile_r,
-                 self.max_rows0))
+                (self.n_nodes, self.k, self.chunk, self.max_rows0))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], *aux[:4],
+        return cls(children[0], children[1], *aux[:3],
                    row_to_vertex0=children[2], row_rank0=children[3],
-                   max_rows0=aux[4])
+                   max_rows0=aux[3])
 
     @property
     def n_rounds(self) -> int:
@@ -392,7 +389,7 @@ def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
         rounds.append(FusedRound(
             row_start=jnp.asarray(rs2), row_count=jnp.asarray(rc2),
             step_dmax=jnp.asarray(rc2.max(axis=1, keepdims=True)),
-            n_rows=total_rows, n_entries_in=n_entries))
+            n_entries_in=n_entries))
         if rtv0 is None:  # round 0: (vertex, rank) per padded row
             rtv0 = np.concatenate(
                 [row_vertex, np.full(pad, -1, np.int64)]).astype(np.int32)
@@ -412,7 +409,7 @@ def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
         n_entries = n_steps * tile_r * k
 
     return FusedFoldPlan(rounds=tuple(rounds), row_to_vertex=jnp.asarray(rtv),
-                         n_nodes=n, k=k, chunk=chunk, tile_r=tile_r,
+                         n_nodes=n, k=k, chunk=chunk,
                          row_to_vertex0=jnp.asarray(rtv0),
                          row_rank0=jnp.asarray(rank0), max_rows0=max_rows0)
 
@@ -454,14 +451,13 @@ class StreamedRound:
     row_start: jnp.ndarray     # [n_windows, R] int32 — window-RELATIVE entry offset (0 on pad rows)
     row_count: jnp.ndarray     # [n_windows, R] int32 — valid entries of the row (0 on pad rows)
     step_dmax: jnp.ndarray     # [n_windows, 1] int32 — max row_count within the window
-    n_rows: int                # real (unpadded) rows this round produces
     n_entries_in: int          # flat source entry-array length this round consumes
     window_entries: int        # W — entry slots per window (slice-safe: rel+chunk <= W)
 
     def tree_flatten(self):
         return ((self.entry_gather, self.row_start, self.row_count,
                  self.step_dmax),
-                (self.n_rows, self.n_entries_in, self.window_entries))
+                (self.n_entries_in, self.window_entries))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -487,8 +483,6 @@ class StreamedFoldPlan:
     n_nodes: int
     k: int         # sketch slots per row
     chunk: int     # entries per virtual-vertex row (paper D_H)
-    tile_r: int    # row slots per window
-    window_cap: int  # requested max entries per window (actual W <= aligned cap)
     # round-0 slot coordinates (BM fold / rescan second pass — see
     # FusedFoldPlan.row_to_vertex0):
     row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_windows * tile_r]
@@ -498,14 +492,13 @@ class StreamedFoldPlan:
     def tree_flatten(self):
         return ((self.rounds, self.row_to_vertex, self.row_to_vertex0,
                  self.row_rank0),
-                (self.n_nodes, self.k, self.chunk, self.tile_r,
-                 self.window_cap, self.max_rows0))
+                (self.n_nodes, self.k, self.chunk, self.max_rows0))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], *aux[:5],
+        return cls(children[0], children[1], *aux[:3],
                    row_to_vertex0=children[2], row_rank0=children[3],
-                   max_rows0=aux[5])
+                   max_rows0=aux[3])
 
     @property
     def n_rounds(self) -> int:
@@ -636,7 +629,7 @@ def build_streamed_rounds(counts: np.ndarray, starts: np.ndarray,
         pack = _pack_stream_windows(row_count, chunk, tile_r, window_cap)
         rnd = _materialize_stream_round(row_vstart, row_count, pack,
                                         pos_table, tile_r)
-        rnd.update(n_rows=total_rows, n_entries_in=int(n_entries),
+        rnd.update(n_entries_in=int(n_entries),
                    window_entries=pack["window_entries"])
         # slot -> (owning vertex, chunk rank) of this round's rows (-1/0 on
         # pad slots) — round 0's is what the BM fold and rescan reduce over
@@ -693,12 +686,11 @@ def build_streamed_fold_plan(degrees: np.ndarray, k: int = 8,
                       row_start=jnp.asarray(r["row_start"]),
                       row_count=jnp.asarray(r["row_count"]),
                       step_dmax=jnp.asarray(r["step_dmax"]),
-                      n_rows=r["n_rows"], n_entries_in=r["n_entries_in"],
+                      n_entries_in=r["n_entries_in"],
                       window_entries=r["window_entries"])
         for r in rounds_np)
     return StreamedFoldPlan(rounds=rounds, row_to_vertex=jnp.asarray(rtv),
-                            n_nodes=n, k=k, chunk=chunk, tile_r=tile_r,
-                            window_cap=window_entries,
+                            n_nodes=n, k=k, chunk=chunk,
                             row_to_vertex0=jnp.asarray(
                                 rounds_np[0]["row_to_vertex"]),
                             row_rank0=jnp.asarray(rounds_np[0]["row_rank"]),
