@@ -1,0 +1,199 @@
+"""Runtime checkify backstops for the fold engines (DESIGN.md §12).
+
+:class:`CheckedEngine` wraps any FoldEngine and numerically validates the
+runtime counterparts of kernelcheck's static contracts at every fold entry
+point, via ``jax.experimental.checkify`` user checks:
+
+  * **OOB** — every plan gather/slice index stays inside the entry array
+    it reads (the runtime twin of rule R2's slice-safety proof);
+  * **NaN** — entry weights are finite and non-negative going in, folded
+    sketch weights are NaN-free coming out;
+  * **labels** — move selections return real (non-negative) labels.
+
+Automatic checkify instrumentation (``index_checks | nan_checks``) does
+not compose with the fused/streamed kernels: threading the error state
+through their in-kernel ref-reading loops invalidates the interpreter's
+input effects. The invariants are therefore asserted explicitly at the
+engine boundary, which keeps the behavior uniform across all four
+backends.
+
+The wrapper throws eagerly (``checkify.Error.throw``), so it is meant for
+eager validation runs — the parity suites under ``REPRO_CHECKED=1`` and
+ad-hoc debugging. Jitted drivers (``lpa_move``, the distributed step)
+resolve their engines with ``checked=False``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import checkify
+
+__all__ = ["CheckedEngine"]
+
+
+def _throw(contract) -> None:
+    """Run a zero-arg contract under checkify; raise on the first failed
+    check (checkify.JaxRuntimeError)."""
+    err, _ = checkify.checkify(contract, errors=checkify.user_checks)()
+    err.throw()
+
+
+def _entries_contract(entry_labels, entry_weights):
+    del entry_labels  # labels are opaque ids; only the weights carry NaN risk
+
+    def contract():
+        checkify.check(jnp.all(jnp.isfinite(entry_weights)),
+                       "NaN/inf entry weight fed to the fold")
+        checkify.check(jnp.all(entry_weights >= 0),
+                       "negative entry weight fed to the fold")
+    return contract
+
+
+def _labels_contract(labels):
+    def contract():
+        checkify.check(jnp.all(labels >= 0), "negative input label")
+    return contract
+
+
+def _bucket_plan_contract(plan):
+    """FoldPlan (jnp/pallas backends): bucket gathers stay inside each
+    round's flat entry array."""
+    def contract():
+        for rnd in plan.rounds:
+            for bucket in rnd.buckets:
+                checkify.check(
+                    jnp.all(bucket.gather < rnd.n_entries_in),
+                    "bucket gather index past the round's entry array (OOB)")
+                checkify.check(jnp.all(bucket.gather >= -1),
+                               "bucket gather index below the -1 pad sentinel")
+    return contract
+
+
+def _fused_plan_contract(plan):
+    """FusedFoldPlan: each row's entry window stays inside the round's
+    flat entry array (the in-kernel gather slices [start, start+chunk) of
+    the chunk-padded copy; real data ends at start+count)."""
+    def contract():
+        for rnd in plan.rounds:
+            checkify.check(jnp.all(rnd.row_count >= 0),
+                           "negative fused row count")
+            checkify.check(
+                jnp.all(rnd.row_start + rnd.row_count <= rnd.n_entries_in),
+                "fused row window past the round's entry array (OOB)")
+    return contract
+
+
+def _stream_plan_contract(plan):
+    """StreamedFoldPlan: window gathers stay inside the source array and
+    every row's full-chunk slice stays inside its window (rule R2's
+    slice-safety invariant, checked numerically)."""
+    chunk = plan.chunk
+
+    def contract():
+        for rnd in plan.rounds:
+            checkify.check(jnp.all(rnd.entry_gather < rnd.n_entries_in),
+                           "window gather index past the source entries (OOB)")
+            checkify.check(jnp.all(rnd.entry_gather >= -1),
+                           "window gather index below the -1 pad sentinel")
+            checkify.check(
+                jnp.all((rnd.row_count == 0)
+                        | (rnd.row_start + chunk <= rnd.window_entries)),
+                "row's full-chunk slice overruns its window (OOB)")
+    return contract
+
+
+def _candidates_contract(cand, wts):
+    def contract():
+        checkify.check(jnp.all(~jnp.isnan(wts)),
+                       "NaN folded sketch weight")
+        checkify.check(jnp.all(cand >= -1),
+                       "candidate label below the -1 empty sentinel")
+    return contract
+
+
+def _selection_contract(out):
+    def contract():
+        checkify.check(jnp.all(out >= 0),
+                       "move selection produced a negative label")
+    return contract
+
+
+class CheckedEngine:
+    """A FoldEngine proxy asserting the OOB/NaN/label contracts around
+    every fold entry point.
+
+    Metadata (``name``, the ``uses_*_plan`` flags, dispatch accounting)
+    delegates to the wrapped engine untouched, so a checked engine is a
+    drop-in replacement everywhere an engine is consumed eagerly.
+    """
+
+    checked = True
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+    def __repr__(self):
+        return f"CheckedEngine({self._inner!r})"
+
+    def _pre(self, plan, aux_plan, entry_labels, entry_weights):
+        _throw(_entries_contract(entry_labels, entry_weights))
+        if self._inner.uses_fused_plan:
+            if aux_plan is not None:  # None: the engine raises its own error
+                _throw(_fused_plan_contract(aux_plan))
+        elif self._inner.uses_stream_plan:
+            if aux_plan is not None:
+                _throw(_stream_plan_contract(aux_plan))
+        elif plan is not None:
+            _throw(_bucket_plan_contract(plan))
+
+    # -- tile-level folds --------------------------------------------------
+
+    def mg_fold_tile(self, labels, weights, k):
+        _throw(_entries_contract(labels, weights))
+        s_k, s_v = self._inner.mg_fold_tile(labels, weights, k)
+        _throw(_candidates_contract(s_k, s_v))
+        return s_k, s_v
+
+    def bm_fold_tile(self, labels, weights, init_label=None):
+        _throw(_entries_contract(labels, weights))
+        ck, wk = self._inner.bm_fold_tile(labels, weights, init_label)
+        _throw(_candidates_contract(ck, wk))
+        return ck, wk
+
+    # -- plan-level entry points -------------------------------------------
+
+    def mg_candidates(self, plan, aux_plan, entry_labels, entry_weights):
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        cand, wts = self._inner.mg_candidates(plan, aux_plan,
+                                              entry_labels, entry_weights)
+        _throw(_candidates_contract(cand, wts))
+        return cand, wts
+
+    def mg_select(self, plan, aux_plan, entry_labels, entry_weights,
+                  labels, seed):
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        _throw(_labels_contract(labels))
+        out = self._inner.mg_select(plan, aux_plan, entry_labels,
+                                    entry_weights, labels, seed)
+        _throw(_selection_contract(out))
+        return out
+
+    def mg_rescan(self, plan, aux_plan, entry_labels, entry_weights,
+                  labels, seed):
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        _throw(_labels_contract(labels))
+        out = self._inner.mg_rescan(plan, aux_plan, entry_labels,
+                                    entry_weights, labels, seed)
+        _throw(_selection_contract(out))
+        return out
+
+    def bm_fold_plan(self, plan, aux_plan, entry_labels, entry_weights,
+                     labels):
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        _throw(_labels_contract(labels))
+        c, w = self._inner.bm_fold_plan(plan, aux_plan, entry_labels,
+                                        entry_weights, labels)
+        _throw(_candidates_contract(c, w))
+        return c, w

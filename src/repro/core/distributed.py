@@ -572,7 +572,9 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     stream = engine == "pallas_stream"
     if engine is not None and not (fused or stream) and fold_tile is None:
         from repro.core.fold_engine import get_engine
-        eng = get_engine(engine)
+        # checked=False: the tile folds run inside the shard_mapped step,
+        # where the checkify contract proxy's eager throw cannot trace
+        eng = get_engine(engine, checked=False)
         fold_tile = eng.bm_fold_tile if method == "bm" else eng.mg_fold_tile
     fold_tile = fold_tile or (sketch_lib.bm_fold_tile if method == "bm"
                               else sketch_lib.mg_fold_tile)

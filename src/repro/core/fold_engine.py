@@ -47,6 +47,7 @@ tests/test_rescan_engines.py and tests/test_kernels.py).
 """
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -398,9 +399,26 @@ def resolve_auto(n_entries: int,
             else "pallas_stream")
 
 
+def _maybe_checked(engine: FoldEngine, checked: Optional[bool]) -> FoldEngine:
+    """Wrap an engine in the checkify contract proxy when asked.
+
+    ``checked=None`` defers to the ``REPRO_CHECKED`` env hook (how the
+    parity suites opt every ``get_engine`` call in at once); the wrapper
+    throws eagerly, so jitted drivers must pass ``checked=False``.
+    """
+    if checked is None:
+        checked = os.environ.get("REPRO_CHECKED", "0").lower() \
+            not in ("", "0", "false")
+    if not checked:
+        return engine
+    from repro.core.checked import CheckedEngine
+    return CheckedEngine(engine)
+
+
 def get_engine(name: str, mg_variant: str = "paper", *,
                n_entries: Optional[int] = None,
-               vmem_budget_bytes: Optional[int] = None) -> FoldEngine:
+               vmem_budget_bytes: Optional[int] = None,
+               checked: Optional[bool] = None) -> FoldEngine:
     """Resolve a fold backend by config name.
 
     ``mg_variant='exact_weighted'`` is implemented on the jnp engine only;
@@ -410,6 +428,11 @@ def get_engine(name: str, mg_variant: str = "paper", *,
     round-0 entry volume ``n_entries`` against ``vmem_budget_bytes``
     (:func:`resolve_auto`); both the driver and ``build_workspace`` resolve
     with the same inputs, so the chosen engine always finds its plan.
+
+    ``checked=True`` (or ``REPRO_CHECKED=1`` with ``checked=None``) wraps
+    the engine in :class:`repro.core.checked.CheckedEngine`, which asserts
+    the OOB/NaN contracts via jax.experimental.checkify on every fold —
+    eager validation only; jitted callers pass ``checked=False``.
     """
     if name == "auto":
         if n_entries is None:
@@ -417,12 +440,12 @@ def get_engine(name: str, mg_variant: str = "paper", *,
                              "round-0 entry volume) to resolve the policy")
         name = resolve_auto(n_entries, vmem_budget_bytes)
     if name == "jnp":
-        return JnpEngine(mg_variant=mg_variant)
+        return _maybe_checked(JnpEngine(mg_variant=mg_variant), checked)
     if name == "pallas":
-        return PallasEngine()
+        return _maybe_checked(PallasEngine(), checked)
     if name == "pallas_fused":
-        return PallasFusedEngine()
+        return _maybe_checked(PallasFusedEngine(), checked)
     if name == "pallas_stream":
-        return PallasStreamEngine()
+        return _maybe_checked(PallasStreamEngine(), checked)
     raise ValueError(f"unknown fold backend {name!r}; expected one of "
                      f"{ENGINES + ('auto',)}")

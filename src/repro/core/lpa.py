@@ -138,9 +138,12 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     nbr_labels = labels[graph.indices]
     # "auto" resolves from the round-0 entry volume (a static plan field),
     # deterministically matching the plan build_workspace constructed.
+    # checked=False: lpa_move is traced/jitted and the checkify contract
+    # proxy throws eagerly (REPRO_CHECKED must not leak into the jit path)
     engine = get_engine(config.fold_backend, mg_variant=config.mg_variant,
                         n_entries=plan.rounds[0].n_entries_in,
-                        vmem_budget_bytes=config.vmem_budget_bytes)
+                        vmem_budget_bytes=config.vmem_budget_bytes,
+                        checked=False)
 
     aux = ws.stream_plan if engine.uses_stream_plan else ws.fused_plan
     if config.method == "exact":

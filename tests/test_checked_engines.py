@@ -1,0 +1,109 @@
+"""The checkify contract proxy: bit-identical passthrough on clean
+inputs, eager throws on OOB/NaN/label violations, REPRO_CHECKED hook."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import checkify
+
+from repro.core.checked import CheckedEngine
+from repro.core.fold_engine import ENGINES, get_engine
+from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
+                              build_streamed_fold_plan)
+
+K, CHUNK, TILE_R, WINDOW = 4, 8, 8, 64
+
+
+def _setup(n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    deg = rng.integers(1, 12, size=n).astype(np.int64)
+    n_entries = int(deg.sum())
+    el = jnp.asarray(rng.integers(0, n, size=n_entries), dtype=jnp.int32)
+    ew = jnp.asarray(rng.random(n_entries), dtype=jnp.float32)
+    labels = jnp.arange(n, dtype=jnp.int32)
+    plan = build_fold_plan(deg, k=K, chunk=CHUNK)
+    aux = {
+        "jnp": None,
+        "pallas": None,
+        "pallas_fused": build_fused_fold_plan(deg, k=K, chunk=CHUNK,
+                                              tile_r=TILE_R),
+        "pallas_stream": build_streamed_fold_plan(deg, k=K, chunk=CHUNK,
+                                                  tile_r=TILE_R,
+                                                  window_entries=WINDOW),
+    }
+    return plan, aux, el, ew, labels
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_checked_engine_is_bit_identical(backend):
+    plan, aux, el, ew, labels = _setup()
+    seed = jnp.int32(3)
+    plain = get_engine(backend, checked=False).mg_select(
+        plan, aux[backend], el, ew, labels, seed)
+    checked = get_engine(backend, checked=True).mg_select(
+        plan, aux[backend], el, ew, labels, seed)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(checked))
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_nan_entry_weight_is_caught(backend):
+    plan, aux, el, ew, labels = _setup()
+    bad = ew.at[0].set(jnp.nan)
+    eng = get_engine(backend, checked=True)
+    with pytest.raises(checkify.JaxRuntimeError,
+                       match="NaN/inf entry weight"):
+        eng.mg_select(plan, aux[backend], el, bad, labels, jnp.int32(0))
+
+
+def test_oob_stream_gather_is_caught():
+    plan, aux, el, ew, _ = _setup()
+    splan = aux["pallas_stream"]
+    rnd0 = splan.rounds[0]
+    bad_rnd = dataclasses.replace(
+        rnd0, entry_gather=rnd0.entry_gather.at[0].set(10**6))
+    bad = dataclasses.replace(splan, rounds=(bad_rnd,) + splan.rounds[1:])
+    eng = get_engine("pallas_stream", checked=True)
+    with pytest.raises(checkify.JaxRuntimeError, match="OOB"):
+        eng.mg_candidates(plan, bad, el, ew)
+
+
+def test_oob_fused_row_window_is_caught():
+    plan, aux, el, ew, _ = _setup()
+    fplan = aux["pallas_fused"]
+    rnd0 = fplan.rounds[0]
+    bad_rnd = dataclasses.replace(
+        rnd0, row_start=rnd0.row_start.at[0, 0].set(10**6))
+    bad = dataclasses.replace(fplan, rounds=(bad_rnd,) + fplan.rounds[1:])
+    eng = get_engine("pallas_fused", checked=True)
+    with pytest.raises(checkify.JaxRuntimeError, match="OOB"):
+        eng.mg_candidates(plan, bad, el, ew)
+
+
+def test_negative_input_label_is_caught():
+    plan, aux, el, ew, labels = _setup()
+    eng = get_engine("jnp", checked=True)
+    with pytest.raises(checkify.JaxRuntimeError,
+                       match="negative input label"):
+        eng.mg_select(plan, None, el, ew, labels.at[0].set(-7), jnp.int32(0))
+
+
+def test_repro_checked_env_hook(monkeypatch):
+    monkeypatch.setenv("REPRO_CHECKED", "1")
+    eng = get_engine("jnp")
+    assert isinstance(eng, CheckedEngine)
+    assert eng.name == "jnp"  # metadata passes through untouched
+    assert not isinstance(get_engine("jnp", checked=False), CheckedEngine)
+    monkeypatch.setenv("REPRO_CHECKED", "0")
+    assert not isinstance(get_engine("jnp"), CheckedEngine)
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_dispatch_accounting_passes_through(backend):
+    plan, aux, *_ = _setup()
+    plain = get_engine(backend, checked=False)
+    checked = get_engine(backend, checked=True)
+    assert checked.uses_fused_plan == plain.uses_fused_plan
+    assert checked.uses_stream_plan == plain.uses_stream_plan
+    assert checked.dispatches_per_iter(plan, aux[backend]) \
+        == plain.dispatches_per_iter(plan, aux[backend])
