@@ -26,16 +26,16 @@ SMOKE = LPAArchConfig(lpa=LPAConfig(method="mg", k=8, chunk=32),
 register(ArchSpec(
     arch_id="lpa-mg8", family="lpa", config=FULL, smoke=SMOKE,
     cells=[
-        ShapeCell("web_4b", "lpa", dict(n_nodes=256_000_000,
-                                        n_edges=3_400_000_000),
+        ShapeCell("web_4b", "lpa", {"n_nodes": 256_000_000,
+                                    "n_edges": 3_400_000_000},
                   note="sk-2005-scale: the graph that OOMs nu-LPA on A100"),
-        ShapeCell("web_560m", "lpa", dict(n_nodes=18_500_000,
-                                          n_edges=567_000_000),
+        ShapeCell("web_560m", "lpa", {"n_nodes": 18_500_000,
+                                      "n_edges": 567_000_000},
                   note="uk-2002 scale"),
-        ShapeCell("web_4b_halo", "lpa", dict(n_nodes=256_000_000,
-                                             n_edges=3_400_000_000,
-                                             halo=True, halo_frac=0.25,
-                                             hub_frac=0.002),
+        ShapeCell("web_4b_halo", "lpa", {"n_nodes": 256_000_000,
+                                         "n_edges": 3_400_000_000,
+                                         "halo": True, "halo_frac": 0.25,
+                                         "hub_frac": 0.002},
                   note="beyond-paper hub+halo label exchange "
                        "(EXPERIMENTS.md #Perf hillclimb: LPA)"),
     ],

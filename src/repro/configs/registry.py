@@ -33,10 +33,10 @@ class ArchSpec:
 
 def _lm_cells(decode_note: str = "") -> List[ShapeCell]:
     return [
-        ShapeCell("train_4k", "train", dict(seq=4096, batch=256)),
-        ShapeCell("prefill_32k", "prefill", dict(seq=32768, batch=32)),
-        ShapeCell("decode_32k", "decode", dict(seq=32768, batch=128)),
-        ShapeCell("long_500k", "decode", dict(seq=524288, batch=1),
+        ShapeCell("train_4k", "train", {"seq": 4096, "batch": 256}),
+        ShapeCell("prefill_32k", "prefill", {"seq": 32768, "batch": 32}),
+        ShapeCell("decode_32k", "decode", {"seq": 32768, "batch": 128}),
+        ShapeCell("long_500k", "decode", {"seq": 524288, "batch": 1},
                   note="full-attn(flagged): decode vs 500k KV is O(S)/token; "
                        "cell runs, flagged per the assignment rule"
                        + decode_note),
@@ -46,25 +46,25 @@ def _lm_cells(decode_note: str = "") -> List[ShapeCell]:
 def _gnn_cells() -> List[ShapeCell]:
     return [
         ShapeCell("full_graph_sm", "gnn_full",
-                  dict(n_nodes=2708, n_edges=10556, d_feat=1433)),
+                  {"n_nodes": 2708, "n_edges": 10556, "d_feat": 1433}),
         ShapeCell("minibatch_lg", "gnn_sampled",
-                  dict(n_nodes=232965, n_edges=114615892, batch_nodes=1024,
-                       fanouts=(15, 10))),
+                  {"n_nodes": 232965, "n_edges": 114615892,
+                   "batch_nodes": 1024, "fanouts": (15, 10)}),
         ShapeCell("ogb_products", "gnn_full",
-                  dict(n_nodes=2449029, n_edges=61859140, d_feat=100)),
+                  {"n_nodes": 2449029, "n_edges": 61859140, "d_feat": 100}),
         ShapeCell("molecule", "gnn_full",
-                  dict(n_nodes=30 * 128, n_edges=64 * 128, d_feat=16,
-                       batched=128)),
+                  {"n_nodes": 30 * 128, "n_edges": 64 * 128, "d_feat": 16,
+                   "batched": 128}),
     ]
 
 
 def _recsys_cells() -> List[ShapeCell]:
     return [
-        ShapeCell("train_batch", "recsys_train", dict(batch=65536)),
-        ShapeCell("serve_p99", "recsys_serve", dict(batch=512)),
-        ShapeCell("serve_bulk", "recsys_serve", dict(batch=262144)),
+        ShapeCell("train_batch", "recsys_train", {"batch": 65536}),
+        ShapeCell("serve_p99", "recsys_serve", {"batch": 512}),
+        ShapeCell("serve_bulk", "recsys_serve", {"batch": 262144}),
         ShapeCell("retrieval_cand", "retrieval",
-                  dict(batch=1, n_candidates=1000000)),
+                  {"batch": 1, "n_candidates": 1000000}),
     ]
 
 

@@ -518,7 +518,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
         s_k = s_k[:final_row_vertex.shape[0]]  # drop tile-padding rows
         s_v = s_v[:final_row_vertex.shape[0]]
     else:
-        for r, gather in enumerate(round_gathers):
+        for gather in round_gathers:
             gl, gw = sketch_lib._gather_entries(gather, entry_labels,
                                                 entry_weights)
             s_k, s_v = fold_tile(gl, gw, k)
@@ -594,8 +594,8 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
                     P(), P()]
         args = [nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed]
-        kw = dict(k=ws.k, v_pad=ws.v_pad, axis_names=axis_names,
-                  fold_tile=fold_tile, method=method)
+        kw = {"k": ws.k, "v_pad": ws.v_pad, "axis_names": axis_names,
+              "fold_tile": fold_tile, "method": method}
         if fused:
             kw.update(fused_entries=ws.fused_entries, chunk=ws.chunk)
         if stream:

@@ -199,9 +199,10 @@ class LPAResult:
     frontier_history: list = dataclasses.field(default_factory=list)
 
 
-def lpa(graph: CSRGraph, config: LPAConfig = LPAConfig(),
+def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
         ws: Optional[LPAWorkspace] = None, jit: bool = True) -> LPAResult:
     """Run LPA to convergence (host loop; jitted move step)."""
+    config = config if config is not None else LPAConfig()
     ws = ws if ws is not None else build_workspace(graph, config)
     move = lpa_move
     frontier_fn = mark_frontier

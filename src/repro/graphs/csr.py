@@ -525,10 +525,10 @@ def _pack_stream_windows(row_count: np.ndarray, chunk: int, tile_r: int,
     n_rows = len(row_count)
     if n_rows == 0:
         w = -(-chunk // _STREAM_ALIGN) * _STREAM_ALIGN
-        return dict(win_of_row=np.zeros(0, np.int64),
-                    rel_start=np.zeros(0, np.int64),
-                    slot_of_row=np.zeros(0, np.int64),
-                    n_windows=1, window_entries=w)
+        return {"win_of_row": np.zeros(0, np.int64),
+                "rel_start": np.zeros(0, np.int64),
+                "slot_of_row": np.zeros(0, np.int64),
+                "n_windows": 1, "window_entries": w}
     cum = np.zeros(n_rows + 1, dtype=np.int64)
     np.cumsum(row_count, out=cum[1:])
     firsts = []
@@ -549,9 +549,9 @@ def _pack_stream_windows(row_count: np.ndarray, chunk: int, tile_r: int,
                                          firsts_arr[win_of_row])
     need = int((rel_start + chunk).max())
     w = -(-max(need, chunk) // _STREAM_ALIGN) * _STREAM_ALIGN
-    return dict(win_of_row=win_of_row, rel_start=rel_start,
-                slot_of_row=slot_of_row, n_windows=n_windows,
-                window_entries=w)
+    return {"win_of_row": win_of_row, "rel_start": rel_start,
+            "slot_of_row": slot_of_row, "n_windows": n_windows,
+            "window_entries": w}
 
 
 def _materialize_stream_round(row_vstart: np.ndarray, row_count: np.ndarray,
@@ -587,9 +587,9 @@ def _materialize_stream_round(row_vstart: np.ndarray, row_count: np.ndarray,
     rc[pack["slot_of_row"]] = row_count
     rs = rs.reshape(n_windows, tile_r).astype(np.int32)
     rc = rc.reshape(n_windows, tile_r).astype(np.int32)
-    return dict(entry_gather=gather.astype(np.int32), row_start=rs,
-                row_count=rc,
-                step_dmax=rc.max(axis=1, keepdims=True).astype(np.int32))
+    return {"entry_gather": gather.astype(np.int32), "row_start": rs,
+            "row_count": rc,
+            "step_dmax": rc.max(axis=1, keepdims=True).astype(np.int32)}
 
 
 def build_streamed_rounds(counts: np.ndarray, starts: np.ndarray,

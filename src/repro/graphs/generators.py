@@ -110,7 +110,7 @@ def powerlaw_communities(n: int, avg_comm: int = 50, p_in: float = 0.3,
     truth = np.repeat(np.arange(len(sizes)), sizes)
     starts = np.concatenate([[0], np.cumsum(sizes)[:-1]])
     chunks = []
-    for ci, (sz, st) in enumerate(zip(sizes, starts)):
+    for sz, st in zip(sizes, starts):
         if sz < 2:
             continue
         # intra edges: sz*p_in*(sz-1)/2 expected, sampled with replacement

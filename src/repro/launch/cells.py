@@ -266,9 +266,9 @@ def build_lm_train(spec: ArchSpec, cell: ShapeCell, mesh,
         in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
                       _named(mesh, bspecs)),
         donate_argnums=(0, 1),
-        meta=dict(kind="train", tokens=b * s, layers=cfg.n_layers,
-                  probe_model=probe_model, probe_data=data_extent,
-                  mode=mode),
+        meta={"kind": "train", "tokens": b * s, "layers": cfg.n_layers,
+              "probe_model": probe_model, "probe_data": data_extent,
+              "mode": mode},
     )
 
 
@@ -290,7 +290,7 @@ def build_lm_prefill(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
         fn=prefill, args=(params, _sds((b, s), jnp.int32)),
         in_shardings=(_named(mesh, pspecs),
                       NamedSharding(mesh, P(ba, None))),
-        meta=dict(kind="prefill", tokens=b * s, layers=cfg.n_layers),
+        meta={"kind": "prefill", "tokens": b * s, "layers": cfg.n_layers},
     )
 
 
@@ -334,7 +334,8 @@ def build_lm_decode(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
                       NamedSharding(mesh, tok_spec),
                       NamedSharding(mesh, tok_spec)),
         donate_argnums=(1,),
-        meta=dict(kind="decode", tokens=b, layers=cfg.n_layers, kv_len=s),
+        meta={"kind": "decode", "tokens": b, "layers": cfg.n_layers,
+              "kv_len": s},
     )
 
 
@@ -442,7 +443,7 @@ def build_gnn_cell(spec: ArchSpec, cell: ShapeCell, mesh,
         in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
                       _named(mesh, bspecs)),
         donate_argnums=(0, 1),
-        meta=dict(kind="gnn_train", n_nodes=n, n_edges=e),
+        meta={"kind": "gnn_train", "n_nodes": n, "n_edges": e},
     )
 
 
@@ -503,8 +504,8 @@ def build_gnn_sampled_cell(spec: ArchSpec, cell: ShapeCell, mesh,
         in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
                       _named(mesh, bspecs)),
         donate_argnums=(0, 1),
-        meta=dict(kind="gnn_train", n_nodes=b * v_t, n_edges=b * e_t,
-                  layout="tree"),
+        meta={"kind": "gnn_train", "n_nodes": b * v_t, "n_edges": b * e_t,
+              "layout": "tree"},
     )
 
 
@@ -556,7 +557,7 @@ def build_recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
             in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
                           _named(mesh, bspecs)),
             donate_argnums=(0, 1),
-            meta=dict(kind="recsys_train", batch=b))
+            meta={"kind": "recsys_train", "batch": b})
     if cell.kind == "recsys_serve":
         def serve(p, dense, sparse):
             return dcn_forward(p, dense, sparse, cfg)
@@ -566,7 +567,7 @@ def build_recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
             in_shardings=(_named(mesh, pspecs),
                           NamedSharding(mesh, P(ba, None)),
                           NamedSharding(mesh, P(ba, None))),
-            meta=dict(kind="recsys_serve", batch=b))
+            meta={"kind": "recsys_serve", "batch": b})
     # retrieval: one query vs n_candidates (padded to the device count —
     # the serving tier pads the candidate set with -inf-scored sentinels)
     p = int(mesh.devices.size)
@@ -584,7 +585,7 @@ def build_recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
                       NamedSharding(mesh, P(None, None)),
                       NamedSharding(mesh, P(None, None)),
                       NamedSharding(mesh, P(fa, None))),
-        meta=dict(kind="retrieval", candidates=nc))
+        meta={"kind": "retrieval", "candidates": nc})
 
 
 # ---------------------------------------------------------------------------
@@ -653,9 +654,9 @@ def build_lpa_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> CellPlan:
         args += [ws.send_idx, ws.hub_idx]
     step = dist_lpa_step(mesh, ws)
     return CellPlan(fn=step, args=tuple(args), in_shardings=tuple(shardings),
-                    meta=dict(kind="lpa", n_nodes=cell.params["n_nodes"],
-                              n_edges=cell.params["n_edges"],
-                              n_rounds=len(ws.round_gathers), halo=halo))
+                    meta={"kind": "lpa", "n_nodes": cell.params["n_nodes"],
+                          "n_edges": cell.params["n_edges"],
+                          "n_rounds": len(ws.round_gathers), "halo": halo})
 
 
 # ---------------------------------------------------------------------------

@@ -27,8 +27,10 @@ def global_norm(tree) -> jnp.ndarray:
     return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in leaves))
 
 
-def adamw_update(grads, state, params, lr, cfg: AdamWConfig = AdamWConfig()):
+def adamw_update(grads, state, params, lr,
+                 cfg: AdamWConfig | None = None):
     """Returns (new_params, new_state, stats)."""
+    cfg = cfg if cfg is not None else AdamWConfig()
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
     step = state["step"] + 1

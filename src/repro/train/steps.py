@@ -12,7 +12,7 @@ from repro.compat import shard_map
 
 
 def make_train_step(loss_fn, peak_lr=3e-4, warmup=100, total=10000,
-                    opt_cfg: AdamWConfig = AdamWConfig()):
+                    opt_cfg: AdamWConfig | None = None):
     """loss_fn(params, batch) -> scalar. Returns (init_fn, step_fn).
 
     step(params, opt_state, batch) -> (params, opt_state, metrics).
@@ -35,7 +35,7 @@ def make_train_step(loss_fn, peak_lr=3e-4, warmup=100, total=10000,
 
 def make_dp_train_step(loss_fn, mesh, axis_name="data", peak_lr=3e-4,
                        warmup=100, total=10000,
-                       opt_cfg: AdamWConfig = AdamWConfig(),
+                       opt_cfg: AdamWConfig | None = None,
                        compress: bool = True):
     """Explicit data-parallel shard_map step with int8 error-feedback
     gradient all-reduce (the distributed-optimization trick measured in

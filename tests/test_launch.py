@@ -130,10 +130,10 @@ def test_hardware_constants_are_v5e():
 def test_lm_cells_are_the_assigned_shapes():
     spec = get_arch("glm4-9b")
     cells = {c.name: c for c in spec.cells}
-    assert cells["train_4k"].params == dict(seq=4096, batch=256)
-    assert cells["prefill_32k"].params == dict(seq=32768, batch=32)
-    assert cells["decode_32k"].params == dict(seq=32768, batch=128)
-    assert cells["long_500k"].params == dict(seq=524288, batch=1)
+    assert cells["train_4k"].params == {"seq": 4096, "batch": 256}
+    assert cells["prefill_32k"].params == {"seq": 32768, "batch": 32}
+    assert cells["decode_32k"].params == {"seq": 32768, "batch": 128}
+    assert cells["long_500k"].params == {"seq": 524288, "batch": 1}
     assert cells["long_500k"].kind == "decode"  # serve_step, not train_step
 
 
