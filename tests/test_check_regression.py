@@ -1,0 +1,116 @@
+"""Edge cases of the benchmark regression gate (benchmarks/check_regression).
+
+The gate compares runtimes *normalized* by the same run's exact/jnp
+calibration row, so rows are built in pairs: the timed row under test plus
+its calibration sibling for the same (bench, graph).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+
+from check_regression import check  # noqa: E402
+
+
+def _row(method="mg", engine="pallas_fused", runtime=1.0, graph="g",
+         bench="fig7_methods"):
+    return {"bench": bench, "graph": graph, "method": method,
+            "engine": engine, "runtime_s": runtime}
+
+
+def _calib(runtime=1.0, graph="g"):
+    return _row(method="exact", engine="jnp", runtime=runtime, graph=graph)
+
+
+def test_identical_runs_pass():
+    rows = [_calib(), _row(runtime=2.0)]
+    assert check(rows, rows) == []
+
+
+def test_missing_engine_row_fails_as_coverage_loss():
+    base = [_calib(), _row(engine="pallas_fused", runtime=2.0),
+            _row(engine="pallas_stream", runtime=2.0)]
+    cur = [_calib(), _row(engine="pallas_fused", runtime=2.0)]
+    failures = check(base, cur)
+    assert len(failures) == 1
+    assert failures[0].startswith("MISSING")
+    assert "pallas_stream" in failures[0]
+
+
+def test_empty_baseline_gates_nothing():
+    cur = [_calib(), _row(runtime=100.0)]
+    assert check([], cur) == []
+
+
+def test_exactly_at_threshold_passes():
+    # the gate is strict (cn > factor * bn): exactly factor*bn is allowed
+    base = [_calib(1.0), _row(runtime=2.0)]
+    cur = [_calib(1.0), _row(runtime=3.0)]
+    assert check(base, cur, factor=1.5) == []
+
+
+def test_just_over_threshold_fails():
+    base = [_calib(1.0), _row(runtime=2.0)]
+    cur = [_calib(1.0), _row(runtime=3.0 + 1e-6)]
+    failures = check(base, cur, factor=1.5)
+    assert len(failures) == 1
+    assert failures[0].startswith("REGRESSED")
+
+
+def test_uniform_machine_slowdown_cancels_out():
+    base = [_calib(1.0), _row(runtime=2.0)]
+    cur = [_calib(10.0), _row(runtime=20.0)]  # 10x slower machine, same code
+    assert check(base, cur) == []
+
+
+def test_min_seconds_skips_noise_rows():
+    base = [_calib(1.0), _row(runtime=0.01)]
+    cur = [_calib(1.0), _row(runtime=10.0)]  # huge ratio, tiny baseline
+    assert check(base, cur, min_seconds=0.05) == []
+    assert len(check(base, cur, min_seconds=0.001)) == 1
+
+
+def test_error_rows_without_runtime_are_not_gateable():
+    # error rows carry no runtime_s: absent from baseline -> nothing to
+    # gate; absent from current -> coverage loss
+    base = [_calib(), {"bench": "fig7_methods", "graph": "g", "method": "mg",
+                       "engine": "pallas", "error": "boom"}]
+    assert check(base, base) == []
+    base2 = [_calib(), _row(engine="pallas", runtime=2.0)]
+    cur2 = [_calib(), {"bench": "fig7_methods", "graph": "g", "method": "mg",
+                       "engine": "pallas", "error": "boom"}]
+    assert len(check(base2, cur2)) == 1
+
+
+def test_calibration_row_itself_is_never_gated():
+    base = [_calib(1.0)]
+    cur = [_calib(50.0)]
+    assert check(base, cur) == []
+
+
+def test_missing_calibration_row_drops_the_pair():
+    # without the exact/jnp sibling nothing can be normalized
+    base = [_row(runtime=2.0)]
+    cur = [_row(runtime=100.0)]
+    assert check(base, cur) == []
+
+
+@pytest.mark.parametrize("bad_current,expect_rc", [(True, 1), (False, 0)])
+def test_cli_exit_codes(tmp_path, bad_current, expect_rc):
+    base = [_calib(1.0), _row(runtime=1.0)]
+    cur = [_calib(1.0), _row(runtime=10.0 if bad_current else 1.0)]
+    bp, cp = tmp_path / "base.json", tmp_path / "cur.json"
+    bp.write_text(json.dumps(base))
+    cp.write_text(json.dumps(cur))
+    proc = subprocess.run(
+        [sys.executable, "benchmarks/check_regression.py",
+         "--baseline", str(bp), "--current", str(cp)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == expect_rc, proc.stdout + proc.stderr
+    word = "FAILED" if expect_rc else "passed"
+    assert word in proc.stdout
