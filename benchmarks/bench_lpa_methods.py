@@ -33,13 +33,16 @@ METHODS = ("exact", "mg", "bm")
 
 
 def run(scale: str = "small", engines: str | None = None,
-        sketches: str | None = None):
+        sketches: str | None = None, frontier: bool = False):
     """One row per (graph, method) — plus one per extra sketch fold engine.
 
     ``engines``: ``None`` (time the jnp reference only), ``"all"``, or a
     comma-separated subset of the registered engines + ``auto``.
     ``sketches``: which sketch methods get the engine sweep (``"all"`` or
     a comma subset of ``mg,bm``; default: ``mg`` when engines are given).
+    ``frontier``: additionally time the frontier-gated runs — one dense
+    gated reference per (graph, sketch) plus one sparse-compacted run per
+    swept backend (``{backend}+sparse`` rows) with skipped-row stats.
     """
     swept = engine_list(engines) if engines else ("jnp",)
     swept_sketches = sketch_list(sketches) if sketches else ("mg",)
@@ -79,4 +82,56 @@ def run(scale: str = "small", engines: str | None = None,
                 if method == "mg" and backend == backends[0]:
                     row.update(fold_engine_stats(g, cfg))
                 rows.append(row)
+            if frontier and method in swept_sketches:
+                rows.extend(_frontier_rows(gname, g, method, swept, base))
+    return rows
+
+
+def _frontier_rows(gname, g, method: str, swept: tuple, base: float | None):
+    """``--frontier`` sweep: the sketch method re-timed with the frontier
+    gate on.  One *dense* gated run (first swept backend) shows the gate's
+    runtime cost with every row still folded; one *sparse* gated run per
+    swept backend exercises the frontier-compacted fold path with the
+    default row cap and reports skipped-row stats.
+
+    ``fold_rows_after_iter2`` is the work actually folded from iteration
+    2 on (the warm regime the paper's FLPA gating targets); the dense
+    comparison is analytic — per-iteration dense rows x iterations — which
+    is exact because sparse and dense gated runs are bit-identical, so
+    they agree on the iteration count.
+    """
+    import time
+
+    from repro.core.lpa import _dense_work_rows, build_workspace
+
+    rows = []
+    for i, backend in enumerate(swept):
+        variants = (("gated", False),) if i == 0 else ()
+        variants += (("sparse", True),)
+        for tag, sparse in variants:
+            cfg = LPAConfig(method=method, rho=2, fold_backend=backend,
+                            frontier_gate=True, frontier_sparse=sparse)
+            t0 = time.perf_counter()
+            res = lpa(g, cfg)
+            dt = time.perf_counter() - t0
+            work = res.work_rows_history
+            row = {
+                "bench": "fig7_methods", "graph": gname, "method": method,
+                "engine": f"{backend}+{tag}",
+                "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                "runtime_s": round(dt, 3),
+                "speedup_vs_exact": round(base / dt, 2) if base else 1.0,
+                "iterations": res.iterations,
+                "modularity": round(float(modularity(g, res.labels)), 4),
+                "fold_rows_total": int(sum(work)),
+                "fold_rows_after_iter2": int(sum(work[2:])),
+            }
+            if sparse:
+                per_iter = _dense_work_rows(build_workspace(g, cfg))
+                dense2 = per_iter * max(0, res.iterations - 2)
+                row["dense_fold_rows_after_iter2"] = int(dense2)
+                row["fold_rows_saved_frac"] = round(
+                    1 - row["fold_rows_after_iter2"] / dense2, 3) \
+                    if dense2 else 0.0
+            rows.append(row)
     return rows

@@ -53,6 +53,10 @@ def main() -> int:
                     help="sketch methods to sweep across --engines where "
                          "supported: 'all' or a comma list of mg,bm "
                          "(default: mg only)")
+    ap.add_argument("--frontier", action="store_true",
+                    help="also time frontier-gated runs where supported: "
+                         "dense gated plus the sparse-compacted fold path "
+                         "with skipped-row stats")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -72,6 +76,8 @@ def main() -> int:
                 kwargs["engines"] = args.engines
             if args.sketch and "sketches" in params:
                 kwargs["sketches"] = args.sketch
+            if args.frontier and "frontier" in params:
+                kwargs["frontier"] = True
             rows = mod.run(args.scale, **kwargs)
         except Exception as e:  # noqa: BLE001 — report and continue
             import traceback

@@ -197,3 +197,39 @@ class CheckedEngine:
                                         entry_weights, labels)
         _throw(_candidates_contract(c, w))
         return c, w
+
+    # -- sparse frontier entry points --------------------------------------
+    # Explicit wrappers: __getattr__ would delegate these uncheck-wrapped,
+    # silently dropping the contracts exactly on the path the sparse parity
+    # suite runs under REPRO_CHECKED=1. Same pre/post contracts as the
+    # dense twins — the frontier itself is a plain bool mask.
+
+    def mg_select_sparse(self, plan, aux_plan, entry_labels, entry_weights,
+                         labels, seed, frontier, cap_rows):
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        _throw(_labels_contract(labels))
+        out = self._inner.mg_select_sparse(plan, aux_plan, entry_labels,
+                                           entry_weights, labels, seed,
+                                           frontier, cap_rows)
+        _throw(_selection_contract(out))
+        return out
+
+    def mg_rescan_sparse(self, plan, aux_plan, entry_labels, entry_weights,
+                         labels, seed, frontier, cap_rows):
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        _throw(_labels_contract(labels))
+        out = self._inner.mg_rescan_sparse(plan, aux_plan, entry_labels,
+                                           entry_weights, labels, seed,
+                                           frontier, cap_rows)
+        _throw(_selection_contract(out))
+        return out
+
+    def bm_fold_plan_sparse(self, plan, aux_plan, entry_labels,
+                            entry_weights, labels, frontier, cap_rows):
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        _throw(_labels_contract(labels))
+        c, w = self._inner.bm_fold_plan_sparse(plan, aux_plan, entry_labels,
+                                               entry_weights, labels,
+                                               frontier, cap_rows)
+        _throw(_candidates_contract(c, w))
+        return c, w

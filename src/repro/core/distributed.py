@@ -82,6 +82,10 @@ class DistLPAWorkspace:
     row_vertex0: jnp.ndarray | None = None  # [P, R_pad_0] bucketed rows
     fused_rv0: jnp.ndarray | None = None    # [P, S_0 * tile_r] fused rows
     stream_rv0: jnp.ndarray | None = None   # [P, n_win_0 * tile_r] slots
+    # [P, M_pad] int32 — owning LOCAL vertex of each edge slot (-1 pads);
+    # the gated step segment-maxes neighbor changed flags over it to mark
+    # next iteration's per-shard frontier (dist_lpa_step(frontier_gate=))
+    entry_vertex: jnp.ndarray | None = None
 
     def tree_flatten(self):
         children = (self.nbr_pos, self.weights, self.round_gathers,
@@ -90,7 +94,7 @@ class DistLPAWorkspace:
                     self.fused_dmax, self.stream_gathers, self.stream_starts,
                     self.stream_counts, self.stream_dmax,
                     self.stream_final_rv, self.row_vertex0, self.fused_rv0,
-                    self.stream_rv0)
+                    self.stream_rv0, self.entry_vertex)
         return children, (self.n_nodes, self.v_pad, self.k, self.chunk,
                           self.h_pad, self.hub_pad, self.fused_entries)
 
@@ -103,7 +107,8 @@ class DistLPAWorkspace:
                    stream_gathers=children[10], stream_starts=children[11],
                    stream_counts=children[12], stream_dmax=children[13],
                    stream_final_rv=children[14], row_vertex0=children[15],
-                   fused_rv0=children[16], stream_rv0=children[17])
+                   fused_rv0=children[16], stream_rv0=children[17],
+                   entry_vertex=children[18])
 
     @property
     def n_shards(self) -> int:
@@ -183,6 +188,7 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
 
     nbr_pos = np.full((n_shards, m_pad), PAD, dtype=np.int32)
     wgts = np.zeros((n_shards, m_pad), dtype=np.float32)
+    entry_vertex = np.full((n_shards, m_pad), PAD, dtype=np.int32)
     init_labels = np.full((n_shards, v_pad), PAD, dtype=np.int32)
     per_round_gathers = [[] for _ in range(n_rounds)]
     per_round_rows = np.zeros((n_shards, n_rounds), dtype=np.int64)
@@ -193,6 +199,8 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         e0, e1 = offsets[lo], offsets[hi]
         nbr_pos[p, :e1 - e0] = padded_pos[indices[e0:e1]]
         wgts[p, :e1 - e0] = weights[e0:e1]
+        entry_vertex[p, :e1 - e0] = np.repeat(
+            np.arange(hi - lo, dtype=np.int64), degrees[lo:hi])
         init_labels[p, :hi - lo] = np.arange(lo, hi)
         counts = degrees[lo:hi].copy()
         starts = np.zeros(hi - lo, dtype=np.int64)
@@ -396,14 +404,15 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         stream_counts=stream_counts, stream_dmax=stream_dmax,
         stream_final_rv=stream_final_rv,
         row_vertex0=jnp.asarray(row_vertex0), fused_rv0=fused_rv0,
-        stream_rv0=stream_rv0)
+        stream_rv0=stream_rv0, entry_vertex=jnp.asarray(entry_vertex))
 
 
 def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed, *, k, v_pad, axis_names, fold_tile,
                 send_idx=None, hub_idx=None, fused_meta=None,
                 fused_entries=(), chunk=0, stream_meta=None,
-                stream_frv=None, method="mg", bm_rv0=None):
+                stream_frv=None, method="mg", bm_rv0=None, frontier=None,
+                entry_vertex=None):
     """Per-shard body of one distributed LPA iteration (runs inside shard_map).
 
     Shapes here are the *local* block shapes (leading P axis stripped).
@@ -418,6 +427,14 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     ``sketch.bm_merge_rows`` — every vertex's rows live on its own shard,
     so no extra collective is needed. ``bm_rv0`` carries the matching
     round-0 row -> local vertex map.
+
+    ``frontier`` ([1, V_pad] bool, with ``entry_vertex`` [1, M_pad]) turns
+    on dense frontier gating (the distributed analogue of
+    ``LPAConfig.frontier_gate``): off-frontier moves are masked and the
+    step emits a third output — next iteration's marked frontier, built by
+    exchanging this iteration's changed flags through the SAME halo/gather
+    machinery as the labels and segment-maxing them over each shard's own
+    edge slots. One extra collective per gated iteration.
     """
     nbr_pos = nbr_pos[0]          # [M_pad]
     edge_w = edge_w[0]
@@ -425,25 +442,44 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     final_row_vertex = final_row_vertex[0]
     labels = labels[0]            # [V_pad]
 
-    if send_idx is None:
-        # THE collective: one label all-gather per iteration.
-        label_table = jax.lax.all_gather(labels, axis_names, tiled=True)
-    else:
-        # hub labels: small all-gather (vertices referenced by many shards)
+    def exchange(vec, fill):
+        """Local [V_pad] vector -> table the nbr_pos positions index."""
+        if send_idx is None:
+            # THE collective: one all-gather per exchanged vector.
+            return jax.lax.all_gather(vec, axis_names, tiled=True)
+        # hub values: small all-gather (vertices referenced by many shards)
         hidx = hub_idx[0]         # [HUB_pad]
-        hub_buf = jnp.where(hidx >= 0, labels[jnp.maximum(hidx, 0)], -1)
+        hub_buf = jnp.where(hidx >= 0, vec[jnp.maximum(hidx, 0)], fill)
         hub_all = jax.lax.all_gather(hub_buf, axis_names,
                                      tiled=False).reshape(-1)
-        # halo exchange: send each peer exactly the labels it references.
+        # halo exchange: send each peer exactly the values it references.
         sidx = send_idx[0]        # [P, H_pad]
-        buf = jnp.where(sidx >= 0, labels[jnp.maximum(sidx, 0)], -1)
+        buf = jnp.where(sidx >= 0, vec[jnp.maximum(sidx, 0)], fill)
         recv = jax.lax.all_to_all(buf, axis_names, split_axis=0,
                                   concat_axis=0, tiled=True)  # [P, H_pad]
-        label_table = jnp.concatenate([labels, hub_all, recv.reshape(-1)])
+        return jnp.concatenate([vec, hub_all, recv.reshape(-1)])
 
+    label_table = exchange(labels, -1)
     safe = jnp.maximum(nbr_pos, 0)
     entry_labels = jnp.where(nbr_pos >= 0, label_table[safe], -1)
     entry_weights = jnp.where(nbr_pos >= 0, edge_w, 0.0)
+
+    def finish(want):
+        fr = None if frontier is None else frontier[0]
+        new_labels, changed, delta = _move_epilogue(want, labels, pick_less,
+                                                    axis_names, frontier=fr)
+        if fr is None:
+            return new_labels[None], delta
+        # mark next iteration's frontier: a vertex is queued iff any of its
+        # neighbors changed — the shard-local segment-max over its own edge
+        # slots, fed by one changed-flag exchange (paper Alg. 1 l. 31)
+        changed_table = exchange(changed.astype(jnp.int32), 0)
+        ent = jnp.where(nbr_pos >= 0, changed_table[safe], 0)
+        ev = entry_vertex[0]
+        tgt = jnp.where(ev >= 0, ev, v_pad)
+        marked = jnp.zeros((v_pad + 1,),
+                           jnp.int32).at[tgt].max(ent)[:v_pad] > 0
+        return new_labels[None], delta, marked[None]
 
     if method == "bm":
         rv0 = bm_rv0[0]
@@ -480,7 +516,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
             ck, wk = fold_tile(gl, gw, init)
         best_c, _ = sketch_lib.bm_merge_rows(v_pad, labels, rv0, ck, wk)
         want = jnp.where(best_c >= 0, best_c, labels)
-        return _move_epilogue(want, labels, pick_less, axis_names)
+        return finish(want)
 
     if stream_meta is not None:
         # streaming engine: one dispatch per round, one window of entries
@@ -532,24 +568,27 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     cand_c = jnp.where(cand_w > 0, cand_c, -1)
 
     want = sketch_lib.choose_from_candidates(cand_c, cand_w, labels, seed)
-    return _move_epilogue(want, labels, pick_less, axis_names)
+    return finish(want)
 
 
-def _move_epilogue(want, labels, pick_less, axis_names):
+def _move_epilogue(want, labels, pick_less, axis_names, frontier=None):
     """Shared per-shard move rule: apply the Pick-Less/changed gating to
     the wanted labels (pad slots excluded) and psum the global ΔN. One
-    copy for every method — the MG and BM paths must never drift."""
+    copy for every method — the MG and BM paths must never drift.
+    ``frontier`` ([V_pad] bool) additionally masks off-frontier moves."""
     allowed = jnp.where(pick_less, want < labels, want != labels)
+    if frontier is not None:
+        allowed = allowed & frontier
     is_real = labels >= 0
     new_labels = jnp.where(allowed & is_real, want, labels)
     changed = (new_labels != labels) & is_real
     delta = jax.lax.psum(jnp.sum(changed.astype(jnp.int32)), axis_names)
-    return new_labels[None], delta
+    return new_labels, changed, delta
 
 
 def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
                   fold_tile=None, engine: str | None = None,
-                  method: str = "mg"):
+                  method: str = "mg", frontier_gate: bool = False):
     """Build the shard_map'd single-iteration function for ``mesh``.
 
     Returns step(ws_arrays..., labels [P, V_pad], pick_less, seed) ->
@@ -564,10 +603,19 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     ``method`` selects the sketch ("mg" | "bm") uniformly with the
     single-host driver; both run on every engine (halo or full-gather
     label exchange is orthogonal).
+
+    ``frontier_gate=True`` builds the dense-gated step: it takes an extra
+    trailing ``frontier`` argument ([P, V_pad] bool) and returns
+    (labels, delta_n, marked) — ``marked`` is next iteration's per-shard
+    frontier (``dist_lpa`` keeps Pick-Less iterations' deferred vertices
+    queued by unioning, mirroring the single-host §8.5 rule).
     """
     axis_names = tuple(mesh.axis_names) if axis_names is None else axis_names
     if method not in ("mg", "bm"):
         raise ValueError(f"unknown method {method!r}; expected 'mg' | 'bm'")
+    if frontier_gate and ws.entry_vertex is None:
+        raise ValueError("frontier_gate=True requires a workspace with "
+                         "entry_vertex (rebuild via build_dist_workspace)")
     fused = engine == "pallas_fused"
     stream = engine == "pallas_stream"
     if engine is not None and not (fused or stream) and fold_tile is None:
@@ -589,7 +637,7 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     halo = ws.send_idx is not None
 
     def step(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
-             pick_less, seed, send_idx=None, hub_idx=None):
+             pick_less, seed, send_idx=None, hub_idx=None, frontier=None):
         in_specs = [spec, spec, tuple([spec] * n_rounds), spec, spec,
                     P(), P()]
         args = [nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
@@ -623,41 +671,62 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
             in_specs += [spec]
             args += [rv0]
             extra_names += ["bm_rv0"]
+        if frontier_gate:
+            in_specs += [spec, spec]
+            args += [frontier, ws.entry_vertex]
+            extra_names += ["frontier", "entry_vertex"]
 
         def body(*a):
             return _shard_move(*a[:7], **dict(zip(extra_names, a[7:])),
                                **kw)
 
+        out_specs = (spec, P(), spec) if frontier_gate else (spec, P())
         return shard_map(
             body, mesh=mesh,
             in_specs=tuple(in_specs),
-            out_specs=(spec, P()),
+            out_specs=out_specs,
             check_vma=False,
         )(*args)
 
     if halo:
-        return lambda *a: step(*a[:7],
-                               send_idx=a[7] if len(a) > 7 else ws.send_idx,
-                               hub_idx=a[8] if len(a) > 8 else ws.hub_idx)
+        def halo_step(*a, frontier=None):
+            return step(*a[:7],
+                        send_idx=a[7] if len(a) > 7 else ws.send_idx,
+                        hub_idx=a[8] if len(a) > 8 else ws.hub_idx,
+                        frontier=frontier)
+        return halo_step
     return step
 
 
 def dist_lpa(mesh, ws: DistLPAWorkspace, rho: int = 8, tau: float = 0.05,
              max_iters: int = 20, engine: str | None = None,
-             method: str = "mg"):
+             method: str = "mg", frontier_gate: bool = False):
     """Run distributed LPA to convergence. Returns (labels [N], iterations).
 
     ``method`` selects the sketch ("mg" | "bm"), ``engine`` the fold
-    backend — both uniform with the single-host driver."""
-    step = jax.jit(dist_lpa_step(mesh, ws, engine=engine, method=method))
+    backend — both uniform with the single-host driver.
+    ``frontier_gate`` turns on per-shard dense frontier gating (the
+    distributed analogue of ``LPAConfig.frontier_gate``): settled vertices
+    keep their label, and Pick-Less iterations union the previous frontier
+    into the marks so deferred vertices stay queued (§8.5)."""
+    step = jax.jit(dist_lpa_step(mesh, ws, engine=engine, method=method,
+                                 frontier_gate=frontier_gate))
     labels = ws.init_labels
     n = ws.n_nodes
+    frontier = jnp.ones(labels.shape, dtype=jnp.bool_)
     it = 0
     for it in range(max_iters):
         pl_on = (it % rho) == 0
-        labels, delta = step(ws.nbr_pos, ws.weights, ws.round_gathers,
-                             ws.final_row_vertex, labels,
-                             jnp.asarray(pl_on), jnp.int32(it + 1))
+        if frontier_gate:
+            labels, delta, marked = step(
+                ws.nbr_pos, ws.weights, ws.round_gathers,
+                ws.final_row_vertex, labels, jnp.asarray(pl_on),
+                jnp.int32(it + 1), frontier=frontier)
+            frontier = (frontier | marked) if pl_on else marked
+        else:
+            labels, delta = step(ws.nbr_pos, ws.weights, ws.round_gathers,
+                                 ws.final_row_vertex, labels,
+                                 jnp.asarray(pl_on), jnp.int32(it + 1))
         if not pl_on and int(delta) / max(n, 1) < tau:
             break
     flat = np.asarray(labels).reshape(-1)

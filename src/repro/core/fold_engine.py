@@ -146,6 +146,48 @@ class FoldEngine:
         """Pallas kernel dispatches one double-scan MG iteration costs."""
         raise NotImplementedError
 
+    # -- sparse frontier path (DESIGN.md §8.5) ----------------------------
+    # ``frontier`` [N] bool marks the active vertices; ``cap_rows`` is the
+    # static per-round active-row capacity (LPAConfig.frontier_cap_rows).
+    # The caller (core.lpa's host loop) guarantees the concrete frontier
+    # fits the capacity (csr.fused_active_rows /
+    # csr.streamed_active_windows) and falls back to the dense gated
+    # methods on overflow, so the engine never sees an overflowing
+    # frontier. Contract on every engine: the returned wanted label is
+    # bit-identical to the dense method's on frontier vertices — lpa_move
+    # masks off-frontier moves either way.
+
+    def mg_select_sparse(self, plan: FoldPlan, aux_plan, entry_labels,
+                         entry_weights, labels, seed, frontier,
+                         cap_rows: int) -> jnp.ndarray:
+        """Frontier-compacted mg_select: fold only active rows."""
+        raise NotImplementedError
+
+    def mg_rescan_sparse(self, plan: FoldPlan, aux_plan, entry_labels,
+                         entry_weights, labels, seed, frontier,
+                         cap_rows: int) -> jnp.ndarray:
+        """Frontier-compacted double-scan iteration."""
+        raise NotImplementedError
+
+    def bm_fold_plan_sparse(self, plan: FoldPlan, aux_plan, entry_labels,
+                            entry_weights, labels, frontier, cap_rows: int
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Frontier-compacted νBM iteration core."""
+        raise NotImplementedError
+
+    def sparse_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
+        """Pallas dispatches one sparse MG iteration costs."""
+        raise NotImplementedError
+
+    def sparse_bm_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
+        """Pallas dispatches one sparse BM iteration costs."""
+        raise NotImplementedError
+
+    def sparse_rescan_dispatches_per_iter(self, plan: FoldPlan,
+                                          aux_plan) -> int:
+        """Pallas dispatches one sparse double-scan iteration costs."""
+        raise NotImplementedError
+
 
 class JnpEngine(FoldEngine):
     """Dense pure-XLA reference (repro.core.sketch); the bit-exactness
@@ -197,6 +239,33 @@ class JnpEngine(FoldEngine):
     def rescan_dispatches_per_iter(self, plan, fused_plan):
         return 0
 
+    # The bucketed dense layout has no row compaction: the sparse entry
+    # points compute the dense fold (gate-masked in lpa_move) — correct but
+    # with zero FLOP savings. Only the fused/streamed engines skip rows.
+    def mg_select_sparse(self, plan, fused_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        return self.mg_select(plan, fused_plan, entry_labels, entry_weights,
+                              labels, seed)
+
+    def mg_rescan_sparse(self, plan, fused_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        return self.mg_rescan(plan, fused_plan, entry_labels, entry_weights,
+                              labels, seed)
+
+    def bm_fold_plan_sparse(self, plan, fused_plan, entry_labels,
+                            entry_weights, labels, frontier, cap_rows):
+        return self.bm_fold_plan(plan, fused_plan, entry_labels,
+                                 entry_weights, labels)
+
+    def sparse_dispatches_per_iter(self, plan, fused_plan):
+        return 0
+
+    def sparse_bm_dispatches_per_iter(self, plan, fused_plan):
+        return 0
+
+    def sparse_rescan_dispatches_per_iter(self, plan, fused_plan):
+        return 0
+
 
 class PallasEngine(FoldEngine):
     """Per-bucket tile kernels (the pre-fusion Pallas baseline; for
@@ -245,6 +314,32 @@ class PallasEngine(FoldEngine):
 
     def rescan_dispatches_per_iter(self, plan, fused_plan):
         return plan_dispatches(plan)  # fold kernels; the rescan is XLA
+
+    # No row compaction in the bucketed layout (see JnpEngine): the sparse
+    # entry points run the dense fold, gate-masked in lpa_move.
+    def mg_select_sparse(self, plan, fused_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        return self.mg_select(plan, fused_plan, entry_labels, entry_weights,
+                              labels, seed)
+
+    def mg_rescan_sparse(self, plan, fused_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        return self.mg_rescan(plan, fused_plan, entry_labels, entry_weights,
+                              labels, seed)
+
+    def bm_fold_plan_sparse(self, plan, fused_plan, entry_labels,
+                            entry_weights, labels, frontier, cap_rows):
+        return self.bm_fold_plan(plan, fused_plan, entry_labels,
+                                 entry_weights, labels)
+
+    def sparse_dispatches_per_iter(self, plan, fused_plan):
+        return plan_dispatches(plan)  # dense fallback: same dispatches
+
+    def sparse_bm_dispatches_per_iter(self, plan, fused_plan):
+        return plan_round0_dispatches(plan)
+
+    def sparse_rescan_dispatches_per_iter(self, plan, fused_plan):
+        return plan_dispatches(plan)
 
 
 class PallasFusedEngine(FoldEngine):
@@ -299,6 +394,39 @@ class PallasFusedEngine(FoldEngine):
 
     def rescan_dispatches_per_iter(self, plan, fused_plan):
         # all fold rounds + one in-kernel rescan of round 0
+        return fused_dispatches(fused_plan) + 1
+
+    def mg_select_sparse(self, plan, fused_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        from repro.kernels.mg_sketch.fused import select_best_fused_sparse
+        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
+        return select_best_fused_sparse(fused_plan, entry_labels,
+                                        entry_weights, labels, seed,
+                                        frontier, cap_rows)
+
+    def mg_rescan_sparse(self, plan, fused_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        from repro.kernels.mg_sketch.fused import rescan_select_fused_sparse
+        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
+        return rescan_select_fused_sparse(fused_plan, entry_labels,
+                                          entry_weights, labels, seed,
+                                          frontier, cap_rows)
+
+    def bm_fold_plan_sparse(self, plan, fused_plan, entry_labels,
+                            entry_weights, labels, frontier, cap_rows):
+        from repro.kernels.mg_sketch.fused import run_bm_plan_fused_sparse
+        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
+        return run_bm_plan_fused_sparse(fused_plan, entry_labels,
+                                        entry_weights, labels, frontier,
+                                        cap_rows)
+
+    def sparse_dispatches_per_iter(self, plan, fused_plan):
+        return fused_dispatches(fused_plan)  # same rounds, compacted grids
+
+    def sparse_bm_dispatches_per_iter(self, plan, fused_plan):
+        return 1
+
+    def sparse_rescan_dispatches_per_iter(self, plan, fused_plan):
         return fused_dispatches(fused_plan) + 1
 
 
@@ -376,6 +504,42 @@ class PallasStreamEngine(FoldEngine):
 
     def rescan_dispatches_per_iter(self, plan, stream_plan):
         # all fold rounds + one windowed in-kernel rescan of round 0
+        return streamed_dispatches(stream_plan) + 1
+
+    def mg_select_sparse(self, plan, stream_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        from repro.kernels.mg_sketch.streaming import \
+            select_best_stream_sparse
+        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
+        return select_best_stream_sparse(stream_plan, entry_labels,
+                                         entry_weights, labels, seed,
+                                         frontier, cap_rows)
+
+    def mg_rescan_sparse(self, plan, stream_plan, entry_labels,
+                         entry_weights, labels, seed, frontier, cap_rows):
+        from repro.kernels.mg_sketch.streaming import \
+            rescan_select_stream_sparse
+        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
+        return rescan_select_stream_sparse(stream_plan, entry_labels,
+                                           entry_weights, labels, seed,
+                                           frontier, cap_rows)
+
+    def bm_fold_plan_sparse(self, plan, stream_plan, entry_labels,
+                            entry_weights, labels, frontier, cap_rows):
+        from repro.kernels.mg_sketch.streaming import \
+            run_bm_plan_stream_sparse
+        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
+        return run_bm_plan_stream_sparse(stream_plan, entry_labels,
+                                         entry_weights, labels, frontier,
+                                         cap_rows)
+
+    def sparse_dispatches_per_iter(self, plan, stream_plan):
+        return streamed_dispatches(stream_plan)  # compacted window grids
+
+    def sparse_bm_dispatches_per_iter(self, plan, stream_plan):
+        return 1
+
+    def sparse_rescan_dispatches_per_iter(self, plan, stream_plan):
         return streamed_dispatches(stream_plan) + 1
 
 

@@ -28,8 +28,12 @@ unprocessed-frontier of paper Alg. 1 l. 31 is tracked every iteration
 (``LPAResult.frontier_history`` diagnostics) and — with the opt-in
 ``frontier_gate`` config, after Traag & Šubelj's fast label propagation —
 gates the move step so settled vertices (no changed neighbor) keep their
-label; the dense pipeline still computes every fold row, so the gate buys
-convergence behavior and diagnostics, not FLOPs (DESIGN.md §8.5).
+label. ``frontier_sparse`` additionally *executes* the gate: each
+iteration the host checks the concrete frontier against a static row
+capacity and, when it fits, runs a second jitted mover whose engine
+compacts the active fold rows and grids only over them — the skipped-row
+savings the gate alone never bought (DESIGN.md §8.5;
+``LPAResult.work_rows_history`` records the rows each iteration folded).
 """
 from __future__ import annotations
 
@@ -37,6 +41,7 @@ import dataclasses
 import functools
 from typing import Callable, Literal, Optional
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -45,7 +50,9 @@ from repro.core.fold_engine import get_engine, resolve_auto
 from repro.graphs.csr import (CSRGraph, FoldPlan, FusedFoldPlan,
                               StreamedFoldPlan, build_fold_plan,
                               build_fused_fold_plan,
-                              build_streamed_fold_plan)
+                              build_streamed_fold_plan, fused_active_rows,
+                              fused_work_rows, streamed_active_windows,
+                              streamed_work_rows)
 
 Method = Literal["exact", "mg", "bm"]
 
@@ -69,8 +76,26 @@ class LPAConfig:
     # pallas_stream (None = fold_engine.DEFAULT_VMEM_BUDGET_BYTES)
     vmem_budget_bytes: Optional[int] = None
     frontier_gate: bool = False  # Traag & Šubelj frontier gating (opt-in)
-    # frontier_history diagnostics cost one O(|E|) segment_max per
-    # iteration; disable for pure-throughput runs (implied on when gating)
+    # Sparse execution of the gate (DESIGN.md §8.5): per iteration the host
+    # checks the concrete frontier against the row capacity and, when it
+    # fits, folds ONLY the active rows through the engine's compacted
+    # sparse path; otherwise it falls back to the dense gated mover (both
+    # movers are statically shaped jit artifacts). Requires frontier_gate;
+    # the bucketed jnp/pallas backends accept it but fold densely (only
+    # pallas_fused/pallas_stream actually skip rows).
+    frontier_sparse: bool = False
+    # Static per-round active-row capacity of the sparse path (None: half
+    # the largest round's real rows — the break-even neighborhood). Larger
+    # caps keep the sparse mover in play on bigger frontiers at the price
+    # of more padded compute per sparse iteration.
+    frontier_cap_rows: Optional[int] = None
+    # frontier_history diagnostics (the per-iteration frontier fraction).
+    # Deliberately decoupled from gating: frontier_gate computes the marks
+    # it needs (one O(|E|) segment_max per iteration) whether or not this
+    # is set, and track_frontier=False then only skips recording the
+    # history — it does NOT silently re-enable anything. With both
+    # frontier_gate and track_frontier off, mark_frontier is never called
+    # and no segment_max is paid (asserted in tests/test_sparse_frontier).
     track_frontier: bool = True
 
 
@@ -103,7 +128,6 @@ class LPAWorkspace:
 
 
 def build_workspace(graph: CSRGraph, config: LPAConfig) -> LPAWorkspace:
-    import numpy as np
     degrees = np.asarray(graph.degrees)
     plan = build_fold_plan(degrees, k=config.k, chunk=config.chunk)
     backend = config.fold_backend
@@ -123,8 +147,8 @@ def build_workspace(graph: CSRGraph, config: LPAConfig) -> LPAWorkspace:
 
 def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
              seed: jnp.ndarray, config: LPAConfig,
-             frontier: Optional[jnp.ndarray] = None
-             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+             frontier: Optional[jnp.ndarray] = None, sparse: bool = False,
+             cap_rows: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
     """One LPA iteration: returns (new_labels, changed_mask).
 
     ``pick_less`` and ``seed`` are traced so the jitted step is reused
@@ -132,9 +156,18 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     the hash tie-breaking (DESIGN.md §8 — the synchronous stand-in for the
     async/hashtable-order tie randomness of the GPU implementation).
     ``frontier`` (optional bool [N]) gates moves to unprocessed vertices
-    (config.frontier_gate).
+    (config.frontier_gate). ``sparse``/``cap_rows`` are static: they route
+    the fold through the engine's frontier-compacted entry points, which
+    only compute active rows — the caller must have verified on the host
+    that the frontier fits ``cap_rows`` (``lpa``'s loop falls back to the
+    dense mover on overflow). Sparse wanted labels are bit-identical to
+    dense ones on frontier vertices and the gate masks the rest, so the
+    two movers commute.
     """
     graph, plan = ws.graph, ws.plan
+    if sparse and frontier is None:
+        raise ValueError("sparse=True needs a frontier (the compacted fold "
+                         "is defined by the active vertex set)")
     nbr_labels = labels[graph.indices]
     # "auto" resolves from the round-0 entry volume (a static plan field),
     # deterministically matching the plan build_workspace constructed.
@@ -154,15 +187,29 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
             # double-scan ablation (paper Fig. 5): the second, exact
             # re-scoring pass runs in-engine — one fused/streamed kernel
             # dispatch on the Pallas engines, never a per-bucket fallback.
-            want = engine.mg_rescan(plan, aux, nbr_labels, graph.weights,
-                                    labels, seed)
+            if sparse:
+                want = engine.mg_rescan_sparse(plan, aux, nbr_labels,
+                                               graph.weights, labels, seed,
+                                               frontier, cap_rows)
+            else:
+                want = engine.mg_rescan(plan, aux, nbr_labels, graph.weights,
+                                        labels, seed)
+        elif sparse:
+            want = engine.mg_select_sparse(plan, aux, nbr_labels,
+                                           graph.weights, labels, seed,
+                                           frontier, cap_rows)
         else:
             want = engine.mg_select(plan, aux, nbr_labels,
                                     graph.weights, labels, seed)
     elif config.method == "bm":
         # incumbency is built into the fold's initial carry (Alg. 3 l. 13)
-        best, _ = engine.bm_fold_plan(plan, aux, nbr_labels, graph.weights,
-                                      labels)
+        if sparse:
+            best, _ = engine.bm_fold_plan_sparse(plan, aux, nbr_labels,
+                                                 graph.weights, labels,
+                                                 frontier, cap_rows)
+        else:
+            best, _ = engine.bm_fold_plan(plan, aux, nbr_labels,
+                                          graph.weights, labels)
         want = jnp.where(best >= 0, best, labels)
     else:
         raise ValueError(f"unknown method {config.method!r}")
@@ -197,38 +244,113 @@ class LPAResult:
     #: unprocessed-frontier fraction entering each iteration (diagnostics;
     #: the gate only acts on it when config.frontier_gate is set)
     frontier_history: list = dataclasses.field(default_factory=list)
+    #: rows the fold actually computed each iteration. Dense iterations
+    #: record the full plan row count; sparse ones record the compacted
+    #: active rows (fused) or rows in active windows (streamed) — the
+    #: skipped-row savings are visible as the gap to the dense entries.
+    work_rows_history: list = dataclasses.field(default_factory=list)
+
+
+def _dense_work_rows(ws: LPAWorkspace) -> int:
+    """Real (non-padding) fold rows one dense iteration computes."""
+    if ws.fused_plan is not None:
+        return fused_work_rows(ws.fused_plan)
+    if ws.stream_plan is not None:
+        return streamed_work_rows(ws.stream_plan)
+    return sum(r.n_rows_total for r in ws.plan.rounds)
+
+
+def _sparse_fit(ws: LPAWorkspace, frontier_np: np.ndarray,
+                cap_rows: int) -> tuple[bool, int]:
+    """Host-side overflow check for the sparse mover.
+
+    Returns (fits, work_rows): whether every round's active unit count is
+    within ``cap_rows`` (rows for the fused layout, windows for the
+    streamed one — a window is the stream grid's dispatch unit), and the
+    rows the sparse fold would actually compute. Bucketed backends have no
+    compacted path, so they always 'fit' at the dense cost.
+    """
+    if ws.fused_plan is not None:
+        counts = fused_active_rows(ws.fused_plan, frontier_np)
+        return all(c <= cap_rows for c in counts), sum(counts)
+    if ws.stream_plan is not None:
+        stats = streamed_active_windows(ws.stream_plan, frontier_np)
+        return (all(w <= cap_rows for w, _ in stats),
+                sum(r for _, r in stats))
+    return True, _dense_work_rows(ws)
+
+
+def _default_cap_rows(ws: LPAWorkspace) -> int:
+    """Half the largest round's real rows — sparse only pays off once the
+    frontier has thinned below the compaction overhead's break-even."""
+    if ws.fused_plan is not None:
+        worst = max(int(np.count_nonzero(np.asarray(r.row_vertex) >= 0))
+                    for r in ws.fused_plan.rounds)
+    elif ws.stream_plan is not None:
+        worst = max(r.row_start.shape[0] for r in ws.stream_plan.rounds)
+    else:
+        worst = max(r.n_rows_total for r in ws.plan.rounds)
+    return max(1, worst // 2)
 
 
 def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
         ws: Optional[LPAWorkspace] = None, jit: bool = True) -> LPAResult:
     """Run LPA to convergence (host loop; jitted move step)."""
     config = config if config is not None else LPAConfig()
+    if config.frontier_sparse:
+        if not config.frontier_gate:
+            raise ValueError("frontier_sparse requires frontier_gate: the "
+                             "sparse fold is only correct when off-frontier "
+                             "moves are masked")
+        if config.method == "exact":
+            raise ValueError("frontier_sparse does not apply to the exact "
+                             "method (no fold plan to compact)")
     ws = ws if ws is not None else build_workspace(graph, config)
-    move = lpa_move
+    cap_rows = (config.frontier_cap_rows
+                if config.frontier_cap_rows is not None
+                else _default_cap_rows(ws))
+    move = functools.partial(lpa_move, config=config)
+    move_sparse = functools.partial(lpa_move, config=config, sparse=True,
+                                    cap_rows=cap_rows)
     frontier_fn = mark_frontier
     if jit:
-        move = jax.jit(functools.partial(lpa_move, config=config))
+        # two independent jit artifacts — the dense/sparse choice is made
+        # per iteration on the host (the frontier is concrete between
+        # iterations), never as a traced branch.
+        move = jax.jit(move)
+        move_sparse = jax.jit(move_sparse)
         frontier_fn = jax.jit(mark_frontier)
     n = graph.n_nodes
     labels = jnp.arange(n, dtype=jnp.int32)
     frontier = jnp.ones((n,), dtype=jnp.bool_)  # every vertex starts queued
-    track = config.frontier_gate or config.track_frontier
+    need_marks = config.frontier_gate or config.track_frontier
     history = []
     frontier_history = []
+    work_rows_history = []
+    dense_rows = _dense_work_rows(ws)
     converged = False
     it = 0
     for it in range(config.max_iters):
         pl = (it % config.rho) == 0
         seed = jnp.int32(it + 1)
         gate = frontier if config.frontier_gate else None
-        if jit:
+        sparse = False
+        work = dense_rows
+        if config.frontier_sparse:
+            fits, sparse_work = _sparse_fit(ws, np.asarray(frontier),
+                                            cap_rows)
+            if fits:
+                sparse, work = True, sparse_work
+        if sparse:
+            labels, changed = move_sparse(ws, labels, jnp.asarray(pl), seed,
+                                          frontier=gate)
+        else:
             labels, changed = move(ws, labels, jnp.asarray(pl), seed,
                                    frontier=gate)
-        else:
-            labels, changed = lpa_move(ws, labels, jnp.asarray(pl), seed,
-                                       config, frontier=gate)
-        if track:
-            frontier_history.append(float(jnp.mean(frontier)))
+        work_rows_history.append(work)
+        if need_marks:
+            if config.track_frontier:
+                frontier_history.append(float(jnp.mean(frontier)))
             marked = frontier_fn(ws, changed)
             # A Pick-Less round blocks legal moves (want > label), so its
             # unchanged vertices are deferred, not settled — keep them
@@ -241,7 +363,8 @@ def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
             break
     return LPAResult(labels=labels, iterations=it + 1,
                      changed_history=history, converged=converged,
-                     frontier_history=frontier_history)
+                     frontier_history=frontier_history,
+                     work_rows_history=work_rows_history)
 
 
 def lpa_step_fn(config: LPAConfig) -> Callable:

@@ -293,14 +293,20 @@ class FusedRound:
     row_count: jnp.ndarray  # [n_steps, tile_r] int32 — valid entries of the row (0 on pad rows)
     step_dmax: jnp.ndarray  # [n_steps, 1] int32 — max row_count within the step
     n_entries_in: int       # flat entry-array length this round consumes
+    # [n_steps * tile_r] int32 — owning vertex of each padded row (-1 on pad
+    # rows); what the sparse frontier path compacts on (None: pre-sparse
+    # synthetic rounds, e.g. the distributed per-shard movers)
+    row_vertex: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
-        return ((self.row_start, self.row_count, self.step_dmax),
+        return ((self.row_start, self.row_count, self.step_dmax,
+                 self.row_vertex),
                 (self.n_entries_in,))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(children[0], children[1], children[2], aux[0],
+                   row_vertex=children[3])
 
     @property
     def n_steps(self) -> int:
@@ -383,22 +389,22 @@ def build_fused_fold_plan(degrees: np.ndarray, k: int = 8, chunk: int = 128,
         pad = (-total_rows) % tile_r if total_rows else tile_r
         rs = np.concatenate([row_start, np.zeros(pad, np.int64)])
         rc = np.concatenate([row_count, np.zeros(pad, np.int64)])
+        rv_pad = np.concatenate(
+            [row_vertex, np.full(pad, -1, np.int64)]).astype(np.int32)
         n_steps = len(rs) // tile_r
         rs2 = rs.reshape(n_steps, tile_r).astype(np.int32)
         rc2 = rc.reshape(n_steps, tile_r).astype(np.int32)
         rounds.append(FusedRound(
             row_start=jnp.asarray(rs2), row_count=jnp.asarray(rc2),
             step_dmax=jnp.asarray(rc2.max(axis=1, keepdims=True)),
-            n_entries_in=n_entries))
+            n_entries_in=n_entries, row_vertex=jnp.asarray(rv_pad)))
         if rtv0 is None:  # round 0: (vertex, rank) per padded row
-            rtv0 = np.concatenate(
-                [row_vertex, np.full(pad, -1, np.int64)]).astype(np.int32)
+            rtv0 = rv_pad
             rank0 = np.concatenate(
                 [row_rank, np.zeros(pad, np.int64)]).astype(np.int32)
             max_rows0 = max(int(n_chunks.max()) if len(n_chunks) else 0, 1)
         if np.all(n_chunks <= 1):
-            rtv = np.concatenate(
-                [row_vertex, np.full(pad, -1, np.int64)]).astype(np.int32)
+            rtv = rv_pad
             break
         # Next round consumes this round's padded output [n_steps*tile_r, k]
         # flattened; vertex v's entries start at (v's first row) * k.
@@ -453,15 +459,20 @@ class StreamedRound:
     step_dmax: jnp.ndarray     # [n_windows, 1] int32 — max row_count within the window
     n_entries_in: int          # flat source entry-array length this round consumes
     window_entries: int        # W — entry slots per window (slice-safe: rel+chunk <= W)
+    # [n_windows * R] int32 — owning vertex of each row slot (-1 on pad
+    # slots); what the sparse frontier path compacts windows on (None:
+    # pre-sparse synthetic rounds, e.g. the distributed per-shard movers)
+    row_vertex: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
         return ((self.entry_gather, self.row_start, self.row_count,
-                 self.step_dmax),
+                 self.step_dmax, self.row_vertex),
                 (self.n_entries_in, self.window_entries))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, *aux)
+        return cls(children[0], children[1], children[2], children[3],
+                   aux[0], aux[1], row_vertex=children[4])
 
     @property
     def n_windows(self) -> int:
@@ -687,7 +698,8 @@ def build_streamed_fold_plan(degrees: np.ndarray, k: int = 8,
                       row_count=jnp.asarray(r["row_count"]),
                       step_dmax=jnp.asarray(r["step_dmax"]),
                       n_entries_in=r["n_entries_in"],
-                      window_entries=r["window_entries"])
+                      window_entries=r["window_entries"],
+                      row_vertex=jnp.asarray(r["row_to_vertex"]))
         for r in rounds_np)
     return StreamedFoldPlan(rounds=rounds, row_to_vertex=jnp.asarray(rtv),
                             n_nodes=n, k=k, chunk=chunk,
@@ -754,3 +766,97 @@ def plan_round0_dispatches(plan: FoldPlan) -> int:
     engines cover the same pass in ONE dispatch each (the window grid of
     the streamed BM/rescan kernels lives inside the dispatch)."""
     return len(plan.rounds[0].buckets) if plan.rounds else 0
+
+
+# ---------------------------------------------------------------------------
+# Sparse frontier compaction (DESIGN.md §8.5)
+# ---------------------------------------------------------------------------
+#
+# The sparse frontier path compacts each round's *active* rows — rows whose
+# owning vertex is on the frontier — into a fixed-capacity index buffer, so
+# the fused/streamed kernels grid only over active rows while the jit
+# contract stays static. Unfilled capacity slots hold a sentinel index one
+# past the last real slot; the drivers append one neutral row (start 0,
+# count 0, vertex -1) at that sentinel position, so padded gathers read
+# all-empty rows that fold to empty sketches and scatter into a discarded
+# dump slot. Whether a frontier *fits* the capacity is decided on the host
+# between iterations (the frontier is concrete there) via the
+# ``*_active_rows`` helpers below — overflow falls back to the dense gated
+# mover, keeping both jitted movers free of traced control flow.
+
+
+def compact_active_rows(active: jnp.ndarray, cap: int) -> jnp.ndarray:
+    """Compact the set lanes of ``active`` [rows] bool into a [cap] int32
+    index buffer (traced; static output shape).
+
+    Slot ``j`` holds the row index of the j-th active lane; slots past the
+    number of active lanes hold the sentinel ``rows`` (one past the last
+    real row — callers gather from sentinel-extended arrays). Active lanes
+    beyond ``cap`` are dropped, so callers must pre-check the fit on the
+    host (``fused_active_rows``/``streamed_active_windows``) before
+    trusting the result.
+    """
+    rows = active.shape[0]
+    idx = jnp.full((cap + 1,), jnp.int32(rows), dtype=jnp.int32)
+    if rows == 0:
+        return idx[:cap]
+    pos = jnp.cumsum(active.astype(jnp.int32)) - 1
+    # inactive lanes and overflow both land in the sliced-off dump slot cap
+    slot = jnp.where(active & (pos < cap), pos, cap)
+    return idx.at[slot].set(jnp.arange(rows, dtype=jnp.int32))[:cap]
+
+
+def _round_active(row_vertex, frontier: np.ndarray) -> np.ndarray:
+    """Per-row activity mask of one round (host side): real rows whose
+    owning vertex is on the frontier."""
+    rv = np.asarray(row_vertex).reshape(-1)
+    active = np.zeros(rv.shape, dtype=bool)
+    real = rv >= 0
+    active[real] = np.asarray(frontier)[rv[real]]
+    return active
+
+
+def fused_active_rows(plan: FusedFoldPlan, frontier: np.ndarray) -> List[int]:
+    """Per-round active fold-row counts of a concrete frontier (host side).
+
+    The sparse fused mover fits a row capacity ``cap_rows`` iff every
+    round's count here is <= ``cap_rows``.
+    """
+    return [int(np.count_nonzero(_round_active(r.row_vertex, frontier)))
+            for r in plan.rounds]
+
+
+def streamed_active_windows(plan: StreamedFoldPlan,
+                            frontier: np.ndarray) -> List[Tuple[int, int]]:
+    """Per-round ``(active_windows, rows_in_active_windows)`` of a concrete
+    frontier (host side).
+
+    The sparse streamed mover compacts at *window* granularity: a window is
+    active when any of its rows is, and every row of an active window is
+    folded (inactive rows there compute dense-identical values that the
+    gate then masks). Each active window holds at least one active row, so
+    ``active_windows <= active_rows`` — a row capacity that admits the
+    fused path admits the streamed one too.
+    """
+    out = []
+    for rnd in plan.rounds:
+        active = _round_active(rnd.row_vertex, frontier)
+        per_win = active.reshape(rnd.n_windows, rnd.tile_r)
+        win_active = per_win.any(axis=1)
+        real = (np.asarray(rnd.row_vertex).reshape(
+            rnd.n_windows, rnd.tile_r) >= 0) & win_active[:, None]
+        out.append((int(np.count_nonzero(win_active)),
+                    int(np.count_nonzero(real))))
+    return out
+
+
+def fused_work_rows(plan: FusedFoldPlan) -> int:
+    """Real fold rows one dense iteration computes (all rounds)."""
+    return sum(int(np.count_nonzero(np.asarray(r.row_vertex) >= 0))
+               for r in plan.rounds)
+
+
+def streamed_work_rows(plan: StreamedFoldPlan) -> int:
+    """Real fold rows one dense iteration computes (all rounds)."""
+    return sum(int(np.count_nonzero(np.asarray(r.row_vertex) >= 0))
+               for r in plan.rounds)

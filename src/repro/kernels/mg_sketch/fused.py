@@ -53,7 +53,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.graphs.csr import FusedFoldPlan, FusedRound
+from repro.graphs.csr import FusedFoldPlan, FusedRound, compact_active_rows
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 UINT_MAX = np.uint32(0xFFFFFFFF)  # np scalar: inlines as a kernel literal
@@ -549,3 +549,195 @@ def rescan_select_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
     return rescan_select_generic(plan, entry_labels, entry_weights, labels,
                                  seed, run_mg_plan_fused,
                                  rescan_round_fused, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Sparse frontier path: grid only over active rows (DESIGN.md §8.5)
+# ---------------------------------------------------------------------------
+#
+# The dense gated mover computes every fold row and lets the frontier mask
+# discard off-frontier moves after the fact — correct, but zero FLOPs
+# saved. The sparse drivers below compact each round's *active* rows (rows
+# whose owning vertex is on the frontier) into a fixed-capacity synthetic
+# ``FusedRound`` whose metadata is traced, then run the UNCHANGED kernels
+# above over the compacted grid. Activity is per-vertex, so an active
+# vertex's whole multi-round reduction chain is computed from real inputs
+# and stays bit-identical to the dense fold; inactive vertices' partials
+# are left as empty sketches (label -1 / weight 0) in the scatter-back
+# buffers and are only ever read by rows that are themselves inactive.
+# Capacity fit is the CALLER's job: the host checks the concrete frontier
+# against ``csr.fused_active_rows`` and falls back to the dense mover on
+# overflow (``compact_active_rows`` silently drops overflowing rows).
+
+
+def _sparse_fused_round(rnd: FusedRound, frontier: jnp.ndarray,
+                        cap_rows: int):
+    """Compact one round's active rows into a capped synthetic round.
+
+    Returns ``(sub_round, idx, row_vertex)``: a ``FusedRound`` of
+    ``min(ceil(cap_rows / tile_r), n_steps)`` steps whose metadata is
+    gathered (traced) from the dense round, the [cap] compacted row
+    indices (sentinel = dense row count, pointing at an appended neutral
+    row), and the [cap] owning vertex per compacted row (-1 on sentinel
+    slots).
+    """
+    n_steps, tile_r = rnd.row_start.shape
+    n = frontier.shape[0]
+    rv = rnd.row_vertex
+    real = rv >= 0
+    front_ext = jnp.concatenate([frontier.astype(jnp.bool_),
+                                 jnp.zeros((1,), jnp.bool_)])
+    active = real & front_ext[jnp.where(real, rv, n)]
+    cap_steps = min(-(-cap_rows // tile_r), n_steps)
+    idx = compact_active_rows(active, cap_steps * tile_r)
+    zero_row = jnp.zeros((1,), jnp.int32)
+    rs = jnp.concatenate([rnd.row_start.reshape(-1), zero_row])[idx]
+    rc = jnp.concatenate([rnd.row_count.reshape(-1), zero_row])[idx]
+    rv_c = jnp.concatenate([rv, jnp.full((1,), -1, jnp.int32)])[idx]
+    rs2 = rs.reshape(cap_steps, tile_r)
+    rc2 = rc.reshape(cap_steps, tile_r)
+    sub = FusedRound(row_start=rs2, row_count=rc2,
+                     step_dmax=jnp.max(rc2, axis=1, keepdims=True),
+                     n_entries_in=rnd.n_entries_in)
+    return sub, idx, rv_c
+
+
+def _scatter_sparse_rows(idx: jnp.ndarray, values: jnp.ndarray, rows: int,
+                         fill) -> jnp.ndarray:
+    """Scatter compacted per-row results back to dense row positions.
+
+    Sentinel slots land in a dump row that is sliced off; unwritten dense
+    rows keep ``fill`` (the empty-sketch value, so later rounds read
+    exact no-op entries for inactive vertices).
+    """
+    buf = jnp.full((rows + 1,) + values.shape[1:], fill, values.dtype)
+    return buf.at[idx].set(values)[:rows]
+
+
+def run_mg_plan_fused_sparse(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
+                             entry_weights: jnp.ndarray,
+                             frontier: jnp.ndarray, cap_rows: int,
+                             interpret: bool | None = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All fold rounds over compacted active rows, one dispatch each.
+
+    Returns the final-round padded sketches in DENSE fused row order
+    (inactive rows hold empty sketches), so ``plan.row_to_vertex`` maps
+    them exactly like the dense driver's output.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    labels, weights = entry_labels, entry_weights
+    for rnd in plan.rounds:
+        sub, idx, _ = _sparse_fused_round(rnd, frontier, cap_rows)
+        c_k, c_v = fused_fold_round(sub, labels, weights, k=plan.k,
+                                    chunk=plan.chunk, interpret=interpret)
+        rows = rnd.row_vertex.shape[0]
+        s_k = _scatter_sparse_rows(idx, c_k, rows, jnp.int32(-1))
+        s_v = _scatter_sparse_rows(idx, c_v, rows, jnp.float32(0.0))
+        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    return s_k, s_v
+
+
+def select_best_fused_sparse(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
+                             entry_weights: jnp.ndarray,
+                             labels: jnp.ndarray, seed: jnp.ndarray,
+                             frontier: jnp.ndarray, cap_rows: int,
+                             interpret: bool | None = None) -> jnp.ndarray:
+    """Sparse MG iteration: ``n_rounds`` dispatches over active rows only.
+
+    Off-frontier vertices keep their label verbatim (never computed); on
+    the frontier the wanted label is bit-identical to
+    ``select_best_fused`` — the caller must have checked ``cap_rows``
+    fits the frontier (``csr.fused_active_rows``).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if plan.n_nodes == 0:
+        return labels
+    el, ew = entry_labels, entry_weights
+    for rnd in plan.rounds[:-1]:
+        sub, idx, _ = _sparse_fused_round(rnd, frontier, cap_rows)
+        c_k, c_v = fused_fold_round(sub, el, ew, k=plan.k, chunk=plan.chunk,
+                                    interpret=interpret)
+        rows = rnd.row_vertex.shape[0]
+        el = _scatter_sparse_rows(idx, c_k, rows, jnp.int32(-1)).reshape(-1)
+        ew = _scatter_sparse_rows(idx, c_v, rows,
+                                  jnp.float32(0.0)).reshape(-1)
+    n = plan.n_nodes
+    sub, _, rv_c = _sparse_fused_round(plan.rounds[-1], frontier, cap_rows)
+    real = rv_c >= 0
+    incumbents = jnp.where(real, labels[jnp.maximum(rv_c, 0)], -1)
+    choice = fused_select_round(sub, el, ew, incumbents, seed, k=plan.k,
+                                chunk=plan.chunk, interpret=interpret)
+    # scatter per-active-row winners over the incumbent labels (sentinel
+    # rows fold empty, choose their -1 incumbent and land in the dump slot)
+    buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
+    buf = buf.at[jnp.where(real, rv_c, n)].set(
+        jnp.where(real, choice, -1))
+    return buf[:n]
+
+
+def run_bm_plan_fused_sparse(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
+                             entry_weights: jnp.ndarray,
+                             cur_labels: jnp.ndarray, frontier: jnp.ndarray,
+                             cap_rows: int, interpret: bool | None = None
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse νBM iteration core: ONE dispatch over active round-0 rows.
+
+    ``sketch.bm_merge_rows`` is an order-insensitive scatter over whatever
+    rows it is handed, and activity is per-vertex (every row of an active
+    vertex is in the compacted set), so active vertices merge the complete
+    bit-identical partial set; vertices with no compacted rows come back
+    (-1, 0) — the gate masks them, like dense off-frontier moves.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    from repro.core.sketch import bm_init_rows, bm_merge_rows
+    n = plan.n_nodes
+    if n == 0:
+        return (jnp.full((0,), -1, jnp.int32), jnp.zeros((0,), jnp.float32))
+    sub, _, rv_c = _sparse_fused_round(plan.rounds[0], frontier, cap_rows)
+    init = bm_init_rows(rv_c, cur_labels)
+    ck, wk = bm_fold_round_fused(sub, entry_labels, entry_weights, init,
+                                 chunk=plan.chunk, interpret=interpret)
+    return bm_merge_rows(n, cur_labels, rv_c, ck, wk)
+
+
+def rescan_select_fused_sparse(plan: FusedFoldPlan,
+                               entry_labels: jnp.ndarray,
+                               entry_weights: jnp.ndarray,
+                               labels: jnp.ndarray, seed: jnp.ndarray,
+                               frontier: jnp.ndarray, cap_rows: int,
+                               interpret: bool | None = None) -> jnp.ndarray:
+    """Sparse double-scan MG iteration: ``n_rounds`` sparse fold dispatches
+    + ONE rescan dispatch over active round-0 rows. Inactive vertices end
+    with an all-empty candidate set (zero accumulated weight), so
+    ``choose_from_candidates`` keeps their label — bit-identical on the
+    frontier to ``rescan_select_fused``.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    from repro.core.sketch import choose_from_candidates, merge_rescan_partials
+    n, k = plan.n_nodes, plan.k
+    if n == 0:
+        return labels
+    s_k, _ = run_mg_plan_fused_sparse(plan, entry_labels, entry_weights,
+                                      frontier, cap_rows,
+                                      interpret=interpret)
+    rtv = plan.row_to_vertex
+    cand = jnp.full((n + 1, k), -1, jnp.int32).at[
+        jnp.where(rtv >= 0, rtv, n)].set(s_k)[:n]
+    sub0, idx0, rv0_c = _sparse_fused_round(plan.rounds[0], frontier,
+                                            cap_rows)
+    cand_ext = jnp.concatenate([cand, jnp.full((1, k), -1, jnp.int32)])
+    cand_rows = cand_ext[jnp.where(rv0_c >= 0, rv0_c, n)]
+    parts_c = rescan_round_fused(sub0, entry_labels, entry_weights,
+                                 cand_rows, k=k, chunk=plan.chunk,
+                                 interpret=interpret)
+    rows0 = plan.rounds[0].row_vertex.shape[0]
+    parts = _scatter_sparse_rows(idx0, parts_c, rows0, jnp.float32(0.0))
+    acc = merge_rescan_partials(n, k, plan.max_rows0, plan.row_to_vertex0,
+                                plan.row_rank0, parts)
+    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc,
+                                  labels, seed)

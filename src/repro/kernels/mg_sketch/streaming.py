@@ -45,7 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.graphs.csr import StreamedFoldPlan, StreamedRound
+from repro.graphs.csr import (StreamedFoldPlan, StreamedRound,
+                              compact_active_rows)
 from repro.kernels.mg_sketch.fused import (_bm_fold, _gather_tile,
                                            _interpret_default, _mg_fold,
                                            _rescan_acc, _select_rows,
@@ -353,3 +354,194 @@ def rescan_select_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
     return rescan_select_generic(plan, entry_labels, entry_weights, labels,
                                  seed, run_mg_plan_stream,
                                  rescan_round_stream, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Sparse frontier path: grid only over active windows (DESIGN.md §8.5)
+# ---------------------------------------------------------------------------
+#
+# The streaming analogue of ``fused``'s sparse drivers, compacted at
+# *window* granularity: a window is active when any of its rows is owned by
+# a frontier vertex, and the synthetic round gathers the active windows'
+# entry_gather blocks / row metadata into a ``min(cap_rows, n_windows)``
+# -window buffer (every active window holds >= 1 active row, so a row
+# capacity that fits the fused path always fits here). The UNCHANGED
+# streamed kernels then grid over the compacted windows. Inactive rows
+# that share a window with an active one are folded too — on round 0 they
+# compute the same values the dense path would (then masked by the gate);
+# on later rounds they read their vertex's empty scatter-back partials and
+# fold to empty sketches. Capacity fit is checked on the host
+# (``csr.streamed_active_windows``) with a dense fallback on overflow.
+
+
+def _sparse_stream_round(rnd: StreamedRound, frontier: jnp.ndarray,
+                         cap_rows: int):
+    """Compact one round's active windows into a capped synthetic round.
+
+    Returns ``(sub_round, widx, row_vertex)``: a ``StreamedRound`` over
+    ``min(cap_rows, n_windows)`` windows with traced gathered metadata
+    (sentinel windows are all-pad: entry_gather -1, counts 0), the [cap_w]
+    compacted window indices (sentinel = dense window count), and the
+    [cap_w * tile_r] owning vertex per compacted row slot (-1 on sentinel
+    windows' slots).
+    """
+    n_win, tile_r = rnd.row_start.shape
+    w = rnd.window_entries
+    n = frontier.shape[0]
+    rv = rnd.row_vertex
+    real = rv >= 0
+    front_ext = jnp.concatenate([frontier.astype(jnp.bool_),
+                                 jnp.zeros((1,), jnp.bool_)])
+    active = real & front_ext[jnp.where(real, rv, n)]
+    win_active = active.reshape(n_win, tile_r).any(axis=1)
+    cap_w = min(cap_rows, n_win)
+    widx = compact_active_rows(win_active, cap_w)
+    eg_ext = jnp.concatenate([rnd.entry_gather.reshape(n_win, w),
+                              jnp.full((1, w), -1, jnp.int32)])
+    zero_tile = jnp.zeros((1, tile_r), jnp.int32)
+    rs_ext = jnp.concatenate([rnd.row_start, zero_tile])
+    rc_ext = jnp.concatenate([rnd.row_count, zero_tile])
+    dm_ext = jnp.concatenate([rnd.step_dmax, jnp.zeros((1, 1), jnp.int32)])
+    rv_ext = jnp.concatenate([rv.reshape(n_win, tile_r),
+                              jnp.full((1, tile_r), -1, jnp.int32)])
+    sub = StreamedRound(entry_gather=eg_ext[widx].reshape(-1),
+                        row_start=rs_ext[widx], row_count=rc_ext[widx],
+                        step_dmax=dm_ext[widx],
+                        n_entries_in=rnd.n_entries_in, window_entries=w)
+    return sub, widx, rv_ext[widx].reshape(-1)
+
+
+def _scatter_sparse_windows(widx: jnp.ndarray, values: jnp.ndarray,
+                            n_win: int, tile_r: int, fill) -> jnp.ndarray:
+    """Scatter compacted per-row-slot results back to dense slot positions
+    (whole windows at a time; sentinel windows land in a sliced-off dump
+    window; unwritten dense slots keep the empty-sketch ``fill``)."""
+    targets = (widx[:, None].astype(jnp.int32) * tile_r
+               + jnp.arange(tile_r, dtype=jnp.int32)[None, :]).reshape(-1)
+    buf = jnp.full(((n_win + 1) * tile_r,) + values.shape[1:], fill,
+                   values.dtype)
+    return buf.at[targets].set(values)[:n_win * tile_r]
+
+
+def run_mg_plan_stream_sparse(plan: StreamedFoldPlan,
+                              entry_labels: jnp.ndarray,
+                              entry_weights: jnp.ndarray,
+                              frontier: jnp.ndarray, cap_rows: int,
+                              interpret: bool | None = None
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """All fold rounds over compacted active windows, one dispatch each.
+    Returns the final-round padded sketches in DENSE window-slot order."""
+    if interpret is None:
+        interpret = _interpret_default()
+    labels, weights = entry_labels, entry_weights
+    for rnd in plan.rounds:
+        sub, widx, _ = _sparse_stream_round(rnd, frontier, cap_rows)
+        c_k, c_v = stream_fold_round(sub, labels, weights, k=plan.k,
+                                     chunk=plan.chunk, interpret=interpret)
+        s_k = _scatter_sparse_windows(widx, c_k, rnd.n_windows, rnd.tile_r,
+                                      jnp.int32(-1))
+        s_v = _scatter_sparse_windows(widx, c_v, rnd.n_windows, rnd.tile_r,
+                                      jnp.float32(0.0))
+        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    return s_k, s_v
+
+
+def select_best_stream_sparse(plan: StreamedFoldPlan,
+                              entry_labels: jnp.ndarray,
+                              entry_weights: jnp.ndarray,
+                              labels: jnp.ndarray, seed: jnp.ndarray,
+                              frontier: jnp.ndarray, cap_rows: int,
+                              interpret: bool | None = None) -> jnp.ndarray:
+    """Sparse streamed MG iteration: ``n_rounds`` dispatches over active
+    windows only. Bit-identical on the frontier to ``select_best_stream``;
+    off-frontier wanted labels may differ (inactive rows sharing an active
+    window compute, others carry through) — the frontier gate masks both,
+    exactly as it masks the dense mover's off-frontier moves.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if plan.n_nodes == 0:
+        return labels
+    el, ew = entry_labels, entry_weights
+    for rnd in plan.rounds[:-1]:
+        sub, widx, _ = _sparse_stream_round(rnd, frontier, cap_rows)
+        c_k, c_v = stream_fold_round(sub, el, ew, k=plan.k,
+                                     chunk=plan.chunk, interpret=interpret)
+        el = _scatter_sparse_windows(widx, c_k, rnd.n_windows, rnd.tile_r,
+                                     jnp.int32(-1)).reshape(-1)
+        ew = _scatter_sparse_windows(widx, c_v, rnd.n_windows, rnd.tile_r,
+                                     jnp.float32(0.0)).reshape(-1)
+    n = plan.n_nodes
+    sub, _, rv_c = _sparse_stream_round(plan.rounds[-1], frontier, cap_rows)
+    real = rv_c >= 0
+    incumbents = jnp.where(real, labels[jnp.maximum(rv_c, 0)], -1)
+    choice = stream_select_round(sub, el, ew, incumbents, seed, k=plan.k,
+                                 chunk=plan.chunk, interpret=interpret)
+    buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
+    buf = buf.at[jnp.where(real, rv_c, n)].set(
+        jnp.where(real, choice, -1))
+    return buf[:n]
+
+
+def run_bm_plan_stream_sparse(plan: StreamedFoldPlan,
+                              entry_labels: jnp.ndarray,
+                              entry_weights: jnp.ndarray,
+                              cur_labels: jnp.ndarray,
+                              frontier: jnp.ndarray, cap_rows: int,
+                              interpret: bool | None = None
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sparse streamed νBM iteration core: ONE dispatch over active
+    round-0 windows + the order-insensitive ``sketch.bm_merge_rows``
+    merge. Active vertices merge their complete row set (every row of an
+    active vertex lives in an active window); vertices only partially
+    covered by active windows produce gate-masked off-frontier values.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    from repro.core.sketch import bm_init_rows, bm_merge_rows
+    n = plan.n_nodes
+    if n == 0:
+        return (jnp.full((0,), -1, jnp.int32), jnp.zeros((0,), jnp.float32))
+    sub, _, rv_c = _sparse_stream_round(plan.rounds[0], frontier, cap_rows)
+    init = bm_init_rows(rv_c, cur_labels)
+    ck, wk = bm_fold_round_stream(sub, entry_labels, entry_weights, init,
+                                  chunk=plan.chunk, interpret=interpret)
+    return bm_merge_rows(n, cur_labels, rv_c, ck, wk)
+
+
+def rescan_select_stream_sparse(plan: StreamedFoldPlan,
+                                entry_labels: jnp.ndarray,
+                                entry_weights: jnp.ndarray,
+                                labels: jnp.ndarray, seed: jnp.ndarray,
+                                frontier: jnp.ndarray, cap_rows: int,
+                                interpret: bool | None = None
+                                ) -> jnp.ndarray:
+    """Sparse streamed double-scan MG iteration: ``n_rounds`` sparse fold
+    dispatches + ONE rescan dispatch over active round-0 windows.
+    Off-frontier vertices keep an all-empty candidate set and their label.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    from repro.core.sketch import choose_from_candidates, merge_rescan_partials
+    n, k = plan.n_nodes, plan.k
+    if n == 0:
+        return labels
+    s_k, _ = run_mg_plan_stream_sparse(plan, entry_labels, entry_weights,
+                                       frontier, cap_rows,
+                                       interpret=interpret)
+    rtv = plan.row_to_vertex
+    cand = jnp.full((n + 1, k), -1, jnp.int32).at[
+        jnp.where(rtv >= 0, rtv, n)].set(s_k)[:n]
+    rnd0 = plan.rounds[0]
+    sub0, widx0, rv0_c = _sparse_stream_round(rnd0, frontier, cap_rows)
+    cand_ext = jnp.concatenate([cand, jnp.full((1, k), -1, jnp.int32)])
+    cand_rows = cand_ext[jnp.where(rv0_c >= 0, rv0_c, n)]
+    parts_c = rescan_round_stream(sub0, entry_labels, entry_weights,
+                                  cand_rows, k=k, chunk=plan.chunk,
+                                  interpret=interpret)
+    parts = _scatter_sparse_windows(widx0, parts_c, rnd0.n_windows,
+                                    rnd0.tile_r, jnp.float32(0.0))
+    acc = merge_rescan_partials(n, k, plan.max_rows0, plan.row_to_vertex0,
+                                plan.row_rank0, parts)
+    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc,
+                                  labels, seed)

@@ -107,3 +107,35 @@ def test_dispatch_accounting_passes_through(backend):
     assert checked.uses_stream_plan == plain.uses_stream_plan
     assert checked.dispatches_per_iter(plan, aux[backend]) \
         == plain.dispatches_per_iter(plan, aux[backend])
+    assert checked.sparse_dispatches_per_iter(plan, aux[backend]) \
+        == plain.sparse_dispatches_per_iter(plan, aux[backend])
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_checked_sparse_entry_points_are_bit_identical(backend):
+    """The sparse methods get EXPLICIT contract wrappers (CheckedEngine's
+    __getattr__ would otherwise delegate them uncheck-wrapped)."""
+    plan, aux, el, ew, labels = _setup()
+    seed = jnp.int32(3)
+    frontier = jnp.asarray([True, False, True, True, False])
+    plain = get_engine(backend, checked=False).mg_select_sparse(
+        plan, aux[backend], el, ew, labels, seed, frontier, 64)
+    checked = get_engine(backend, checked=True).mg_select_sparse(
+        plan, aux[backend], el, ew, labels, seed, frontier, 64)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(checked))
+
+
+@pytest.mark.parametrize("backend", ENGINES)
+def test_checked_sparse_catches_nan_weight(backend):
+    plan, aux, el, ew, labels = _setup()
+    frontier = jnp.ones((5,), jnp.bool_)
+    eng = get_engine(backend, checked=True)
+    with pytest.raises(checkify.JaxRuntimeError,
+                       match="NaN/inf entry weight"):
+        eng.bm_fold_plan_sparse(plan, aux[backend], el,
+                                ew.at[0].set(jnp.nan), labels, frontier, 64)
+    with pytest.raises(checkify.JaxRuntimeError,
+                       match="negative input label"):
+        eng.mg_rescan_sparse(plan, aux[backend], el, ew,
+                             labels.at[0].set(-7), jnp.int32(0), frontier,
+                             64)

@@ -218,3 +218,37 @@ def test_halo_exchange_matches_full_gather():
         halo = (ws_h.h_pad + ws_h.hub_pad) * 8
         assert halo < full, (halo, full)
     """, devices=8)
+
+
+@pytest.mark.slow  # spawns a multi-device subprocess
+def test_dist_frontier_gate_matches_single_host():
+    """Per-shard dense frontier gating (dist_lpa(frontier_gate=True)):
+    the marks come from one changed-flag exchange through the same
+    halo/gather machinery as the labels, so the gated trajectory must be
+    bit-identical to the single-host frontier_gate=True reference, across
+    every exchange mode and engine."""
+    _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.graphs.generators import powerlaw_communities
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.core.lpa import lpa, LPAConfig
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("shard",))
+        g, _ = powerlaw_communities(1024, p_in=0.5, mix=0.02, seed=3)
+        sh = lpa(g, LPAConfig(method="mg", rho=2, frontier_gate=True))
+        ref = np.asarray(sh.labels)
+        ws = build_dist_workspace(g, 4)
+        full, it = dist_lpa(mesh, ws, rho=2, frontier_gate=True)
+        assert (np.asarray(full) == ref).all()
+        assert it == sh.iterations
+        ws_h = build_dist_workspace(g, 4, halo=True)
+        halo, _ = dist_lpa(mesh, ws_h, rho=2, frontier_gate=True)
+        assert (np.asarray(halo) == ref).all()
+        ws_f = build_dist_workspace(g, 4, fused=True, tile_r=64)
+        fused, _ = dist_lpa(mesh, ws_f, rho=2, engine="pallas_fused",
+                            frontier_gate=True)
+        assert (np.asarray(fused) == ref).all()
+        bm, _ = dist_lpa(mesh, ws, rho=2, method="bm", frontier_gate=True)
+        bm_sh = lpa(g, LPAConfig(method="bm", rho=2, frontier_gate=True))
+        assert (np.asarray(bm) == np.asarray(bm_sh.labels)).all()
+    """, devices=4)

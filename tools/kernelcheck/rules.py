@@ -731,6 +731,9 @@ _DISPATCH_PAIRS = (
     ("dispatches_per_iter", "mg_select"),
     ("bm_dispatches_per_iter", "bm_fold_plan"),
     ("rescan_dispatches_per_iter", "mg_rescan"),
+    ("sparse_dispatches_per_iter", "mg_select_sparse"),
+    ("sparse_bm_dispatches_per_iter", "bm_fold_plan_sparse"),
+    ("sparse_rescan_dispatches_per_iter", "mg_rescan_sparse"),
 )
 
 

@@ -1,0 +1,28 @@
+"""Seeded R2 violation: sparse compaction feeding a kernel raw.
+
+The frontier-compacted gather reorders the flat entry array by active row
+but never re-pads it, so the kernel's full-chunk dynamic slice on the last
+compacted row is not provably in bounds.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _toy_sparse_kernel(e_ref, o_ref):
+    o_ref[...] = e_ref[...] * 2
+
+
+def run_sparse_round(entries, active_idx, chunk):
+    # BUG: the compacted operand comes straight from a take(), not from a
+    # pad/window producer — rows compacted to the tail can slice past the
+    # end of the flat entry array.
+    compacted = jnp.take(entries, active_idx, axis=0).reshape(-1)
+    return pl.pallas_call(
+        _toy_sparse_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((128,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((128,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((128,), jnp.float32),
+        interpret=True,
+    )(compacted)
