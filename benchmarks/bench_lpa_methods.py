@@ -19,11 +19,15 @@ e.g. ``--engines all`` or ``--engines jnp,pallas_stream,auto`` — and
 get that sweep (``mg``, ``bm`` or ``all``; unswept sketches run the jnp
 reference only). The default times the ``jnp`` reference only (the
 static engine stats are always reported); ``auto`` rows also show which
-backend the policy resolved to.
+backend the policy resolved to. ``--layout``
+(``benchmarks.common.layout_list``) additionally times the
+window-aligned CSR layout on the stream-running backends
+(``{backend}+aligned`` rows) — the ``stream_gather_*`` stat columns show
+the O(|E|) per-iteration re-layout gather traffic it eliminates.
 """
 from __future__ import annotations
 
-from benchmarks.common import (engine_list, fold_engine_stats,
+from benchmarks.common import (engine_list, fold_engine_stats, layout_list,
                                lpa_working_set_bytes,
                                measured_step_temp_bytes, sketch_list, suite)
 from repro.core.lpa import LPAConfig, lpa
@@ -32,8 +36,21 @@ from repro.core.modularity import modularity
 METHODS = ("exact", "mg", "bm")
 
 
+def _streams(backend: str, g, vmem_budget: int) -> bool:
+    """True when this backend actually runs the streaming fold for ``g``
+    — the only case the ``--layout`` sweep changes anything. ``auto``
+    counts only when the VMEM policy resolves it to ``pallas_stream``."""
+    if backend == "pallas_stream":
+        return True
+    if backend == "auto":
+        from repro.core.fold_engine import resolve_auto
+        return resolve_auto(g.n_edges, vmem_budget) == "pallas_stream"
+    return False
+
+
 def run(scale: str = "small", engines: str | None = None,
-        sketches: str | None = None, frontier: bool = False):
+        sketches: str | None = None, frontier: bool = False,
+        layouts: str | None = None):
     """One row per (graph, method) — plus one per extra sketch fold engine.
 
     ``engines``: ``None`` (time the jnp reference only), ``"all"``, or a
@@ -43,9 +60,17 @@ def run(scale: str = "small", engines: str | None = None,
     ``frontier``: additionally time the frontier-gated runs — one dense
     gated reference per (graph, sketch) plus one sparse-compacted run per
     swept backend (``{backend}+sparse`` rows) with skipped-row stats.
+    ``layouts``: CSR entry layouts to time on the stream-running backends
+    (``benchmarks.common.layout_list``) — ``"all"`` adds one
+    ``{backend}+aligned`` row per stream-running swept backend with the
+    window-aligned layout (``LPAConfig(aligned_layout=True)``); the
+    static ``stream_gather_*`` columns quantify the per-iteration HBM
+    gather traffic the aligned layout removes.
     """
     swept = engine_list(engines) if engines else ("jnp",)
     swept_sketches = sketch_list(sketches) if sketches else ("mg",)
+    swept_layouts = layout_list(layouts) if layouts else ("unaligned",)
+    vmem_budget = LPAConfig().vmem_budget_bytes
     rows = []
     graphs = suite(scale)
     for gname, g in graphs.items():
@@ -53,35 +78,47 @@ def run(scale: str = "small", engines: str | None = None,
         for method in METHODS:
             backends = (swept if method in swept_sketches else ("jnp",))
             for backend in backends:
-                cfg = LPAConfig(method=method, rho=2, fold_backend=backend)
-                import time
-                t0 = time.perf_counter()
-                res = lpa(g, cfg)
-                dt = time.perf_counter() - t0
-                q = float(modularity(g, res.labels))
-                ws = lpa_working_set_bytes(method, g, cfg)
-                if method == "exact":
-                    base = dt
-                row = {
-                    "bench": "fig7_methods", "graph": gname,
-                    "method": method, "engine": backend,
-                    "n_nodes": g.n_nodes, "n_edges": g.n_edges,
-                    "runtime_s": round(dt, 3),
-                    "speedup_vs_exact": round(base / dt, 2) if base else 1.0,
-                    "iterations": res.iterations,
-                    "modularity": round(q, 4),
-                    "algo_bytes": int(ws["algo_bytes"]),
-                    "bytes_per_edge": round(
-                        ws["algo_bytes"] / max(g.n_edges, 1), 2),
-                }
-                if backend == "jnp":
-                    # XLA's own temp accounting; measured once per method
-                    # (lowering every Pallas engine would dominate runtime)
-                    row["xla_temp_bytes"] = int(
-                        measured_step_temp_bytes(g, cfg))
-                if method == "mg" and backend == backends[0]:
-                    row.update(fold_engine_stats(g, cfg))
-                rows.append(row)
+                variants = (swept_layouts
+                            if _streams(backend, g, vmem_budget)
+                            else ("unaligned",))
+                for layout in variants:
+                    aligned = layout == "aligned"
+                    cfg = LPAConfig(method=method, rho=2,
+                                    fold_backend=backend,
+                                    aligned_layout=aligned)
+                    import time
+                    t0 = time.perf_counter()
+                    res = lpa(g, cfg)
+                    dt = time.perf_counter() - t0
+                    q = float(modularity(g, res.labels))
+                    ws = lpa_working_set_bytes(method, g, cfg)
+                    if method == "exact":
+                        base = dt
+                    row = {
+                        "bench": "fig7_methods", "graph": gname,
+                        "method": method,
+                        "engine": f"{backend}+aligned" if aligned
+                                  else backend,
+                        "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                        "runtime_s": round(dt, 3),
+                        "speedup_vs_exact":
+                            round(base / dt, 2) if base else 1.0,
+                        "iterations": res.iterations,
+                        "modularity": round(q, 4),
+                        "algo_bytes": int(ws["algo_bytes"]),
+                        "bytes_per_edge": round(
+                            ws["algo_bytes"] / max(g.n_edges, 1), 2),
+                    }
+                    if backend == "jnp" and not aligned:
+                        # XLA's own temp accounting; measured once per
+                        # method (lowering every Pallas engine would
+                        # dominate runtime)
+                        row["xla_temp_bytes"] = int(
+                            measured_step_temp_bytes(g, cfg))
+                    if (method == "mg" and backend == backends[0]
+                            and not aligned):
+                        row.update(fold_engine_stats(g, cfg))
+                    rows.append(row)
             if frontier and method in swept_sketches:
                 rows.extend(_frontier_rows(gname, g, method, swept, base))
     return rows

@@ -113,6 +113,26 @@ def sketch_list(spec: str | None = None) -> tuple:
     return chosen
 
 
+LAYOUTS = ("unaligned", "aligned")
+
+
+def layout_list(spec: str | None = None) -> tuple:
+    """Parse a ``--layout`` spec: ``"all"`` / ``None`` (both CSR entry
+    layouts) or a comma subset of ``unaligned``/``aligned``. The aligned
+    layout (``LPAConfig(aligned_layout=True)``, DESIGN.md §13) only
+    changes the streaming engine, so the sweep re-times the
+    stream-capable backends (``pallas_stream`` and ``auto``) with the
+    round-0 entries pre-materialized window-aligned — other backends get
+    one row regardless of the spec."""
+    if spec in (None, "", "all"):
+        return LAYOUTS
+    chosen = tuple(s.strip() for s in spec.split(",") if s.strip())
+    bad = [c for c in chosen if c not in LAYOUTS]
+    if bad:
+        raise ValueError(f"unknown layouts {bad}; expected {LAYOUTS}")
+    return chosen
+
+
 def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     """Static dispatch/traffic accounting of the MG fold engines.
 
@@ -137,6 +157,17 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
       stream_window_entries      : the widest round's window stride W.
       stream_window_slots        : windowed entry slots materialized per
         iteration (pads included) — the streamed re-layout's HBM cost.
+      stream_gather_slots        : re-layout gather slots the default
+        (unaligned) streamed plan materializes per iteration — every
+        window slot is written once by the gather, O(|E|) of it on
+        round 0 (graphs.csr.streamed_gather_slots).
+      stream_gather_slots_aligned : the same count for the window-aligned
+        plan (``aligned_layout=True``): round 0 is pre-materialized at
+        build time, so only the tiny chunk-merge rounds still gather.
+      stream_gather_bytes_saved_per_iter : HBM gather traffic the aligned
+        layout removes each iteration — 8 bytes (int32 label + float32
+        weight) per slot no longer re-laid out. This is the O(|E|)
+        per-iteration round-trip the layout eliminates.
       stream_peak_resident_bytes : peak per-step entry residency of the
         streamed kernels (double-buffered label+weight window) — bounded
         by the config's ``stream_window``, independent of |E|.
@@ -153,6 +184,7 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
                                   build_streamed_fold_plan,
                                   fused_hbm_entries,
+                                  streamed_gather_slots,
                                   streamed_peak_window_bytes,
                                   streamed_window_slots)
     degrees = np.asarray(graph.degrees)
@@ -162,6 +194,13 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     stream_plan = build_streamed_fold_plan(
         degrees, k=config.k, chunk=config.chunk,
         window_entries=config.stream_window)
+    aligned_plan = build_streamed_fold_plan(
+        degrees, k=config.k, chunk=config.chunk,
+        window_entries=config.stream_window,
+        indices=np.asarray(graph.indices),
+        weights=np.asarray(graph.weights), aligned=True)
+    gather_slots = streamed_gather_slots(stream_plan)
+    gather_slots_aligned = streamed_gather_slots(aligned_plan)
     pallas = get_engine("pallas")
     fused = get_engine("pallas_fused")
     stream = get_engine("pallas_stream")
@@ -192,6 +231,10 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
         "stream_window_entries": max(
             (r.window_entries for r in stream_plan.rounds), default=0),
         "stream_window_slots": streamed_window_slots(stream_plan),
+        "stream_gather_slots": gather_slots,
+        "stream_gather_slots_aligned": gather_slots_aligned,
+        "stream_gather_bytes_saved_per_iter":
+            8 * (gather_slots - gather_slots_aligned),
         "stream_peak_resident_bytes":
             streamed_peak_window_bytes(stream_plan),
         "auto_engine": resolve_auto(int(degrees.sum()),

@@ -57,6 +57,12 @@ def main() -> int:
                     help="also time frontier-gated runs where supported: "
                          "dense gated plus the sparse-compacted fold path "
                          "with skipped-row stats")
+    ap.add_argument("--layout", default=None,
+                    help="CSR entry layouts to time on the stream-running "
+                         "backends where supported: 'all' or a comma list "
+                         "of unaligned,aligned ('aligned' adds "
+                         "{backend}+aligned rows with the window-aligned "
+                         "layout)")
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
@@ -78,6 +84,8 @@ def main() -> int:
                 kwargs["sketches"] = args.sketch
             if args.frontier and "frontier" in params:
                 kwargs["frontier"] = True
+            if args.layout and "layouts" in params:
+                kwargs["layouts"] = args.layout
             rows = mod.run(args.scale, **kwargs)
         except Exception as e:  # noqa: BLE001 — report and continue
             import traceback

@@ -85,7 +85,11 @@ def _fused_plan_contract(plan):
 def _stream_plan_contract(plan):
     """StreamedFoldPlan: window gathers stay inside the source array and
     every row's full-chunk slice stays inside its window (rule R2's
-    slice-safety invariant, checked numerically)."""
+    slice-safety invariant, checked numerically). Aligned plans (round-0
+    entries pre-materialized window-aligned) additionally keep every
+    aligned slot's vertex inside [0, n_nodes] — n_nodes is the pad
+    sentinel the driver's extended label gather absorbs — with
+    non-negative finite pad-neutral weights."""
     chunk = plan.chunk
 
     def contract():
@@ -98,6 +102,18 @@ def _stream_plan_contract(plan):
                 jnp.all((rnd.row_count == 0)
                         | (rnd.row_start + chunk <= rnd.window_entries)),
                 "row's full-chunk slice overruns its window (OOB)")
+        if plan.aligned_entry_vertex is not None:
+            aev = plan.aligned_entry_vertex
+            checkify.check(
+                jnp.all((aev >= 0) & (aev <= plan.n_nodes)),
+                "aligned entry vertex outside [0, n_nodes] (OOB for the "
+                "driver's sentinel-extended label gather)")
+            aew = plan.aligned_entry_weights
+            checkify.check(jnp.all(jnp.isfinite(aew) & (aew >= 0)),
+                           "aligned entry weight NaN/inf/negative")
+            checkify.check(
+                jnp.all(jnp.where(aev == plan.n_nodes, aew == 0.0, True)),
+                "aligned pad slot carries a non-zero weight (would vote)")
     return contract
 
 

@@ -86,6 +86,15 @@ class DistLPAWorkspace:
     # the gated step segment-maxes neighbor changed flags over it to mark
     # next iteration's per-shard frontier (dist_lpa_step(frontier_gate=))
     entry_vertex: jnp.ndarray | None = None
+    # window-aligned round-0 entries (build_dist_workspace(aligned=True)):
+    # label-table position / edge weight per round-0 window slot, the
+    # shard-local analogue of StreamedFoldPlan.aligned_entry_vertex — the
+    # streamed shard mover gathers labels straight into window order and
+    # skips the per-iteration windowed re-layout gather on round 0. Built
+    # AFTER the halo remap, so the positions index whichever label table
+    # (padded-global or local+halo) the exchange mode produces.
+    stream_aligned_pos: jnp.ndarray | None = None  # [P, n_win_0 * W] int32 (-1 pads)
+    stream_aligned_w: jnp.ndarray | None = None    # [P, n_win_0 * W] float32 (0.0 pads)
 
     def tree_flatten(self):
         children = (self.nbr_pos, self.weights, self.round_gathers,
@@ -94,7 +103,8 @@ class DistLPAWorkspace:
                     self.fused_dmax, self.stream_gathers, self.stream_starts,
                     self.stream_counts, self.stream_dmax,
                     self.stream_final_rv, self.row_vertex0, self.fused_rv0,
-                    self.stream_rv0, self.entry_vertex)
+                    self.stream_rv0, self.entry_vertex,
+                    self.stream_aligned_pos, self.stream_aligned_w)
         return children, (self.n_nodes, self.v_pad, self.k, self.chunk,
                           self.h_pad, self.hub_pad, self.fused_entries)
 
@@ -108,7 +118,9 @@ class DistLPAWorkspace:
                    stream_counts=children[12], stream_dmax=children[13],
                    stream_final_rv=children[14], row_vertex0=children[15],
                    fused_rv0=children[16], stream_rv0=children[17],
-                   entry_vertex=children[18])
+                   entry_vertex=children[18],
+                   stream_aligned_pos=children[19],
+                   stream_aligned_w=children[20])
 
     @property
     def n_shards(self) -> int:
@@ -127,7 +139,8 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
                          order: np.ndarray | None = None,
                          halo: bool = False, fused: bool = False,
                          tile_r: int = 128, stream: bool = False,
-                         window_entries: int = 8192) -> DistLPAWorkspace:
+                         window_entries: int = 8192,
+                         aligned: bool = False) -> DistLPAWorkspace:
     """Host-side construction of the stacked distributed workspace.
 
     ``order`` optionally renumbers vertices first (e.g. the LPA-community
@@ -139,7 +152,16 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
     ``engine="pallas_stream"`` — each shard folds through entry windows of
     at most ``window_entries`` entries (padded uniformly across shards, so
     the stacked [P, ...] pytree keeps static shapes).
+    ``aligned=True`` (requires ``stream=True``) additionally stores each
+    shard's round-0 entry metadata window-aligned
+    (``stream_aligned_pos``/``stream_aligned_w``): the streamed shard mover
+    then gathers labels straight into window order and skips the
+    per-iteration round-0 re-layout gather, bit-identically — the
+    distributed analogue of ``LPAConfig(aligned_layout=True)``.
     """
+    if aligned and not stream:
+        raise ValueError("aligned=True requires stream=True (the aligned "
+                         "layout is a property of the windowed plan)")
     offsets = np.asarray(graph.offsets, dtype=np.int64)
     indices = np.asarray(graph.indices, dtype=np.int64)
     weights = np.asarray(graph.weights, dtype=np.float32)
@@ -388,6 +410,25 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
                 pos[sel] = halo_base + q * h_pad + rank
             nbr_pos[p, :e1 - e0] = pos
 
+    stream_apos = stream_aw = None
+    if stream and aligned:
+        # Pre-gather each shard's round-0 (label position, weight) pairs
+        # into the windowed layout. Runs after the halo remap above so the
+        # stored positions index the exchange mode's actual label table.
+        n_win0, w_max0 = stream_gathers[0].shape[1], stream_gathers[0].shape[2]
+        ap = np.full((n_shards, n_win0, w_max0), PAD, dtype=np.int32)
+        aw = np.zeros((n_shards, n_win0, w_max0), dtype=np.float32)
+        for p, (rounds_np, _) in enumerate(per_shard):
+            rr = rounds_np[0]
+            nw, w_s = rr["row_start"].shape[0], rr["window_entries"]
+            g0 = rr["entry_gather"].reshape(nw, w_s)
+            valid = g0 >= 0
+            safe = np.maximum(g0, 0)
+            ap[p, :nw, :w_s] = np.where(valid, nbr_pos[p][safe], PAD)
+            aw[p, :nw, :w_s] = np.where(valid, wgts[p][safe], 0.0)
+        stream_apos = jnp.asarray(ap.reshape(n_shards, -1))
+        stream_aw = jnp.asarray(aw.reshape(n_shards, -1))
+
     return DistLPAWorkspace(
         nbr_pos=jnp.asarray(nbr_pos), weights=jnp.asarray(wgts),
         round_gathers=tuple(round_gathers),
@@ -404,7 +445,8 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         stream_counts=stream_counts, stream_dmax=stream_dmax,
         stream_final_rv=stream_final_rv,
         row_vertex0=jnp.asarray(row_vertex0), fused_rv0=fused_rv0,
-        stream_rv0=stream_rv0, entry_vertex=jnp.asarray(entry_vertex))
+        stream_rv0=stream_rv0, entry_vertex=jnp.asarray(entry_vertex),
+        stream_aligned_pos=stream_apos, stream_aligned_w=stream_aw)
 
 
 def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
@@ -412,7 +454,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 send_idx=None, hub_idx=None, fused_meta=None,
                 fused_entries=(), chunk=0, stream_meta=None,
                 stream_frv=None, method="mg", bm_rv0=None, frontier=None,
-                entry_vertex=None):
+                entry_vertex=None, stream_apos=None, stream_aw=None):
     """Per-shard body of one distributed LPA iteration (runs inside shard_map).
 
     Shapes here are the *local* block shapes (leading P axis stripped).
@@ -435,6 +477,13 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     exchanging this iteration's changed flags through the SAME halo/gather
     machinery as the labels and segment-maxing them over each shard's own
     edge slots. One extra collective per gated iteration.
+
+    ``stream_apos``/``stream_aw`` ([1, n_win_0 * W] window-aligned label
+    positions / weights) switch the streamed round-0 fold to the aligned
+    layout: labels gather straight into window order and the round-0
+    ``StreamedRound`` carries ``aligned=True``, so the kernel skips the
+    windowed re-layout gather (later rounds are unchanged — they consume
+    the previous round's padded window-slot outputs).
     """
     nbr_pos = nbr_pos[0]          # [M_pad]
     edge_w = edge_w[0]
@@ -464,6 +513,14 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     entry_labels = jnp.where(nbr_pos >= 0, label_table[safe], -1)
     entry_weights = jnp.where(nbr_pos >= 0, edge_w, 0.0)
 
+    def aligned_window_labels():
+        """Aligned round-0 entries: gather the label table straight into
+        window-slot order (pad slots -> label -1, weight 0.0 — exactly what
+        the unaligned path's re-layout gather would produce)."""
+        sap = stream_apos[0]
+        wl = jnp.where(sap >= 0, label_table[jnp.maximum(sap, 0)], -1)
+        return wl, stream_aw[0]
+
     def finish(want):
         fr = None if frontier is None else frontier[0]
         new_labels, changed, delta = _move_epilogue(want, labels, pick_less,
@@ -492,11 +549,15 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
             from repro.kernels.mg_sketch.fused import _interpret_default
             from repro.kernels.mg_sketch.streaming import bm_fold_round_stream
             g, rs, rc, dm = stream_meta[0]
+            el0, ew0 = entry_labels, entry_weights
+            if stream_apos is not None:  # window-aligned round 0
+                el0, ew0 = aligned_window_labels()
             rnd = StreamedRound(entry_gather=g[0].reshape(-1),
                                 row_start=rs[0], row_count=rc[0],
                                 step_dmax=dm[0], n_entries_in=0,
-                                window_entries=g.shape[-1])
-            ck, wk = bm_fold_round_stream(rnd, entry_labels, entry_weights,
+                                window_entries=g.shape[-1],
+                                aligned=stream_apos is not None)
+            ck, wk = bm_fold_round_stream(rnd, el0, ew0,
                                           init, chunk=chunk,
                                           interpret=_interpret_default())
         elif fused_meta is not None:
@@ -526,12 +587,17 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
         from repro.kernels.mg_sketch.fused import _interpret_default
         from repro.kernels.mg_sketch.streaming import stream_fold_round
         interpret = _interpret_default()
-        for g, rs, rc, dm in stream_meta:
+        for r, (g, rs, rc, dm) in enumerate(stream_meta):
+            el, ew = entry_labels, entry_weights
+            is_aligned = r == 0 and stream_apos is not None
+            if is_aligned:  # window-aligned round 0: skip the re-layout
+                el, ew = aligned_window_labels()
             rnd = StreamedRound(entry_gather=g[0].reshape(-1),
                                 row_start=rs[0], row_count=rc[0],
                                 step_dmax=dm[0], n_entries_in=0,
-                                window_entries=g.shape[-1])
-            s_k, s_v = stream_fold_round(rnd, entry_labels, entry_weights,
+                                window_entries=g.shape[-1],
+                                aligned=is_aligned)
+            s_k, s_v = stream_fold_round(rnd, el, ew,
                                          k=k, chunk=chunk,
                                          interpret=interpret)
             entry_labels, entry_weights = s_k.reshape(-1), s_v.reshape(-1)
@@ -665,6 +731,10 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
             in_specs += [tuple([(spec, spec, spec, spec)] * n_rounds), spec]
             args += [meta, ws.stream_final_rv]
             extra_names += ["stream_meta", "stream_frv"]
+            if ws.stream_aligned_pos is not None:
+                in_specs += [spec, spec]
+                args += [ws.stream_aligned_pos, ws.stream_aligned_w]
+                extra_names += ["stream_apos", "stream_aw"]
         if method == "bm":
             rv0 = (ws.stream_rv0 if stream
                    else ws.fused_rv0 if fused else ws.row_vertex0)

@@ -72,6 +72,13 @@ class LPAConfig:
     # pallas_stream: max entries per streamed window (bytes resident per
     # step ~= 2 * window * 8); also the "auto" policy's stream granularity
     stream_window: int = 8192
+    # pallas_stream: materialize the round-0 CSR entries window-aligned at
+    # plan build time (DESIGN.md §13). The driver then gathers neighbor
+    # labels straight into window slots and the engine skips its
+    # per-iteration O(|E|) windowed re-layout gather — bit-identical to the
+    # unaligned layout. Applies whenever the (possibly auto-resolved)
+    # backend streams; other backends ignore it.
+    aligned_layout: bool = False
     # "auto" picks pallas_fused while 8 * |E| <= this budget, else
     # pallas_stream (None = fold_engine.DEFAULT_VMEM_BUDGET_BYTES)
     vmem_budget_bytes: Optional[int] = None
@@ -138,9 +145,15 @@ def build_workspace(graph: CSRGraph, config: LPAConfig) -> LPAWorkspace:
         fused_plan = build_fused_fold_plan(degrees, k=config.k,
                                            chunk=config.chunk)
     elif backend == "pallas_stream":
+        # aligned_layout pre-materializes round 0's windowed entries from
+        # the CSR — "auto" runs through here too, so budget-forced
+        # streaming prefers the aligned layout whenever the config asks
         stream_plan = build_streamed_fold_plan(
             degrees, k=config.k, chunk=config.chunk,
-            window_entries=config.stream_window)
+            window_entries=config.stream_window,
+            indices=np.asarray(graph.indices),
+            weights=np.asarray(graph.weights),
+            aligned=config.aligned_layout)
     return LPAWorkspace(graph=graph, plan=plan, edge_src=graph.sources(),
                         fused_plan=fused_plan, stream_plan=stream_plan)
 
@@ -168,7 +181,6 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     if sparse and frontier is None:
         raise ValueError("sparse=True needs a frontier (the compacted fold "
                          "is defined by the active vertex set)")
-    nbr_labels = labels[graph.indices]
     # "auto" resolves from the round-0 entry volume (a static plan field),
     # deterministically matching the plan build_workspace constructed.
     # checked=False: lpa_move is traced/jitted and the checkify contract
@@ -179,9 +191,21 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
                         checked=False)
 
     aux = ws.stream_plan if engine.uses_stream_plan else ws.fused_plan
+    if engine.uses_stream_plan and aux is not None and aux.aligned:
+        # window-aligned layout (DESIGN.md §13): ONE O(window slots) gather
+        # straight into window-slot order replaces labels[graph.indices]
+        # AND the engine's per-iteration windowed re-layout gather; the
+        # appended -1 slot absorbs the plan's n_nodes pad sentinel.
+        labels_ext = jnp.concatenate([labels,
+                                      jnp.full((1,), -1, labels.dtype)])
+        nbr_labels = labels_ext[aux.aligned_entry_vertex]
+        nbr_weights = aux.aligned_entry_weights
+    else:
+        nbr_labels = labels[graph.indices]
+        nbr_weights = graph.weights
     if config.method == "exact":
-        want = exact_choose(ws.edge_src, nbr_labels, graph.weights,
-                            graph.n_nodes, labels, seed)
+        want = exact_choose(ws.edge_src, labels[graph.indices],
+                            graph.weights, graph.n_nodes, labels, seed)
     elif config.method == "mg":
         if config.rescan:
             # double-scan ablation (paper Fig. 5): the second, exact
@@ -189,27 +213,27 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
             # dispatch on the Pallas engines, never a per-bucket fallback.
             if sparse:
                 want = engine.mg_rescan_sparse(plan, aux, nbr_labels,
-                                               graph.weights, labels, seed,
+                                               nbr_weights, labels, seed,
                                                frontier, cap_rows)
             else:
-                want = engine.mg_rescan(plan, aux, nbr_labels, graph.weights,
+                want = engine.mg_rescan(plan, aux, nbr_labels, nbr_weights,
                                         labels, seed)
         elif sparse:
             want = engine.mg_select_sparse(plan, aux, nbr_labels,
-                                           graph.weights, labels, seed,
+                                           nbr_weights, labels, seed,
                                            frontier, cap_rows)
         else:
             want = engine.mg_select(plan, aux, nbr_labels,
-                                    graph.weights, labels, seed)
+                                    nbr_weights, labels, seed)
     elif config.method == "bm":
         # incumbency is built into the fold's initial carry (Alg. 3 l. 13)
         if sparse:
             best, _ = engine.bm_fold_plan_sparse(plan, aux, nbr_labels,
-                                                 graph.weights, labels,
+                                                 nbr_weights, labels,
                                                  frontier, cap_rows)
         else:
             best, _ = engine.bm_fold_plan(plan, aux, nbr_labels,
-                                          graph.weights, labels)
+                                          nbr_weights, labels)
         want = jnp.where(best >= 0, best, labels)
     else:
         raise ValueError(f"unknown method {config.method!r}")

@@ -36,8 +36,8 @@ class CSRGraph:
     offsets: jnp.ndarray  # [N+1] int32 — row offsets
     indices: jnp.ndarray  # [M] int32 — neighbor ids (both directions stored)
     weights: jnp.ndarray  # [M] float32 — edge weights (w_ij == w_ji)
-    n_nodes: int
-    n_edges: int  # directed edge slots == len(indices)
+    n_nodes: int  # int — vertex count N
+    n_edges: int  # int — directed edge slots == len(indices)
 
     def tree_flatten(self):
         return (self.offsets, self.indices, self.weights), (self.n_nodes, self.n_edges)
@@ -105,11 +105,11 @@ def build_csr(edges: np.ndarray, n_nodes: int, weights: np.ndarray | None = None
 class FoldBucket:
     """One statically-shaped padded tile group inside a fold round."""
 
-    width: int           # D — entries per row (power of two, <= chunk)
+    width: int           # int — D, entries per row (power of two, <= chunk)
     gather: jnp.ndarray  # [R, D] int32 — indices into the round's entry arrays (PAD = -1)
     out_pos: jnp.ndarray  # [R] int32 — canonical (vertex, chunk-rank) row position
     vertex: jnp.ndarray  # [R] int32 — owning vertex of each row
-    n_rows: int
+    n_rows: int          # int — R, rows in this bucket's tile
 
     def tree_flatten(self):
         return (self.gather, self.out_pos, self.vertex), (self.width, self.n_rows)
@@ -122,9 +122,9 @@ class FoldBucket:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class FoldRound:
-    buckets: Tuple[FoldBucket, ...]
-    n_entries_in: int    # length of the entry arrays this round consumes
-    n_rows_total: int    # number of partial sketches produced (canonical rows)
+    buckets: Tuple[FoldBucket, ...]  # tuple[FoldBucket] — one padded tile per width
+    n_entries_in: int    # int — length of the entry arrays this round consumes
+    n_rows_total: int    # int — partial sketches produced (canonical rows)
 
     def tree_flatten(self):
         return (self.buckets,), (self.n_entries_in, self.n_rows_total)
@@ -146,13 +146,13 @@ class FoldPlan:
     pass reduce over (``max_rows0`` = max chunk rows any vertex owns).
     """
 
-    rounds: Tuple[FoldRound, ...]
-    row_to_vertex: jnp.ndarray  # [final n_rows] — owning vertex of each final sketch
-    n_nodes: int
-    k: int
-    chunk: int
-    row_rank0: Optional[jnp.ndarray] = None  # [round-0 n_rows] chunk rank
-    max_rows0: int = 1
+    rounds: Tuple[FoldRound, ...]  # tuple[FoldRound] — one bucketed fold round each
+    row_to_vertex: jnp.ndarray  # [final n_rows] int32 — owning vertex of each final sketch
+    n_nodes: int  # int — vertex count N of the planned graph
+    k: int        # int — sketch slots per row
+    chunk: int    # int — entries per virtual-vertex row (paper D_H)
+    row_rank0: Optional[jnp.ndarray] = None  # [round-0 n_rows] int32 — chunk rank
+    max_rows0: int = 1  # int — max chunk rows any vertex owns on round 0
 
     def tree_flatten(self):
         return ((self.rounds, self.row_to_vertex, self.row_rank0),
@@ -292,7 +292,7 @@ class FusedRound:
     row_start: jnp.ndarray  # [n_steps, tile_r] int32 — offset into the flat entries (0 on pad rows)
     row_count: jnp.ndarray  # [n_steps, tile_r] int32 — valid entries of the row (0 on pad rows)
     step_dmax: jnp.ndarray  # [n_steps, 1] int32 — max row_count within the step
-    n_entries_in: int       # flat entry-array length this round consumes
+    n_entries_in: int       # int — flat entry-array length this round consumes
     # [n_steps * tile_r] int32 — owning vertex of each padded row (-1 on pad
     # rows); what the sparse frontier path compacts on (None: pre-sparse
     # synthetic rounds, e.g. the distributed per-shard movers)
@@ -328,14 +328,14 @@ class FusedFoldPlan:
     single-round plans ``row_to_vertex0`` equals ``row_to_vertex``.
     """
 
-    rounds: Tuple[FusedRound, ...]
+    rounds: Tuple[FusedRound, ...]  # tuple[FusedRound] — one fused fold round each
     row_to_vertex: jnp.ndarray  # [last n_steps * tile_r] int32 — owning vertex (-1 pad)
-    n_nodes: int
-    k: int
-    chunk: int
-    row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_steps * tile_r]
-    row_rank0: Optional[jnp.ndarray] = None       # [round-0 n_steps * tile_r]
-    max_rows0: int = 1  # max chunk rows any vertex owns on round 0
+    n_nodes: int  # int — vertex count N of the planned graph
+    k: int        # int — sketch slots per row
+    chunk: int    # int — entries per virtual-vertex row (paper D_H)
+    row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_steps * tile_r] int32
+    row_rank0: Optional[jnp.ndarray] = None       # [round-0 n_steps * tile_r] int32
+    max_rows0: int = 1  # int — max chunk rows any vertex owns on round 0
 
     def tree_flatten(self):
         return ((self.rounds, self.row_to_vertex, self.row_to_vertex0,
@@ -457,22 +457,28 @@ class StreamedRound:
     row_start: jnp.ndarray     # [n_windows, R] int32 — window-RELATIVE entry offset (0 on pad rows)
     row_count: jnp.ndarray     # [n_windows, R] int32 — valid entries of the row (0 on pad rows)
     step_dmax: jnp.ndarray     # [n_windows, 1] int32 — max row_count within the window
-    n_entries_in: int          # flat source entry-array length this round consumes
-    window_entries: int        # W — entry slots per window (slice-safe: rel+chunk <= W)
+    n_entries_in: int          # int — flat source entry-array length this round consumes
+    window_entries: int        # int — W, entry slots per window (slice-safe: rel+chunk <= W)
     # [n_windows * R] int32 — owning vertex of each row slot (-1 on pad
     # slots); what the sparse frontier path compacts windows on (None:
     # pre-sparse synthetic rounds, e.g. the distributed per-shard movers)
     row_vertex: Optional[jnp.ndarray] = None
+    # bool (static) — True when the round's source entries are ALREADY in
+    # the windowed layout (build_streamed_fold_plan(aligned=True) round 0):
+    # entry_gather degenerates to the identity permutation over real slots
+    # (n_entries_in == n_windows * W) and the streaming kernels skip the
+    # windowed re-layout gather entirely (kernels.mg_sketch.streaming)
+    aligned: bool = False
 
     def tree_flatten(self):
         return ((self.entry_gather, self.row_start, self.row_count,
                  self.step_dmax, self.row_vertex),
-                (self.n_entries_in, self.window_entries))
+                (self.n_entries_in, self.window_entries, self.aligned))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], children[1], children[2], children[3],
-                   aux[0], aux[1], row_vertex=children[4])
+                   aux[0], aux[1], row_vertex=children[4], aligned=aux[2])
 
     @property
     def n_windows(self) -> int:
@@ -487,33 +493,57 @@ class StreamedRound:
 @dataclasses.dataclass(frozen=True)
 class StreamedFoldPlan:
     """Static windowed reduction plan: one dispatch per round, one window
-    of at most ``window_cap`` entries resident per grid step."""
+    of at most ``window_cap`` entries resident per grid step.
 
-    rounds: Tuple[StreamedRound, ...]
+    With ``aligned_entry_vertex``/``aligned_entry_weights`` set (built by
+    ``build_streamed_fold_plan(aligned=True)``), round 0's entry arrays are
+    pre-materialized in the windowed layout: the driver gathers neighbor
+    labels straight into window slots (one O(slots) gather from the label
+    vector) and the round-0 kernel consumes them without the per-iteration
+    windowed re-layout gather — the O(|E|) HBM round-trip the unaligned
+    path pays every iteration (DESIGN.md §13).
+    """
+
+    rounds: Tuple[StreamedRound, ...]  # tuple[StreamedRound] — one windowed fold round each
     row_to_vertex: jnp.ndarray  # [last n_windows * tile_r] int32 — owning vertex (-1 pad)
-    n_nodes: int
-    k: int         # sketch slots per row
-    chunk: int     # entries per virtual-vertex row (paper D_H)
+    n_nodes: int   # int — vertex count N of the planned graph
+    k: int         # int — sketch slots per row
+    chunk: int     # int — entries per virtual-vertex row (paper D_H)
     # round-0 slot coordinates (BM fold / rescan second pass — see
     # FusedFoldPlan.row_to_vertex0):
-    row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_windows * tile_r]
-    row_rank0: Optional[jnp.ndarray] = None       # [round-0 n_windows * tile_r]
-    max_rows0: int = 1
+    row_to_vertex0: Optional[jnp.ndarray] = None  # [round-0 n_windows * tile_r] int32
+    row_rank0: Optional[jnp.ndarray] = None       # [round-0 n_windows * tile_r] int32
+    max_rows0: int = 1  # int — max chunk rows any vertex owns on round 0
+    # [round-0 n_windows * W] int32 — neighbor VERTEX id per round-0 window
+    # slot, sentinel n_nodes on pad slots (None: unaligned layout). The
+    # driver gathers labels_ext[aligned_entry_vertex] where labels_ext
+    # appends one -1 slot, yielding windowed entry labels directly.
+    aligned_entry_vertex: Optional[jnp.ndarray] = None
+    # [round-0 n_windows * W] float32 — edge weight per round-0 window slot
+    # (0.0 on pad slots; the fold's no-op weight). None: unaligned layout.
+    aligned_entry_weights: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
         return ((self.rounds, self.row_to_vertex, self.row_to_vertex0,
-                 self.row_rank0),
+                 self.row_rank0, self.aligned_entry_vertex,
+                 self.aligned_entry_weights),
                 (self.n_nodes, self.k, self.chunk, self.max_rows0))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(children[0], children[1], *aux[:3],
                    row_to_vertex0=children[2], row_rank0=children[3],
-                   max_rows0=aux[3])
+                   max_rows0=aux[3], aligned_entry_vertex=children[4],
+                   aligned_entry_weights=children[5])
 
     @property
     def n_rounds(self) -> int:
         return len(self.rounds)
+
+    @property
+    def aligned(self) -> bool:
+        """True when round 0 carries the pre-materialized windowed layout."""
+        return self.aligned_entry_vertex is not None
 
 
 def _pack_stream_windows(row_count: np.ndarray, chunk: int, tile_r: int,
@@ -673,7 +703,10 @@ def build_streamed_rounds(counts: np.ndarray, starts: np.ndarray,
 
 def build_streamed_fold_plan(degrees: np.ndarray, k: int = 8,
                              chunk: int = 128, tile_r: int = 128,
-                             window_entries: int = 8192) -> StreamedFoldPlan:
+                             window_entries: int = 8192, *,
+                             indices: np.ndarray | None = None,
+                             weights: np.ndarray | None = None,
+                             aligned: bool = False) -> StreamedFoldPlan:
     """Construct the HBM-streaming windowed plan from the degree sequence.
 
     ``window_entries`` caps the entry slots per window (units: entries; the
@@ -682,31 +715,68 @@ def build_streamed_fold_plan(degrees: np.ndarray, k: int = 8,
     sequences as ``build_fold_plan``/``build_fused_fold_plan``, so
     per-vertex results are bit-identical; only the windowed layout and the
     per-window grid differ.
+
+    ``aligned=True`` (requires the CSR ``indices``/``weights``) stores the
+    round-0 entry arrays window-aligned at build time: the plan carries
+    ``aligned_entry_vertex``/``aligned_entry_weights`` (windowed neighbor
+    vertices + weights), round 0's ``entry_gather`` becomes the identity
+    permutation over window slots (real slots -> themselves, pads -> -1)
+    and its ``n_entries_in`` the window-slot count. Parity with the
+    unaligned plan is structural: the arrays hold exactly what the
+    unaligned path's per-iteration re-layout gather would produce, only
+    materialized once. Later rounds consume prior rounds' padded outputs
+    through their position tables and are unchanged.
     """
     degrees = np.asarray(degrees, dtype=np.int64)
     n = len(degrees)
     if chunk <= k:
         raise ValueError(f"chunk ({chunk}) must exceed sketch slots k ({k})")
+    if aligned and (indices is None or weights is None):
+        raise ValueError("aligned=True needs the CSR indices and weights to "
+                         "pre-materialize the windowed round-0 entries")
     offsets = np.zeros(n + 1, dtype=np.int64)
     np.cumsum(degrees, out=offsets[1:])
     rounds_np, rtv = build_streamed_rounds(
         degrees, offsets[:-1], int(degrees.sum()), k=k, chunk=chunk,
         tile_r=tile_r, window_cap=window_entries)
-    rounds = tuple(
-        StreamedRound(entry_gather=jnp.asarray(r["entry_gather"]),
-                      row_start=jnp.asarray(r["row_start"]),
-                      row_count=jnp.asarray(r["row_count"]),
-                      step_dmax=jnp.asarray(r["step_dmax"]),
-                      n_entries_in=r["n_entries_in"],
-                      window_entries=r["window_entries"],
-                      row_vertex=jnp.asarray(r["row_to_vertex"]))
-        for r in rounds_np)
-    return StreamedFoldPlan(rounds=rounds, row_to_vertex=jnp.asarray(rtv),
+    aev = aew = None
+    rounds = []
+    for ri, r in enumerate(rounds_np):
+        eg, n_in, is_aligned = r["entry_gather"], r["n_entries_in"], False
+        if aligned and ri == 0:
+            idx = np.asarray(indices, dtype=np.int64)
+            wgt = np.asarray(weights, dtype=np.float32)
+            valid = eg >= 0
+            safe = np.maximum(eg, 0)
+            src_v = idx[safe] if idx.size else np.zeros_like(safe)
+            src_w = wgt[safe] if wgt.size else np.zeros(safe.shape, np.float32)
+            # pad slots: sentinel vertex n (the driver's appended -1 label
+            # slot) and weight 0.0 — the fold's no-op entry, exactly what
+            # windowed_entries would have produced at runtime
+            aev = jnp.asarray(np.where(valid, src_v, n).astype(np.int32))
+            aew = jnp.asarray(np.where(valid, src_w, 0.0).astype(np.float32))
+            n_slots = eg.shape[0]
+            eg = np.where(valid, np.arange(n_slots, dtype=np.int64),
+                          -1).astype(np.int32)
+            n_in, is_aligned = n_slots, True
+        rounds.append(
+            StreamedRound(entry_gather=jnp.asarray(eg),
+                          row_start=jnp.asarray(r["row_start"]),
+                          row_count=jnp.asarray(r["row_count"]),
+                          step_dmax=jnp.asarray(r["step_dmax"]),
+                          n_entries_in=int(n_in),
+                          window_entries=r["window_entries"],
+                          row_vertex=jnp.asarray(r["row_to_vertex"]),
+                          aligned=is_aligned))
+    return StreamedFoldPlan(rounds=tuple(rounds),
+                            row_to_vertex=jnp.asarray(rtv),
                             n_nodes=n, k=k, chunk=chunk,
                             row_to_vertex0=jnp.asarray(
                                 rounds_np[0]["row_to_vertex"]),
                             row_rank0=jnp.asarray(rounds_np[0]["row_rank"]),
-                            max_rows0=rounds_np[0]["max_rows"])
+                            max_rows0=rounds_np[0]["max_rows"],
+                            aligned_entry_vertex=aev,
+                            aligned_entry_weights=aew)
 
 
 def streamed_dispatches(plan: StreamedFoldPlan) -> int:
@@ -721,6 +791,18 @@ def streamed_window_slots(plan: StreamedFoldPlan) -> int:
     (units: entries; the windowed re-layout's HBM footprint — pad slots
     included, unlike :func:`streamed_hbm_entries`)."""
     return sum(r.n_windows * r.window_entries for r in plan.rounds)
+
+
+def streamed_gather_slots(plan: StreamedFoldPlan) -> int:
+    """Windowed re-layout gather slots the streamed engine materializes
+    PER ITERATION (units: entries). Aligned rounds are excluded: their
+    windowed entries were materialized once at build time
+    (``build_streamed_fold_plan(aligned=True)``), so the per-iteration
+    re-layout gather — round 0's O(|E|) share of
+    :func:`streamed_window_slots` — drops out. This is the declared gather
+    count kernelcheck R6 ties to the ``aligned`` round flag."""
+    return sum(r.n_windows * r.window_entries for r in plan.rounds
+               if not r.aligned)
 
 
 def streamed_hbm_entries(plan: StreamedFoldPlan) -> int:

@@ -30,11 +30,16 @@ windows** (``repro.graphs.csr.build_streamed_fold_plan``):
 
 Cost vs the fused engine: same dispatch count (``n_rounds`` per MG
 iteration, the last fused with selection) and the same real entries read,
-plus one windowed re-layout gather per round (<= ``streamed_window_slots``
-padded slots through HBM) — the price of bounded VMEM. Validated
-bit-identical to ``repro.core.sketch`` in interpret mode
-(tests/test_stream_engine.py); this container is CPU-only, TPU is the
-lowering target.
+plus the windowed re-layout gathers (<= ``streamed_gather_slots`` padded
+slots through HBM per iteration) — the price of bounded VMEM. With the
+window-aligned CSR layout (``build_streamed_fold_plan(aligned=True)``,
+DESIGN.md §13) round 0 — the O(|E|) share of that cost — is
+pre-materialized at build time: aligned rounds (``StreamedRound.aligned``)
+arrive with their entries already windowed and every round driver below
+skips ``windowed_entries`` for them, so the per-iteration re-layout
+traffic shrinks to the small later-round merges. Validated bit-identical
+to ``repro.core.sketch`` in interpret mode (tests/test_stream_engine.py);
+this container is CPU-only, TPU is the lowering target.
 """
 from __future__ import annotations
 
@@ -74,6 +79,17 @@ def windowed_entries(gather: jnp.ndarray, entry_labels: jnp.ndarray,
     return wl, ww
 
 
+def _aligned_window_entries(entry_labels: jnp.ndarray,
+                            entry_weights: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Aligned-round fast path of :func:`windowed_entries`: the entries are
+    already in the windowed layout (``StreamedRound.aligned`` — pads hold
+    label -1 / weight 0.0 by plan construction), so the re-layout gather
+    degenerates to dtype normalization. This is the no-op slice that saves
+    the O(|E|) per-iteration HBM round-trip (DESIGN.md §13)."""
+    return entry_labels.astype(jnp.int32), entry_weights.astype(jnp.float32)
+
+
 def _stream_fold_kernel(dmax_ref, start_ref, count_ref, wlab_ref, wwgt_ref,
                         out_k_ref, out_v_ref, *, k: int, chunk: int):
     """One window step: gather the row tile from the resident window and
@@ -103,14 +119,20 @@ def stream_fold_round(rnd: StreamedRound, entry_labels: jnp.ndarray,
     per step.
 
     ``entry_labels``/``entry_weights`` are the round's flat source arrays
-    (round 0: CSR-order neighbor labels/edge weights; later rounds: the
-    previous round's flattened padded [n_windows * tile_r * k] sketches).
+    (round 0: CSR-order neighbor labels/edge weights — or, on aligned
+    rounds, the pre-windowed [n_windows * W] arrays the driver gathered
+    from the plan's aligned layout; later rounds: the previous round's
+    flattened padded [n_windows * tile_r * k] sketches).
     Returns padded ([n_windows * tile_r, k] int32, [..., k] float32)
     sketches in window-slot order (pad rows fold to empty sketches).
     """
     n_windows, tile_r = rnd.row_start.shape
     w = rnd.window_entries
-    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    if rnd.aligned:  # entries pre-materialized window-aligned at build time
+        wl, ww = _aligned_window_entries(entry_labels, entry_weights)
+    else:
+        wl, ww = windowed_entries(rnd.entry_gather, entry_labels,
+                                  entry_weights)
     rows = n_windows * tile_r
     return pl.pallas_call(
         functools.partial(_stream_fold_kernel, k=k, chunk=chunk),
@@ -146,7 +168,11 @@ def stream_select_round(rnd: StreamedRound, entry_labels: jnp.ndarray,
     """
     n_windows, tile_r = rnd.row_start.shape
     w = rnd.window_entries
-    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    if rnd.aligned:  # entries pre-materialized window-aligned at build time
+        wl, ww = _aligned_window_entries(entry_labels, entry_weights)
+    else:
+        wl, ww = windowed_entries(rnd.entry_gather, entry_labels,
+                                  entry_weights)
     out = pl.pallas_call(
         functools.partial(_stream_select_kernel, k=k, chunk=chunk),
         grid=(n_windows,),
@@ -174,9 +200,11 @@ def run_mg_plan_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All fold rounds, one streamed dispatch each.
 
-    ``entry_labels``/``entry_weights`` are the round-0 arrays in CSR order
-    (the same inputs the jnp/pallas/fused engines take). Returns the
-    final-round padded sketches ([last n_windows * tile_r, k] labels,
+    ``entry_labels``/``entry_weights`` are the round-0 arrays — CSR order
+    (the same inputs the jnp/pallas/fused engines take), or window-slot
+    order when the plan is aligned (``plan.aligned``: the driver gathers
+    them from ``aligned_entry_vertex``/``aligned_entry_weights``). Returns
+    the final-round padded sketches ([last n_windows * tile_r, k] labels,
     weights) in window-slot order — map to vertices via
     ``plan.row_to_vertex``.
     """
@@ -266,7 +294,11 @@ def bm_fold_round_stream(rnd: StreamedRound, entry_labels: jnp.ndarray,
     """
     n_windows, tile_r = rnd.row_start.shape
     w = rnd.window_entries
-    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    if rnd.aligned:  # entries pre-materialized window-aligned at build time
+        wl, ww = _aligned_window_entries(entry_labels, entry_weights)
+    else:
+        wl, ww = windowed_entries(rnd.entry_gather, entry_labels,
+                                  entry_weights)
     ck, wk = pl.pallas_call(
         functools.partial(_stream_bm_kernel, chunk=chunk),
         grid=(n_windows,),
@@ -320,7 +352,11 @@ def rescan_round_stream(rnd: StreamedRound, entry_labels: jnp.ndarray,
     """
     n_windows, tile_r = rnd.row_start.shape
     w = rnd.window_entries
-    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    if rnd.aligned:  # entries pre-materialized window-aligned at build time
+        wl, ww = _aligned_window_entries(entry_labels, entry_weights)
+    else:
+        wl, ww = windowed_entries(rnd.entry_gather, entry_labels,
+                                  entry_weights)
     out = pl.pallas_call(
         functools.partial(_stream_rescan_kernel, k=k, chunk=chunk),
         grid=(n_windows,),
@@ -384,6 +420,13 @@ def _sparse_stream_round(rnd: StreamedRound, frontier: jnp.ndarray,
     compacted window indices (sentinel = dense window count), and the
     [cap_w * tile_r] owning vertex per compacted row slot (-1 on sentinel
     windows' slots).
+
+    Aligned rounds compose transparently: their ``entry_gather`` is the
+    identity permutation over window slots, so the compacted sub-round's
+    gather (``eg_ext[widx]``) holds exactly the active windows' slot
+    indices into the aligned source arrays. The sub-round deliberately
+    keeps ``aligned=False`` — it must re-gather, because its windows are
+    a compacted subset of the aligned layout, not a prefix of it.
     """
     n_win, tile_r = rnd.row_start.shape
     w = rnd.window_entries

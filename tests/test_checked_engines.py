@@ -80,6 +80,41 @@ def test_oob_fused_row_window_is_caught():
         eng.mg_candidates(plan, bad, el, ew)
 
 
+def test_aligned_stream_plan_contract():
+    """Aligned plans (build_streamed_fold_plan(aligned=True)) carry extra
+    invariants: pad slots hold the n_nodes sentinel with weight 0, and
+    every slot's vertex stays gatherable. Clean plans pass; a voting pad
+    or an OOB vertex throws."""
+    n = 5
+    rng = np.random.default_rng(1)
+    deg = rng.integers(1, 12, size=n).astype(np.int64)
+    n_entries = int(deg.sum())
+    idx = rng.integers(0, n, size=n_entries).astype(np.int64)
+    wgt = rng.random(n_entries).astype(np.float32)
+    plan = build_fold_plan(deg, k=K, chunk=CHUNK)
+    aplan = build_streamed_fold_plan(deg, k=K, chunk=CHUNK, tile_r=TILE_R,
+                                     window_entries=WINDOW, indices=idx,
+                                     weights=wgt, aligned=True)
+    eng = get_engine("pallas_stream", checked=True)
+    labels = jnp.arange(n, dtype=jnp.int32)
+    labels_ext = jnp.concatenate([labels, jnp.full((1,), -1, jnp.int32)])
+    wl = labels_ext[aplan.aligned_entry_vertex]
+    ww = aplan.aligned_entry_weights
+    eng.mg_candidates(plan, aplan, wl, ww)  # clean aligned plan passes
+    pads = np.nonzero(np.asarray(aplan.aligned_entry_vertex) == n)[0]
+    assert pads.size  # the fixture really exercises pad slots
+    voting_pad = dataclasses.replace(
+        aplan, aligned_entry_weights=ww.at[int(pads[0])].set(1.0))
+    with pytest.raises(checkify.JaxRuntimeError, match="non-zero weight"):
+        eng.mg_candidates(plan, voting_pad, wl, ww)
+    oob_vertex = dataclasses.replace(
+        aplan,
+        aligned_entry_vertex=aplan.aligned_entry_vertex.at[0].set(n + 7))
+    with pytest.raises(checkify.JaxRuntimeError, match="aligned entry "
+                                                       "vertex"):
+        eng.mg_candidates(plan, oob_vertex, wl, ww)
+
+
 def test_negative_input_label_is_caught():
     plan, aux, el, ew, labels = _setup()
     eng = get_engine("jnp", checked=True)

@@ -197,6 +197,50 @@ def test_dist_stream_engine_matches_reference():
 
 
 @pytest.mark.slow  # spawns a multi-device subprocess
+def test_dist_aligned_layout_matches_unaligned():
+    """Window-aligned shards (build_dist_workspace(aligned=True)): the
+    streamed shard mover gathers round-0 labels straight into window
+    order instead of re-laying them each iteration, and stays
+    bit-identical to the unaligned streamed run on every exchange mode,
+    both sketches, and under the per-shard frontier gate."""
+    _run("""
+        import numpy as np, jax
+        from repro.graphs.generators import powerlaw_communities
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("shard",))
+        g, _ = powerlaw_communities(768, p_in=0.5, mix=0.02, seed=5)
+        kw = dict(stream=True, tile_r=32, window_entries=512)
+        ws = build_dist_workspace(g, 4, **kw)
+        ws_a = build_dist_workspace(g, 4, aligned=True, **kw)
+        ws_h = build_dist_workspace(g, 4, halo=True, **kw)
+        ws_ha = build_dist_workspace(g, 4, halo=True, aligned=True, **kw)
+        for method in ("mg", "bm"):
+            for ref_ws, got_ws, tag in ((ws, ws_a, "plain"),
+                                        (ws_h, ws_ha, "halo")):
+                ref, ri = dist_lpa(mesh, ref_ws, rho=2,
+                                   engine="pallas_stream", method=method)
+                got, gi = dist_lpa(mesh, got_ws, rho=2,
+                                   engine="pallas_stream", method=method)
+                assert ri == gi, (tag, method)
+                assert (np.asarray(ref) == np.asarray(got)).all(), \\
+                    (tag, method)
+        ref, ri = dist_lpa(mesh, ws, rho=2, engine="pallas_stream",
+                           frontier_gate=True)
+        got, gi = dist_lpa(mesh, ws_a, rho=2, engine="pallas_stream",
+                           frontier_gate=True)
+        assert ri == gi and (np.asarray(ref) == np.asarray(got)).all()
+        try:
+            build_dist_workspace(g, 4, aligned=True)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError("aligned=True without stream must raise")
+        print("aligned dist parity ok")
+    """, devices=4)
+
+
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_halo_exchange_matches_full_gather():
     """Hub+halo label exchange must be bit-identical to the full gather
     (EXPERIMENTS §Perf hillclimb 3) and strictly cheaper on the wire."""

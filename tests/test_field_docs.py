@@ -1,0 +1,98 @@
+"""The docs gate for plan dataclass fields (tools/check_field_docs.py):
+the real csr.py passes, seeded violations trip, CLI exit codes hold."""
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)  # the `tools` package lives at the repo root
+
+from tools.check_field_docs import check_source  # noqa: E402
+
+CSR = os.path.join(REPO, "src", "repro", "graphs", "csr.py")
+
+
+def test_csr_plan_fields_are_documented():
+    with open(CSR, "r", encoding="utf-8") as fh:
+        findings = check_source(fh.read(), CSR)
+    assert findings == []
+
+
+def test_undocumented_field_is_flagged():
+    src = textwrap.dedent("""
+        from dataclasses import dataclass
+
+        @dataclass
+        class DemoPlan:
+            documented: int  # int — fine
+            bare: int
+            _private: int
+    """)
+    findings = check_source(src)
+    assert len(findings) == 1
+    assert "DemoPlan.bare" in findings[0][1]
+
+
+def test_comment_block_above_counts():
+    src = textwrap.dedent("""
+        from dataclasses import dataclass
+
+        @dataclass
+        class DemoPlan:
+            # spans two lines of explanation about
+            # what this int means
+            above: int
+    """)
+    assert check_source(src) == []
+
+
+def test_array_field_comment_must_name_a_dtype():
+    src = textwrap.dedent("""
+        from dataclasses import dataclass
+        import jax.numpy as jnp
+
+        @dataclass
+        class DemoPlan:
+            typed: jnp.ndarray    # [N] int32 — slot map
+            untyped: jnp.ndarray  # slot map, dtype unstated
+    """)
+    findings = check_source(src)
+    assert len(findings) == 1
+    assert "DemoPlan.untyped" in findings[0][1]
+    assert "dtype" in findings[0][1]
+
+
+def test_non_dataclass_classes_are_ignored():
+    src = textwrap.dedent("""
+        class NotAPlan:
+            bare: int
+    """)
+    assert check_source(src) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    clean = subprocess.run(
+        [sys.executable, "tools/check_field_docs.py", CSR],
+        cwd=REPO, capture_output=True, text=True)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("from dataclasses import dataclass\n"
+                   "@dataclass\nclass P:\n    x: int\n")
+    dirty = subprocess.run(
+        [sys.executable, "tools/check_field_docs.py", str(bad)],
+        cwd=REPO, capture_output=True, text=True)
+    assert dirty.returncode == 1
+    assert "P.x" in dirty.stdout
+
+    usage = subprocess.run(
+        [sys.executable, "tools/check_field_docs.py"],
+        cwd=REPO, capture_output=True, text=True)
+    assert usage.returncode == 2
+
+    missing = subprocess.run(
+        [sys.executable, "tools/check_field_docs.py", "no/such/file.py"],
+        cwd=REPO, capture_output=True, text=True)
+    assert missing.returncode == 2

@@ -24,12 +24,13 @@ from repro.core.sketch import run_mg_plan, scatter_rows, select_best
 from repro.graphs.csr import (build_csr, build_fold_plan,
                               build_streamed_fold_plan, fused_hbm_entries,
                               build_fused_fold_plan, streamed_dispatches,
-                              streamed_hbm_entries,
+                              streamed_gather_slots, streamed_hbm_entries,
                               streamed_peak_window_bytes,
                               streamed_window_slots)
 from repro.graphs.generators import chain_kmer, powerlaw_communities
 from repro.kernels.mg_sketch.streaming import (run_mg_plan_stream,
-                                               select_best_stream)
+                                               select_best_stream,
+                                               windowed_entries)
 
 
 def _star_graph(n_leaves=300):
@@ -235,6 +236,131 @@ def test_stream_dispatch_and_residency_economics():
     assert streamed_peak_window_bytes(splan) < 8 * int(degrees.sum())
     # the windowed re-layout's slots cover at least the real entries
     assert streamed_window_slots(splan) >= streamed_hbm_entries(splan)
+
+
+# ---------------------------------------------------------------------------
+# window-aligned layout (LPAConfig(aligned_layout=True), DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+_ALIGNED_KW = dict(k=4, chunk=16, tile_r=8, window_entries=64)
+
+
+def _aligned_plans(g):
+    degrees = np.asarray(g.degrees)
+    splan = build_streamed_fold_plan(degrees, **_ALIGNED_KW)
+    aplan = build_streamed_fold_plan(degrees, indices=np.asarray(g.indices),
+                                     weights=np.asarray(g.weights),
+                                     aligned=True, **_ALIGNED_KW)
+    return splan, aplan
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_aligned_layout_round_trip(name):
+    """The aligned plan's pre-materialized round-0 arrays are EXACTLY what
+    the unaligned path's windowed re-layout gather produces at runtime —
+    parity with the unaligned engine is structural, not numerical."""
+    g = FIXTURES[name]()
+    splan, aplan = _aligned_plans(g)
+    assert not splan.aligned
+    if not splan.rounds:  # no entries -> nothing to align
+        assert not aplan.aligned
+        return
+    assert aplan.aligned
+    assert aplan.rounds[0].aligned
+    assert all(not r.aligned for r in aplan.rounds[1:])
+    # the round-0 gather degenerates to the identity permutation over the
+    # real window slots, with -1 kept on pads
+    eg = np.asarray(aplan.rounds[0].entry_gather)
+    valid = eg >= 0
+    np.testing.assert_array_equal(eg[valid], np.nonzero(valid)[0])
+    assert aplan.rounds[0].n_entries_in == eg.shape[0]
+    # pads carry the n_nodes sentinel and weight 0 (they cannot vote)
+    aev = np.asarray(aplan.aligned_entry_vertex)
+    aew = np.asarray(aplan.aligned_entry_weights)
+    np.testing.assert_array_equal(aev[~valid],
+                                  np.full((~valid).sum(), g.n_nodes))
+    np.testing.assert_array_equal(aew[~valid], np.zeros((~valid).sum()))
+    # round-trip: the driver's one O(slots) label gather reproduces the
+    # unaligned re-layout bit-for-bit for any vertex labeling
+    rng = np.random.default_rng(zlib.crc32(name.encode()) + 2)
+    labels = jnp.asarray(rng.integers(0, max(g.n_nodes, 2),
+                                      g.n_nodes).astype(np.int32))
+    wl, ww = windowed_entries(splan.rounds[0].entry_gather,
+                              labels[g.indices], g.weights)
+    labels_ext = jnp.concatenate([labels, jnp.full((1,), -1, labels.dtype)])
+    np.testing.assert_array_equal(np.asarray(labels_ext[aev]),
+                                  np.asarray(wl))
+    np.testing.assert_array_equal(aew, np.asarray(ww))
+
+
+@pytest.mark.parametrize("name", sorted(FIXTURES))
+def test_aligned_e2e_bit_parity(name):
+    """Full LPA on the aligned streamed layout matches the unaligned
+    streamed run (and hence the jnp reference) bit-for-bit."""
+    g = FIXTURES[name]()
+    base = dict(method="mg", rho=2, chunk=16, max_iters=8,
+                fold_backend="pallas_stream", stream_window=256)
+    ref = lpa(g, LPAConfig(**base))
+    got = lpa(g, LPAConfig(aligned_layout=True, **base))
+    assert ref.iterations == got.iterations
+    np.testing.assert_array_equal(np.asarray(ref.labels),
+                                  np.asarray(got.labels))
+
+
+@pytest.mark.parametrize("method,rescan", [("mg", True), ("bm", False)])
+def test_aligned_sketch_variants_bit_parity(method, rescan):
+    """The rescan ablation and the BM sketch also fold bit-identically
+    from the aligned layout (both consume the same round-0 arrays)."""
+    for name in ("powerlaw", "star_hub"):
+        g = FIXTURES[name]()
+        base = dict(method=method, rescan=rescan, rho=2, chunk=16,
+                    max_iters=8, fold_backend="pallas_stream",
+                    stream_window=256)
+        ref = lpa(g, LPAConfig(**base))
+        got = lpa(g, LPAConfig(aligned_layout=True, **base))
+        assert ref.iterations == got.iterations, name
+        np.testing.assert_array_equal(np.asarray(ref.labels),
+                                      np.asarray(got.labels))
+
+
+def test_aligned_gather_accounting():
+    """streamed_gather_slots declares the aligned layout's saving: the
+    whole round-0 window grid — O(|E|) slots — stops being re-gathered
+    every iteration, leaving only the tiny chunk-merge rounds."""
+    g = FIXTURES["star_hub"]()  # multi-round: merge rounds still gather
+    splan, aplan = _aligned_plans(g)
+    assert splan.n_rounds > 1
+    # unaligned: every window slot is written by the re-layout gather
+    assert streamed_gather_slots(splan) == streamed_window_slots(splan)
+    saved = streamed_gather_slots(splan) - streamed_gather_slots(aplan)
+    r0 = splan.rounds[0]
+    assert saved == r0.n_windows * r0.window_entries
+    assert saved >= int(np.asarray(g.degrees).sum())  # the O(|E|) term
+    # the later rounds' gathers are unchanged (their inputs are compacted
+    # chunk-merge outputs, never pre-materializable at build time)
+    assert streamed_gather_slots(aplan) == sum(
+        r.n_windows * r.window_entries for r in splan.rounds[1:])
+
+
+def test_aligned_requires_the_entry_arrays():
+    degrees = np.asarray([3, 2, 1])
+    with pytest.raises(ValueError, match="aligned"):
+        build_streamed_fold_plan(degrees, k=4, chunk=16, aligned=True)
+
+
+def test_auto_aligned_layout_streams_aligned():
+    """aligned_layout rides through the auto policy: when the budget
+    forces streaming, the workspace plan is aligned and the run still
+    bit-matches the jnp reference."""
+    g = FIXTURES["powerlaw"]()
+    cfg = LPAConfig(method="mg", rho=2, fold_backend="auto",
+                    vmem_budget_bytes=1024, aligned_layout=True)
+    ws = build_workspace(g, cfg)
+    assert ws.stream_plan is not None and ws.stream_plan.aligned
+    res = lpa(g, cfg, ws=ws)
+    ref = lpa(g, LPAConfig(method="mg", rho=2, fold_backend="jnp"))
+    np.testing.assert_array_equal(np.asarray(res.labels),
+                                  np.asarray(ref.labels))
 
 
 def test_lpa_e2e_stream_bit_matches_jnp():

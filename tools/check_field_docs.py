@@ -1,0 +1,118 @@
+"""Docs gate: every public dataclass field must carry a field comment.
+
+  python tools/check_field_docs.py src/repro/graphs/csr.py [more files...]
+
+The plan dataclasses in ``repro.graphs.csr`` are the contract between the
+builders and four fold engines, so every public field must say what it
+means — as a ``#`` comment on the field's own line or on the contiguous
+comment block directly above it. Array-typed fields (``jnp.ndarray`` /
+``np.ndarray`` annotations) must additionally name their dtype in that
+comment (the kernels' 32-bit width contract is part of the meaning; see
+kernelcheck R1).
+
+Exit codes: 0 clean, 1 findings, 2 usage/IO error. The CI docs job runs
+this against ``src/repro/graphs/csr.py``.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from typing import List, Tuple
+
+#: dtype tokens an array field's comment must mention (width contract)
+DTYPE_TOKENS = ("int8", "int16", "int32", "int64", "uint32", "uint64",
+                "float32", "float64", "bool")
+
+#: annotation substrings that mark a field as an array
+_ARRAY_MARKERS = ("ndarray", "Array")
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if "dataclass" in ast.unparse(target):
+            return True
+    return False
+
+
+def _field_comment(lines: List[str], lineno: int) -> str:
+    """The comment text attached to the field at 1-based ``lineno``: the
+    trailing comment on its own line plus the contiguous ``#`` block
+    directly above (the two documentation styles used in-tree)."""
+    parts = []
+    line = lines[lineno - 1]
+    if "#" in line:
+        parts.append(line.split("#", 1)[1])
+    i = lineno - 2
+    while i >= 0 and lines[i].lstrip().startswith("#"):
+        parts.append(lines[i].lstrip().lstrip("#"))
+        i -= 1
+    return " ".join(parts).strip()
+
+
+def check_source(src: str, path: str = "<string>") -> List[Tuple[int, str]]:
+    """Return (line, message) findings for undocumented public fields."""
+    tree = ast.parse(src, filename=path)
+    lines = src.splitlines()
+    findings: List[Tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef) and _is_dataclass(node)):
+            continue
+        for item in node.body:
+            if not (isinstance(item, ast.AnnAssign)
+                    and isinstance(item.target, ast.Name)):
+                continue
+            fname = item.target.id
+            if fname.startswith("_"):
+                continue
+            comment = _field_comment(lines, item.lineno)
+            where = f"{node.name}.{fname}"
+            if not comment:
+                findings.append((
+                    item.lineno,
+                    f"undocumented public dataclass field `{where}` — add "
+                    "a `#` comment (same line or directly above) stating "
+                    "what the field means"))
+                continue
+            ann = ast.unparse(item.annotation)
+            if any(m in ann for m in _ARRAY_MARKERS) \
+                    and not any(t in comment for t in DTYPE_TOKENS):
+                findings.append((
+                    item.lineno,
+                    f"array field `{where}` comment never names its dtype "
+                    f"— state one of {', '.join(DTYPE_TOKENS[:4])}, ... "
+                    "(the kernels' width contract is part of the meaning)"))
+    return findings
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    if not args:
+        print("usage: python tools/check_field_docs.py FILE [FILE...]",
+              file=sys.stderr)
+        return 2
+    total = 0
+    for path in args:
+        try:
+            with open(path, "r", encoding="utf-8") as fh:
+                src = fh.read()
+        except OSError as exc:
+            print(f"check_field_docs: cannot read {path}: {exc}",
+                  file=sys.stderr)
+            return 2
+        try:
+            findings = check_source(src, path)
+        except SyntaxError as exc:
+            print(f"check_field_docs: cannot parse {path}: {exc}",
+                  file=sys.stderr)
+            return 2
+        for line, msg in findings:
+            print(f"{path}:{line}: {msg}")
+        total += len(findings)
+    print(f"check_field_docs: {total} finding(s) across "
+          f"{len(args)} file(s)")
+    return 1 if total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,4 +1,4 @@
-"""kernelcheck rules R1-R5 (see DESIGN.md §12 for the catalog).
+"""kernelcheck rules R1-R6 (see DESIGN.md §12 for the catalog).
 
 Each ``check_rN(index, ...)`` returns a list of Findings. Rules are
 conservative by construction: anything unresolvable is treated as unknown
@@ -1026,6 +1026,80 @@ def _check_fixtures(engines: List[str], tests_dir: str,
 
 
 # ---------------------------------------------------------------------------
+# R6 — aligned-layout gather accounting
+# ---------------------------------------------------------------------------
+
+#: the O(|E|) windowed re-layout gather an aligned round makes redundant
+_RELAYOUT_GATHER = "windowed_entries"
+#: the per-iteration gather accounting helper the benchmarks report
+_GATHER_ACCOUNTING = "streamed_gather_slots"
+
+
+def _mentions_aligned(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and "aligned" in sub.attr:
+            return True
+        if isinstance(sub, ast.Name) and "aligned" in sub.id:
+            return True
+    return False
+
+
+def check_r6(index: RepoIndex) -> List[Finding]:
+    """Window-aligned rounds must skip the re-layout gather, and the
+    gather accounting must declare that skip.
+
+    (a) every call to the windowed re-layout gather must sit under a
+        conditional testing an ``aligned`` flag — an unguarded call
+        re-pays the O(|E|) HBM round-trip on rounds whose entries were
+        already materialized window-aligned at plan build time;
+    (b) the ``streamed_gather_slots`` accounting helper must exclude
+        aligned rounds, so aligned plans *declare* the reduced gather
+        count the bench traffic columns and DESIGN.md §13 promise.
+    """
+    findings: List[Finding] = []
+    for mi in index.modules.values():
+        for qual, fn in mi.functions.items():
+            short = qual.rsplit(".", 1)[-1]
+            if short == _RELAYOUT_GATHER:
+                continue  # the producer itself, not a consumer
+            # call nodes lexically under an `aligned`-testing conditional
+            guarded: Set[int] = set()
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.If, ast.IfExp)) \
+                        and _mentions_aligned(node.test):
+                    guarded.update(id(sub) for sub in ast.walk(node))
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Call)
+                        and _last_segment(node.func) == _RELAYOUT_GATHER):
+                    continue
+                if id(node) not in guarded:
+                    findings.append(Finding(
+                        "R6", mi.path, node.lineno,
+                        f"`{qual}` re-lays entries through "
+                        f"`{_RELAYOUT_GATHER}` unconditionally — an "
+                        "aligned round's entries are already in window "
+                        "order, so this re-pays the O(|E|) HBM gather the "
+                        "aligned layout removes",
+                        "branch on the round's `aligned` flag and take the "
+                        "pre-windowed arrays directly when it is set"))
+            if short == _GATHER_ACCOUNTING:
+                tests = [n.test for n in ast.walk(fn)
+                         if isinstance(n, (ast.If, ast.IfExp))]
+                for comp in ast.walk(fn):
+                    if isinstance(comp, ast.comprehension):
+                        tests.extend(comp.ifs)
+                if not any(_mentions_aligned(t) for t in tests):
+                    findings.append(Finding(
+                        "R6", mi.path, fn.lineno,
+                        f"`{qual}` counts every round's window slots — "
+                        "aligned rounds gather nothing, so aligned plans "
+                        "must declare the reduced count",
+                        "filter rounds on `not r.aligned` so the bench "
+                        "traffic columns stay honest"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -1038,5 +1112,6 @@ def run_all(index: RepoIndex, tests_dir: Optional[str] = None
     findings.extend(check_r3(index))
     findings.extend(check_r4(index))
     findings.extend(check_r5(index, tests_dir))
+    findings.extend(check_r6(index))
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings

@@ -1,0 +1,15 @@
+"""Seeded R6 violation: streamed round driver re-gathers entries even on
+window-aligned rounds."""
+
+
+def windowed_entries(gather, entry_labels, entry_weights):
+    # stand-in for the in-tree O(|E|) windowed re-layout gather
+    return entry_labels[gather], entry_weights[gather]
+
+
+def bad_stream_round(rnd, entry_labels, entry_weights):
+    # BUG: never tests `rnd.aligned` — an aligned round's entries are
+    # already in window order, so this re-pays the per-iteration HBM
+    # gather the aligned layout exists to remove.
+    wl, ww = windowed_entries(rnd.entry_gather, entry_labels, entry_weights)
+    return wl, ww
