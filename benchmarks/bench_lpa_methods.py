@@ -33,7 +33,16 @@ from benchmarks.common import (engine_list, fold_engine_stats, layout_list,
 from repro.core.lpa import LPAConfig, lpa
 from repro.core.modularity import modularity
 
-METHODS = ("exact", "mg", "bm")
+METHODS = ("exact", "mg", "bm", "rescan")
+
+
+def _method_config(method: str, **kw) -> LPAConfig:
+    """Row method -> LPAConfig. ``rescan`` rows are the MG double-scan
+    ablation: the same ``family="mg"`` FoldRequest with ``rescan=True``
+    (DESIGN.md §14), not a separate LPA method."""
+    if method == "rescan":
+        return LPAConfig(method="mg", rescan=True, **kw)
+    return LPAConfig(method=method, **kw)
 
 
 def _streams(backend: str, g, vmem_budget: int) -> bool:
@@ -56,7 +65,8 @@ def run(scale: str = "small", engines: str | None = None,
     ``engines``: ``None`` (time the jnp reference only), ``"all"``, or a
     comma-separated subset of the registered engines + ``auto``.
     ``sketches``: which sketch methods get the engine sweep (``"all"`` or
-    a comma subset of ``mg,bm``; default: ``mg`` when engines are given).
+    a comma subset of ``mg,bm,rescan``; default: ``mg`` when engines are
+    given — ``rescan`` rows time the MG double-scan ablation).
     ``frontier``: additionally time the frontier-gated runs — one dense
     gated reference per (graph, sketch) plus one sparse-compacted run per
     swept backend (``{backend}+sparse`` rows) with skipped-row stats.
@@ -83,15 +93,16 @@ def run(scale: str = "small", engines: str | None = None,
                             else ("unaligned",))
                 for layout in variants:
                     aligned = layout == "aligned"
-                    cfg = LPAConfig(method=method, rho=2,
-                                    fold_backend=backend,
-                                    aligned_layout=aligned)
+                    cfg = _method_config(method, rho=2,
+                                         fold_backend=backend,
+                                         aligned_layout=aligned)
                     import time
                     t0 = time.perf_counter()
                     res = lpa(g, cfg)
                     dt = time.perf_counter() - t0
                     q = float(modularity(g, res.labels))
-                    ws = lpa_working_set_bytes(method, g, cfg)
+                    # the rescan ablation folds the same MG sketch state
+                    ws = lpa_working_set_bytes(cfg.method, g, cfg)
                     if method == "exact":
                         base = dt
                     row = {
@@ -146,8 +157,8 @@ def _frontier_rows(gname, g, method: str, swept: tuple, base: float | None):
         variants = (("gated", False),) if i == 0 else ()
         variants += (("sparse", True),)
         for tag, sparse in variants:
-            cfg = LPAConfig(method=method, rho=2, fold_backend=backend,
-                            frontier_gate=True, frontier_sparse=sparse)
+            cfg = _method_config(method, rho=2, fold_backend=backend,
+                                 frontier_gate=True, frontier_sparse=sparse)
             t0 = time.perf_counter()
             res = lpa(g, cfg)
             dt = time.perf_counter() - t0

@@ -21,21 +21,38 @@ by construction ungateable — that is the price of machine independence.)
 
 Rows whose baseline runtime is under ``--min-seconds`` are skipped as
 noise. The gate also fails on *coverage loss*: every gateable baseline
-key (bench, graph, method, engine) must still be present in the current
-dump, so an engine silently dropping out of the sweep (or erroring —
-error rows carry no ``runtime_s``) trips CI instead of passing it.
+key must still be present in the current dump, so an engine silently
+dropping out of the sweep (or erroring — error rows carry no
+``runtime_s``) trips CI instead of passing it.
+
+Coverage keys mirror the FoldRequest routing the movers dispatch on
+(DESIGN.md §14): each timed row keys as (bench, graph, family, mode,
+backend), where ``family`` is the row's method column (``exact`` / ``mg``
+/ ``bm`` / ``rescan``), ``backend`` is the fold engine, and ``mode`` is
+the fold-variant tag the bench encodes as an engine suffix —
+``dense`` (no suffix) or ``gated`` / ``sparse`` / ``aligned``. Keying on
+the triple (not the raw engine string) means a combo vanishing from the
+sweep — e.g. the sparse fold of one backend, or every rescan row — is
+reported as the missing (family, mode, backend) cell of the matrix.
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-CALIB_METHOD, CALIB_ENGINE = "exact", "jnp"
+CALIB_FAMILY, CALIB_BACKEND = "exact", "jnp"
+
+#: engine-suffix tags the benches emit; anything else is a dense fold
+_MODE_TAGS = ("gated", "sparse", "aligned")
 
 
 def _key(row: dict) -> tuple:
+    """(bench, graph, family, mode, backend) — the request-routing triple
+    plus its (bench, graph) scope."""
+    backend, _, tag = (row.get("engine") or "").partition("+")
+    mode = tag if tag in _MODE_TAGS else "dense"
     return (row.get("bench"), row.get("graph"), row.get("method"),
-            row.get("engine"))
+            mode, backend)
 
 
 def _timed_rows(rows: list) -> dict:
@@ -43,17 +60,21 @@ def _timed_rows(rows: list) -> dict:
             if r.get("runtime_s") is not None and r.get("graph")}
 
 
+def _is_calib(key: tuple) -> bool:
+    _, _, fam, mode, backend = key
+    return (fam, mode, backend) == (CALIB_FAMILY, "dense", CALIB_BACKEND)
+
+
 def _normalized(times: dict) -> dict:
     """runtime / same-run exact-jnp runtime of the same (bench, graph)."""
-    calib = {(b, g): t for (b, g, m, e), t in times.items()
-             if m == CALIB_METHOD and e == CALIB_ENGINE}
+    calib = {k[:2]: t for k, t in times.items() if _is_calib(k)}
     out = {}
-    for (b, g, m, e), t in times.items():
-        if (m, e) == (CALIB_METHOD, CALIB_ENGINE):
+    for key, t in times.items():
+        if _is_calib(key):
             continue
-        c = calib.get((b, g))
+        c = calib.get(key[:2])
         if c and c > 0:
-            out[(b, g, m, e)] = t / c
+            out[key] = t / c
     return out
 
 

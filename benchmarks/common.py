@@ -96,14 +96,16 @@ def engine_list(spec: str | None = None) -> tuple:
     return chosen
 
 
-SKETCHES = ("mg", "bm")
+SKETCHES = ("mg", "bm", "rescan")
 
 
 def sketch_list(spec: str | None = None) -> tuple:
-    """Parse a ``--sketch`` spec: ``"all"`` / ``None`` (both paper
-    sketches) or a comma-separated subset of ``mg``/``bm``. Selected
-    sketches get the full ``--engines`` backend sweep; unselected ones are
-    timed on the ``jnp`` reference only."""
+    """Parse a ``--sketch`` spec: ``"all"`` / ``None`` (every sketch
+    family) or a comma-separated subset of ``mg``/``bm``/``rescan``
+    (``rescan`` is the MG double-scan ablation — it times
+    ``FoldRequest(family="mg", rescan=True)`` routing, single-host and
+    distributed). Selected sketches get the full ``--engines`` backend
+    sweep; unselected ones are timed on the ``jnp`` reference only."""
     if spec in (None, "", "all"):
         return SKETCHES
     chosen = tuple(s.strip() for s in spec.split(",") if s.strip())
@@ -178,9 +180,15 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
         ``pallas_fused``/``pallas_stream``.
       rescan_dispatches_per_iter_* : dispatch economics of the double-scan
         MG iteration (fold + in-engine second pass).
+
+    All dispatch columns come from each engine's single request-keyed
+    ``dispatches_per_iter(plan, aux_plan, request)`` (verified against
+    the drivers by kernelcheck R3); the request ``mode`` never changes a
+    count, so sparse rows share their dense column.
     """
     import numpy as np
     from repro.core.fold_engine import get_engine, resolve_auto
+    from repro.core.fold_program import FoldRequest
     from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
                                   build_streamed_fold_plan,
                                   fused_hbm_entries,
@@ -204,26 +212,29 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     pallas = get_engine("pallas")
     fused = get_engine("pallas_fused")
     stream = get_engine("pallas_stream")
+    mg_req = FoldRequest(family="mg")
+    bm_req = FoldRequest(family="bm")
+    rescan_req = FoldRequest(family="mg", rescan=True)
     return {
         "fold_rounds": plan.n_rounds,
         "dispatches_per_iter_pallas":
-            pallas.dispatches_per_iter(plan, None),
+            pallas.dispatches_per_iter(plan, None, mg_req),
         "dispatches_per_iter_fused":
-            fused.dispatches_per_iter(plan, fused_plan),
+            fused.dispatches_per_iter(plan, fused_plan, mg_req),
         "dispatches_per_iter_stream":
-            stream.dispatches_per_iter(plan, stream_plan),
+            stream.dispatches_per_iter(plan, stream_plan, mg_req),
         "bm_dispatches_per_iter_pallas":
-            pallas.bm_dispatches_per_iter(plan, None),
+            pallas.dispatches_per_iter(plan, None, bm_req),
         "bm_dispatches_per_iter_fused":
-            fused.bm_dispatches_per_iter(plan, fused_plan),
+            fused.dispatches_per_iter(plan, fused_plan, bm_req),
         "bm_dispatches_per_iter_stream":
-            stream.bm_dispatches_per_iter(plan, stream_plan),
+            stream.dispatches_per_iter(plan, stream_plan, bm_req),
         "rescan_dispatches_per_iter_pallas":
-            pallas.rescan_dispatches_per_iter(plan, None),
+            pallas.dispatches_per_iter(plan, None, rescan_req),
         "rescan_dispatches_per_iter_fused":
-            fused.rescan_dispatches_per_iter(plan, fused_plan),
+            fused.dispatches_per_iter(plan, fused_plan, rescan_req),
         "rescan_dispatches_per_iter_stream":
-            stream.rescan_dispatches_per_iter(plan, stream_plan),
+            stream.dispatches_per_iter(plan, stream_plan, rescan_req),
         "padded_entries": plan_padded_entries(plan),
         "fused_hbm_entries": fused_hbm_entries(fused_plan),
         "fused_resident_entry_bytes": 8 * int(degrees.sum()),

@@ -51,8 +51,8 @@ def main() -> int:
                          "(e.g. jnp,pallas_stream,auto)")
     ap.add_argument("--sketch", default=None,
                     help="sketch methods to sweep across --engines where "
-                         "supported: 'all' or a comma list of mg,bm "
-                         "(default: mg only)")
+                         "supported: 'all' or a comma list of "
+                         "mg,bm,rescan (default: mg only)")
     ap.add_argument("--frontier", action="store_true",
                     help="also time frontier-gated runs where supported: "
                          "dense gated plus the sparse-compacted fold path "

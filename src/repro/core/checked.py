@@ -178,7 +178,29 @@ class CheckedEngine:
         _throw(_candidates_contract(ck, wk))
         return ck, wk
 
-    # -- plan-level entry points -------------------------------------------
+    # -- the routed entry point --------------------------------------------
+
+    def run(self, plan, aux_plan, request, entry_labels, entry_weights,
+            labels):
+        """ONE generic contract wrapper around the routed fold: pre/post
+        contracts do not depend on where the request routes (sparse mode
+        only changes which rows fold — the frontier itself is a plain
+        bool mask), so a single wrapper covers every combo. Delegates to
+        the wrapped engine's own routing."""
+        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        _throw(_labels_contract(labels))
+        outcome = self._inner.run(plan, aux_plan, request, entry_labels,
+                                  entry_weights, labels)
+        _throw(_selection_contract(outcome.want))
+        if outcome.bm_label is not None:
+            _throw(_candidates_contract(outcome.bm_label,
+                                        outcome.bm_weight))
+        return outcome
+
+    # -- family executors --------------------------------------------------
+    # Explicit wrappers: __getattr__ would delegate these uncheck-wrapped,
+    # silently dropping the contracts for consumers that call one family
+    # directly (the distributed per-shard folds, the parity suites).
 
     def mg_candidates(self, plan, aux_plan, entry_labels, entry_weights):
         self._pre(plan, aux_plan, entry_labels, entry_weights)
@@ -188,64 +210,31 @@ class CheckedEngine:
         return cand, wts
 
     def mg_select(self, plan, aux_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         self._pre(plan, aux_plan, entry_labels, entry_weights)
         _throw(_labels_contract(labels))
         out = self._inner.mg_select(plan, aux_plan, entry_labels,
-                                    entry_weights, labels, seed)
+                                    entry_weights, labels, seed,
+                                    selection=selection)
         _throw(_selection_contract(out))
         return out
 
     def mg_rescan(self, plan, aux_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         self._pre(plan, aux_plan, entry_labels, entry_weights)
         _throw(_labels_contract(labels))
         out = self._inner.mg_rescan(plan, aux_plan, entry_labels,
-                                    entry_weights, labels, seed)
+                                    entry_weights, labels, seed,
+                                    selection=selection)
         _throw(_selection_contract(out))
         return out
 
     def bm_fold_plan(self, plan, aux_plan, entry_labels, entry_weights,
-                     labels):
+                     labels, *, selection=None):
         self._pre(plan, aux_plan, entry_labels, entry_weights)
         _throw(_labels_contract(labels))
         c, w = self._inner.bm_fold_plan(plan, aux_plan, entry_labels,
-                                        entry_weights, labels)
-        _throw(_candidates_contract(c, w))
-        return c, w
-
-    # -- sparse frontier entry points --------------------------------------
-    # Explicit wrappers: __getattr__ would delegate these uncheck-wrapped,
-    # silently dropping the contracts exactly on the path the sparse parity
-    # suite runs under REPRO_CHECKED=1. Same pre/post contracts as the
-    # dense twins — the frontier itself is a plain bool mask.
-
-    def mg_select_sparse(self, plan, aux_plan, entry_labels, entry_weights,
-                         labels, seed, frontier, cap_rows):
-        self._pre(plan, aux_plan, entry_labels, entry_weights)
-        _throw(_labels_contract(labels))
-        out = self._inner.mg_select_sparse(plan, aux_plan, entry_labels,
-                                           entry_weights, labels, seed,
-                                           frontier, cap_rows)
-        _throw(_selection_contract(out))
-        return out
-
-    def mg_rescan_sparse(self, plan, aux_plan, entry_labels, entry_weights,
-                         labels, seed, frontier, cap_rows):
-        self._pre(plan, aux_plan, entry_labels, entry_weights)
-        _throw(_labels_contract(labels))
-        out = self._inner.mg_rescan_sparse(plan, aux_plan, entry_labels,
-                                           entry_weights, labels, seed,
-                                           frontier, cap_rows)
-        _throw(_selection_contract(out))
-        return out
-
-    def bm_fold_plan_sparse(self, plan, aux_plan, entry_labels,
-                            entry_weights, labels, frontier, cap_rows):
-        self._pre(plan, aux_plan, entry_labels, entry_weights)
-        _throw(_labels_contract(labels))
-        c, w = self._inner.bm_fold_plan_sparse(plan, aux_plan, entry_labels,
-                                               entry_weights, labels,
-                                               frontier, cap_rows)
+                                        entry_weights, labels,
+                                        selection=selection)
         _throw(_candidates_contract(c, w))
         return c, w

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import sketch as sketch_lib
+from repro.core.fold_program import FoldRequest
 from repro.compat import shard_map
 
 PAD = -1
@@ -78,10 +79,19 @@ class DistLPAWorkspace:
     stream_dmax: Tuple[jnp.ndarray, ...] | None = None     # per round [P, n_win_r, 1]
     stream_final_rv: jnp.ndarray | None = None  # [P, n_win_last * tile_r] local vertex (-1 pad)
     # round-0 row -> local vertex maps, one per plan encoding (the BM fold
-    # walks only round 0; -1 on pad rows/slots):
+    # and the rescan second pass walk only round 0; -1 on pad rows/slots):
     row_vertex0: jnp.ndarray | None = None  # [P, R_pad_0] bucketed rows
     fused_rv0: jnp.ndarray | None = None    # [P, S_0 * tile_r] fused rows
     stream_rv0: jnp.ndarray | None = None   # [P, n_win_0 * tile_r] slots
+    # round-0 row -> chunk-rank maps matching the rv0 maps above (0 on pad
+    # rows; the rescan merge reduces each row's exact partial at its static
+    # (vertex, rank) coordinate — sketch.merge_rescan_partials):
+    bucket_rank0: jnp.ndarray | None = None  # [P, R_pad_0] int32 bucketed rows
+    fused_rank0: jnp.ndarray | None = None   # [P, S_0 * tile_r] int32 fused rows
+    stream_rank0: jnp.ndarray | None = None  # [P, n_win_0 * tile_r] int32 slots
+    # static: max round-0 chunk rows any vertex owns (across shards) — the
+    # rescan merge's rank-table depth
+    max_rows0: int = 1
     # [P, M_pad] int32 — owning LOCAL vertex of each edge slot (-1 pads);
     # the gated step segment-maxes neighbor changed flags over it to mark
     # next iteration's per-shard frontier (dist_lpa_step(frontier_gate=))
@@ -104,9 +114,11 @@ class DistLPAWorkspace:
                     self.stream_counts, self.stream_dmax,
                     self.stream_final_rv, self.row_vertex0, self.fused_rv0,
                     self.stream_rv0, self.entry_vertex,
-                    self.stream_aligned_pos, self.stream_aligned_w)
+                    self.stream_aligned_pos, self.stream_aligned_w,
+                    self.bucket_rank0, self.fused_rank0, self.stream_rank0)
         return children, (self.n_nodes, self.v_pad, self.k, self.chunk,
-                          self.h_pad, self.hub_pad, self.fused_entries)
+                          self.h_pad, self.hub_pad, self.fused_entries,
+                          self.max_rows0)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -120,7 +132,9 @@ class DistLPAWorkspace:
                    fused_rv0=children[16], stream_rv0=children[17],
                    entry_vertex=children[18],
                    stream_aligned_pos=children[19],
-                   stream_aligned_w=children[20])
+                   stream_aligned_w=children[20],
+                   bucket_rank0=children[21], fused_rank0=children[22],
+                   stream_rank0=children[23], max_rows0=aux[7])
 
     @property
     def n_shards(self) -> int:
@@ -241,7 +255,8 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
                               gather, PAD).astype(np.int32)
             plan_rounds.append((gather, row_vertex.astype(np.int32),
                                 row_start.astype(np.int64),
-                                row_count.astype(np.int64)))
+                                row_count.astype(np.int64),
+                                row_rank.astype(np.int32)))
             per_round_rows[p, r] = total_rows
             counts = n_chunks * k
             starts = np.zeros(hi - lo, dtype=np.int64)
@@ -252,6 +267,7 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
     round_gathers = []
     final_row_vertex = np.full((n_shards, int(r_pads[-1])), PAD, dtype=np.int32)
     row_vertex0 = np.full((n_shards, int(r_pads[0])), PAD, dtype=np.int32)
+    bucket_rank0 = np.zeros((n_shards, int(r_pads[0])), dtype=np.int32)
     for r in range(n_rounds):
         g = np.full((n_shards, int(r_pads[r]), chunk), PAD, dtype=np.int32)
         for p in range(n_shards):
@@ -259,13 +275,18 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
             g[p, :len(gather)] = gather
             if r == 0:
                 row_vertex0[p, :len(row_vertex)] = row_vertex
+                bucket_rank0[p, :len(row_vertex)] = shard_plans[p][r][4]
             if r == n_rounds - 1:
                 final_row_vertex[p, :len(row_vertex)] = row_vertex
         round_gathers.append(jnp.asarray(g))
+    # rank-table depth of the rescan merge: max round-0 chunk rows any
+    # vertex owns — identical to the single-host plans' max_rows0, so the
+    # merge reduces through the same shapes in the same order
+    max_rows0 = max(1, int(-(-int(degrees.max()) // chunk))) if n else 1
 
     fused_starts = fused_counts = fused_dmax = None
     fused_entries: tuple = ()
-    fused_rv0 = None
+    fused_rv0 = fused_rank0 = None
     if fused:
         fused_starts, fused_counts, fused_dmax, entries = [], [], [], []
         n_entries = m_pad
@@ -278,8 +299,11 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
                 fv = np.full((n_shards, n_steps * tile_r), PAD, np.int32)
                 fv[:, :row_vertex0.shape[1]] = row_vertex0
                 fused_rv0 = jnp.asarray(fv)
+                fr = np.zeros((n_shards, n_steps * tile_r), np.int32)
+                fr[:, :bucket_rank0.shape[1]] = bucket_rank0
+                fused_rank0 = jnp.asarray(fr)
             for p in range(n_shards):
-                _, _, row_start, row_count = shard_plans[p][r]
+                row_start, row_count = shard_plans[p][r][2:4]
                 rs[p, :len(row_start)] = row_start
                 rc[p, :len(row_count)] = row_count
             rs = rs.reshape(n_shards, n_steps, tile_r)
@@ -295,7 +319,7 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         fused_entries = tuple(entries)
 
     stream_gathers = stream_starts = stream_counts = stream_dmax = None
-    stream_final_rv = stream_rv0 = None
+    stream_final_rv = stream_rv0 = stream_rank0 = None
     if stream:
         from repro.graphs.csr import build_streamed_rounds
         per_shard = []
@@ -336,14 +360,19 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         for p, (_, rtv) in enumerate(per_shard):
             frv[p, :len(rtv)] = rtv
         stream_final_rv = jnp.asarray(frv)
-        # round-0 window slot -> local vertex (appending all-pad windows
-        # never moves a real slot, so the per-shard slot maps pad safely)
+        # round-0 window slot -> local vertex + chunk rank (appending
+        # all-pad windows never moves a real slot, so the per-shard slot
+        # maps pad safely: vertex -1, rank 0)
         n_slots0 = sg[0].shape[1] * tile_r
         srv0 = np.full((n_shards, n_slots0), PAD, dtype=np.int32)
+        srk0 = np.zeros((n_shards, n_slots0), dtype=np.int32)
         for p, (rounds_np, _) in enumerate(per_shard):
             rv = rounds_np[0]["row_to_vertex"]
             srv0[p, :len(rv)] = rv
+            rk = rounds_np[0]["row_rank"]
+            srk0[p, :len(rk)] = rk
         stream_rv0 = jnp.asarray(srv0)
+        stream_rank0 = jnp.asarray(srk0)
 
     send_idx = hub_idx_arr = None
     h_pad = hub_pad = 0
@@ -446,15 +475,18 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         stream_final_rv=stream_final_rv,
         row_vertex0=jnp.asarray(row_vertex0), fused_rv0=fused_rv0,
         stream_rv0=stream_rv0, entry_vertex=jnp.asarray(entry_vertex),
-        stream_aligned_pos=stream_apos, stream_aligned_w=stream_aw)
+        stream_aligned_pos=stream_apos, stream_aligned_w=stream_aw,
+        bucket_rank0=jnp.asarray(bucket_rank0), fused_rank0=fused_rank0,
+        stream_rank0=stream_rank0, max_rows0=max_rows0)
 
 
 def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed, *, k, v_pad, axis_names, fold_tile,
-                send_idx=None, hub_idx=None, fused_meta=None,
+                request, send_idx=None, hub_idx=None, fused_meta=None,
                 fused_entries=(), chunk=0, stream_meta=None,
-                stream_frv=None, method="mg", bm_rv0=None, frontier=None,
-                entry_vertex=None, stream_apos=None, stream_aw=None):
+                stream_frv=None, rv0=None, rank0=None, max_rows0=1,
+                frontier=None, entry_vertex=None, stream_apos=None,
+                stream_aw=None):
     """Per-shard body of one distributed LPA iteration (runs inside shard_map).
 
     Shapes here are the *local* block shapes (leading P axis stripped).
@@ -463,12 +495,19 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     ``stream_meta`` (per round (gather, starts, counts, dmax) windowed
     blocks) + ``stream_frv`` (final row slot -> local vertex) switch it to
     the HBM-streaming windowed kernel — engine="pallas_stream".
-    ``method="bm"`` runs the Boyer-Moore sketch instead of MG: only round
-    0 is folded (one fused/streamed dispatch, or the bucketed tile fold),
-    per-row partial states merge shard-locally with the max-reduce of
-    ``sketch.bm_merge_rows`` — every vertex's rows live on its own shard,
-    so no extra collective is needed. ``bm_rv0`` carries the matching
-    round-0 row -> local vertex map.
+
+    ``request`` (a static :class:`FoldRequest`, closed over by the step —
+    never a shard_map operand) routes the sketch uniformly with
+    ``FoldEngine.run``: ``family="bm"`` runs the Boyer-Moore sketch
+    instead of MG — only round 0 is folded (one fused/streamed dispatch,
+    or the bucketed tile fold), per-row partial states merge shard-locally
+    with the max-reduce of ``sketch.bm_merge_rows`` — and ``rescan=True``
+    re-scores the MG candidates exactly against round 0 (paper §4.4)
+    before selecting. Both need ``rv0`` (the engine's round-0 row -> local
+    vertex map); the rescan additionally reduces its partials at the
+    static (vertex, ``rank0``) coordinates through a ``max_rows0``-deep
+    rank table — every vertex's rows live on its own shard, so neither
+    costs an extra collective.
 
     ``frontier`` ([1, V_pad] bool, with ``entry_vertex`` [1, M_pad]) turns
     on dense frontier gating (the distributed analogue of
@@ -512,6 +551,9 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     safe = jnp.maximum(nbr_pos, 0)
     entry_labels = jnp.where(nbr_pos >= 0, label_table[safe], -1)
     entry_weights = jnp.where(nbr_pos >= 0, edge_w, 0.0)
+    # the fold loops below consume these in place round by round; the
+    # rescan second pass re-reads round 0, so keep the originals
+    entry_labels0, entry_weights0 = entry_labels, entry_weights
 
     def aligned_window_labels():
         """Aligned round-0 entries: gather the label table straight into
@@ -538,12 +580,12 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                            jnp.int32).at[tgt].max(ent)[:v_pad] > 0
         return new_labels[None], delta, marked[None]
 
-    if method == "bm":
-        rv0 = bm_rv0[0]
+    if request.family == "bm":
+        rv0_l = rv0[0]
         # init + merge go through the same sketch helpers as the
         # single-host engines (fused.run_bm_plan_generic) — only the
         # engine-specific fold call differs per branch below
-        init = sketch_lib.bm_init_rows(rv0, labels)
+        init = sketch_lib.bm_init_rows(rv0_l, labels)
         if stream_meta is not None:
             from repro.graphs.csr import StreamedRound
             from repro.kernels.mg_sketch.fused import _interpret_default
@@ -575,7 +617,7 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
             gl, gw = sketch_lib._gather_entries(round_gathers[0],
                                                 entry_labels, entry_weights)
             ck, wk = fold_tile(gl, gw, init)
-        best_c, _ = sketch_lib.bm_merge_rows(v_pad, labels, rv0, ck, wk)
+        best_c, _ = sketch_lib.bm_merge_rows(v_pad, labels, rv0_l, ck, wk)
         want = jnp.where(best_c >= 0, best_c, labels)
         return finish(want)
 
@@ -630,6 +672,60 @@ def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
     dump = v_pad
     row_v = jnp.where(final_row_vertex >= 0, final_row_vertex, dump)
     cand_c = jnp.full((v_pad + 1, k), -1, jnp.int32).at[row_v].set(s_k)[:v_pad]
+
+    if request.rescan:
+        # double-scan second pass (paper §4.4): re-score the consolidated
+        # candidates *exactly* against round 0 — one in-engine dispatch on
+        # the fused/streamed engines, the shared sequential partials on
+        # the bucketed tile path. Candidates stay UNMASKED here (a
+        # decimated zero-weight slot can win on its exact weight; same
+        # convention as fused.rescan_select_generic), and the merge +
+        # selection reduce through the same sketch helpers in the same
+        # order, so the per-vertex result is bit-identical to the
+        # single-host rescan.
+        rv0_l, rank0_l = rv0[0], rank0[0]
+        cand_ext = jnp.concatenate([cand_c,
+                                    jnp.full((1, k), -1, jnp.int32)])
+        cand_rows = cand_ext[jnp.where(rv0_l >= 0, rv0_l, v_pad)]
+        if stream_meta is not None:
+            from repro.graphs.csr import StreamedRound
+            from repro.kernels.mg_sketch.fused import _interpret_default
+            from repro.kernels.mg_sketch.streaming import rescan_round_stream
+            g, rs, rc, dm = stream_meta[0]
+            el0, ew0 = entry_labels0, entry_weights0
+            is_aligned = stream_apos is not None
+            if is_aligned:  # window-aligned round 0: skip the re-layout
+                el0, ew0 = aligned_window_labels()
+            rnd0 = StreamedRound(entry_gather=g[0].reshape(-1),
+                                 row_start=rs[0], row_count=rc[0],
+                                 step_dmax=dm[0], n_entries_in=0,
+                                 window_entries=g.shape[-1],
+                                 aligned=is_aligned)
+            parts = rescan_round_stream(rnd0, el0, ew0, cand_rows, k=k,
+                                        chunk=chunk,
+                                        interpret=_interpret_default())
+        elif fused_meta is not None:
+            from repro.graphs.csr import FusedRound
+            from repro.kernels.mg_sketch.fused import (_interpret_default,
+                                                       rescan_round_fused)
+            rs, rc, dm = fused_meta[0]
+            rnd0 = FusedRound(row_start=rs[0], row_count=rc[0],
+                              step_dmax=dm[0],
+                              n_entries_in=fused_entries[0])
+            parts = rescan_round_fused(rnd0, entry_labels0, entry_weights0,
+                                       cand_rows, k=k, chunk=chunk,
+                                       interpret=_interpret_default())
+        else:
+            gl0, gw0 = sketch_lib._gather_entries(round_gathers[0],
+                                                  entry_labels0,
+                                                  entry_weights0)
+            parts = sketch_lib.rescan_row_partials(gl0, gw0, cand_rows)
+        acc = sketch_lib.merge_rescan_partials(v_pad, k, max_rows0, rv0_l,
+                                               rank0_l, parts)
+        want = sketch_lib.choose_from_candidates(
+            jnp.where(acc > 0, cand_c, -1), acc, labels, seed)
+        return finish(want)
+
     cand_w = jnp.zeros((v_pad + 1, k), jnp.float32).at[row_v].set(s_v)[:v_pad]
     cand_c = jnp.where(cand_w > 0, cand_c, -1)
 
@@ -654,7 +750,8 @@ def _move_epilogue(want, labels, pick_less, axis_names, frontier=None):
 
 def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
                   fold_tile=None, engine: str | None = None,
-                  method: str = "mg", frontier_gate: bool = False):
+                  method: str = "mg", rescan: bool = False,
+                  frontier_gate: bool = False):
     """Build the shard_map'd single-iteration function for ``mesh``.
 
     Returns step(ws_arrays..., labels [P, V_pad], pick_less, seed) ->
@@ -666,8 +763,11 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     ``fused=True``, "pallas_stream" one built with ``stream=True``. An
     explicit ``fold_tile`` overrides the engine's tile fold.
 
-    ``method`` selects the sketch ("mg" | "bm") uniformly with the
-    single-host driver; both run on every engine (halo or full-gather
+    ``method``/``rescan`` select the sketch family uniformly with the
+    single-host driver — they build the same static ``FoldRequest``
+    routing key ``lpa_move`` does (``family`` "mg" | "bm", ``rescan``
+    the MG double-scan ablation, DESIGN.md §14), and ``_shard_move``
+    routes by it; every combo runs on every engine (halo or full-gather
     label exchange is orthogonal).
 
     ``frontier_gate=True`` builds the dense-gated step: it takes an extra
@@ -679,6 +779,9 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     axis_names = tuple(mesh.axis_names) if axis_names is None else axis_names
     if method not in ("mg", "bm"):
         raise ValueError(f"unknown method {method!r}; expected 'mg' | 'bm'")
+    # the request is pure static routing state here (seed/frontier stay
+    # ordinary shard_map operands); construction validates the combo
+    request = FoldRequest(family=method, rescan=rescan)
     if frontier_gate and ws.entry_vertex is None:
         raise ValueError("frontier_gate=True requires a workspace with "
                          "entry_vertex (rebuild via build_dist_workspace)")
@@ -698,6 +801,11 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
     if stream and ws.stream_gathers is None:
         raise ValueError("engine='pallas_stream' requires "
                          "build_dist_workspace(..., stream=True)")
+    if rescan and (ws.stream_rank0 is None if stream else
+                   ws.fused_rank0 is None if fused else
+                   ws.bucket_rank0 is None):
+        raise ValueError("rescan=True needs the workspace's round-0 rank "
+                         "metadata (rebuild via build_dist_workspace)")
     spec = P(axis_names)
     n_rounds = len(ws.round_gathers)
     halo = ws.send_idx is not None
@@ -709,7 +817,7 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
         args = [nbr_pos, edge_w, round_gathers, final_row_vertex, labels,
                 pick_less, seed]
         kw = {"k": ws.k, "v_pad": ws.v_pad, "axis_names": axis_names,
-              "fold_tile": fold_tile, "method": method}
+              "fold_tile": fold_tile, "request": request}
         if fused:
             kw.update(fused_entries=ws.fused_entries, chunk=ws.chunk)
         if stream:
@@ -735,12 +843,19 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
                 in_specs += [spec, spec]
                 args += [ws.stream_aligned_pos, ws.stream_aligned_w]
                 extra_names += ["stream_apos", "stream_aw"]
-        if method == "bm":
+        if method == "bm" or rescan:
             rv0 = (ws.stream_rv0 if stream
                    else ws.fused_rv0 if fused else ws.row_vertex0)
             in_specs += [spec]
             args += [rv0]
-            extra_names += ["bm_rv0"]
+            extra_names += ["rv0"]
+        if rescan:
+            rk0 = (ws.stream_rank0 if stream
+                   else ws.fused_rank0 if fused else ws.bucket_rank0)
+            in_specs += [spec]
+            args += [rk0]
+            extra_names += ["rank0"]
+            kw["max_rows0"] = ws.max_rows0
         if frontier_gate:
             in_specs += [spec, spec]
             args += [frontier, ws.entry_vertex]
@@ -770,16 +885,20 @@ def dist_lpa_step(mesh, ws: DistLPAWorkspace, *, axis_names=None,
 
 def dist_lpa(mesh, ws: DistLPAWorkspace, rho: int = 8, tau: float = 0.05,
              max_iters: int = 20, engine: str | None = None,
-             method: str = "mg", frontier_gate: bool = False):
+             method: str = "mg", rescan: bool = False,
+             frontier_gate: bool = False):
     """Run distributed LPA to convergence. Returns (labels [N], iterations).
 
-    ``method`` selects the sketch ("mg" | "bm"), ``engine`` the fold
-    backend — both uniform with the single-host driver.
+    ``method`` selects the sketch ("mg" | "bm"), ``rescan`` the MG
+    double-scan ablation (§4.4), ``engine`` the fold backend — all
+    uniform with the single-host driver (they key the same
+    ``FoldRequest``, DESIGN.md §14).
     ``frontier_gate`` turns on per-shard dense frontier gating (the
     distributed analogue of ``LPAConfig.frontier_gate``): settled vertices
     keep their label, and Pick-Less iterations union the previous frontier
     into the marks so deferred vertices stay queued (§8.5)."""
     step = jax.jit(dist_lpa_step(mesh, ws, engine=engine, method=method,
+                                 rescan=rescan,
                                  frontier_gate=frontier_gate))
     labels = ws.init_labels
     n = ws.n_nodes

@@ -1,17 +1,26 @@
 """FoldEngine: uniform backend selection for the sketch folds.
 
-Every engine computes BOTH of the paper's sketches through the same
-interface — selection is per ``(sketch, backend)``:
+Every engine computes BOTH of the paper's sketches through ONE entry
+point: consumers build a :class:`repro.core.fold_program.FoldRequest`
+(family + mode + rescan + traced payload) and call :meth:`FoldEngine.run`,
+which routes it to the backend's family executor and returns a
+:class:`FoldOutcome` (DESIGN.md §14). The family executors are
 
-  * **MG** (``mg_candidates``/``mg_select``/``mg_rescan``): fold the
-    neighbor entries into per-vertex k-slot Misra-Gries sketches, then pick
-    each vertex's winning label (optionally re-scoring the candidates with
-    the exact double-scan pass, paper §4.4);
+  * **MG** (``mg_select``, plus ``mg_candidates`` for raw candidate
+    sets): fold the neighbor entries into per-vertex k-slot Misra-Gries
+    sketches, then pick each vertex's winning label;
+  * **MG + rescan** (``mg_rescan``): the double-scan ablation — re-score
+    the k candidates exactly against the round-0 neighborhood before
+    selecting (paper §4.4);
   * **BM** (``bm_fold_plan``): fold round 0 into per-row weighted
     Boyer-Moore majority states and max-reduce-merge them per vertex
     (paper Alg. 3 / §4.7).
 
-Four interchangeable backends compute them:
+Sparse (frontier-compacted) execution is not a separate method family:
+``run`` lowers ``mode="sparse"`` to a ``RoundSelection`` threaded into
+the same executors, and the fused/streamed kernel drivers compact their
+row/window grids from it (DESIGN.md §8.5). Four interchangeable backends
+compute the executors:
 
   * ``jnp``           — dense reference (repro.core.sketch); also hosts the
                         ``exact_weighted`` MG variant (DESIGN.md §8.4).
@@ -34,6 +43,11 @@ Four interchangeable backends compute them:
                         dispatch counts, O(window) residency — for graphs
                         past the fused VMEM budget (DESIGN.md §10/§11).
 
+Dispatch accounting is request-keyed the same way: ONE
+``dispatches_per_iter(plan, aux_plan, request)`` per engine, verified
+symbolically per request by kernelcheck R3, with routing closure over the
+request space enforced by R7 (DESIGN.md §12).
+
 ``"auto"`` resolves to ``pallas_fused`` or ``pallas_stream`` per graph by
 checking the round-0 entry volume against a configurable VMEM budget
 (:func:`resolve_auto`).
@@ -53,6 +67,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 
 from repro.core import sketch as sketch_lib
+from repro.core.fold_program import FoldOutcome, FoldRequest, RoundSelection
 from repro.graphs.csr import (FoldPlan, fused_dispatches, plan_dispatches,
                               plan_round0_dispatches, streamed_dispatches)
 
@@ -80,13 +95,56 @@ def _require_plan(aux_plan, engine: str, plan_name: str):
 
 
 class FoldEngine:
-    """Backend-neutral interface; subclasses wire the actual kernels."""
+    """Backend-neutral interface; subclasses wire the actual kernels.
+
+    Consumers go through :meth:`run` with a :class:`FoldRequest`; the
+    family executors below are the per-backend implementation surface
+    (and stay callable directly where a consumer wants one family with
+    no routing, e.g. the distributed per-shard folds).
+    """
 
     name: str = "base"
     #: does mg_select consume the FusedFoldPlan (vs the bucketed FoldPlan)?
     uses_fused_plan: bool = False
     #: does mg_select consume the StreamedFoldPlan?
     uses_stream_plan: bool = False
+
+    # -- the routed entry point (DESIGN.md §14) ---------------------------
+    def run(self, plan: FoldPlan, aux_plan, request: FoldRequest,
+            entry_labels, entry_weights, labels) -> FoldOutcome:
+        """Execute one fold iteration described by ``request``.
+
+        Routing is total over the request space (kernelcheck R7):
+        ``family="bm"`` -> :meth:`bm_fold_plan` (with the -1 sentinel
+        resolved into per-vertex wants here, once), ``rescan=True`` ->
+        :meth:`mg_rescan`, otherwise :meth:`mg_select`. ``mode="sparse"``
+        lowers the request's frontier/cap into a :class:`RoundSelection`
+        threaded to the executor; the caller (core.lpa's host loop)
+        guarantees the concrete frontier fits ``cap_rows`` and swaps the
+        request back to dense on overflow, so the engine never sees an
+        overflowing frontier. Contract on every engine: ``want`` is
+        bit-identical to the dense request's on frontier vertices —
+        lpa_move masks off-frontier moves either way.
+        """
+        selection = None
+        if request.mode == "sparse":
+            selection = RoundSelection(frontier=request.frontier,
+                                       cap_rows=request.cap_rows)
+        if request.family == "bm":
+            best, weight = self.bm_fold_plan(plan, aux_plan, entry_labels,
+                                             entry_weights, labels,
+                                             selection=selection)
+            want = jnp.where(best >= 0, best, labels)
+            return FoldOutcome(want=want, bm_label=best, bm_weight=weight)
+        if request.rescan:
+            want = self.mg_rescan(plan, aux_plan, entry_labels,
+                                  entry_weights, labels, request.seed,
+                                  selection=selection)
+        else:
+            want = self.mg_select(plan, aux_plan, entry_labels,
+                                  entry_weights, labels, request.seed,
+                                  selection=selection)
+        return FoldOutcome(want=want)
 
     # -- tile-level folds (the distributed path and run_bm_plan plug in
     #    here; signatures match repro.core.sketch.{mg,bm}_fold_tile) -------
@@ -96,11 +154,15 @@ class FoldEngine:
     def bm_fold_tile(self, labels, weights, init_label=None):
         raise NotImplementedError
 
-    # -- plan-level MG iteration ------------------------------------------
+    # -- family executors --------------------------------------------------
     # ``aux_plan`` is the engine's auxiliary plan: a FusedFoldPlan for
     # pallas_fused, a StreamedFoldPlan for pallas_stream, ignored (None ok)
     # by the bucketed jnp/pallas engines. The driver picks the right one
     # from the workspace via uses_fused_plan/uses_stream_plan.
+    # ``selection=None`` means dense (fold every plan row); a
+    # RoundSelection compacts the fused/streamed grids to the frontier
+    # (the bucketed jnp/pallas layouts have no row compaction and compute
+    # the dense fold either way — correct, zero FLOP savings).
     def mg_candidates(self, plan: FoldPlan, aux_plan,
                       entry_labels, entry_weights
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -108,13 +170,15 @@ class FoldEngine:
         raise NotImplementedError
 
     def mg_select(self, plan: FoldPlan, aux_plan,
-                  entry_labels, entry_weights, labels, seed) -> jnp.ndarray:
+                  entry_labels, entry_weights, labels, seed, *,
+                  selection: Optional[RoundSelection] = None) -> jnp.ndarray:
         """Full iteration: fold + move selection -> wanted label per vertex
         ([N] int32)."""
         raise NotImplementedError
 
     def mg_rescan(self, plan: FoldPlan, aux_plan,
-                  entry_labels, entry_weights, labels, seed) -> jnp.ndarray:
+                  entry_labels, entry_weights, labels, seed, *,
+                  selection: Optional[RoundSelection] = None) -> jnp.ndarray:
         """Full double-scan iteration (paper §4.4): MG fold, then re-read
         the round-0 neighborhood to score the k candidates *exactly*, then
         select -> wanted label per vertex ([N] int32). Bit-identical to
@@ -122,9 +186,9 @@ class FoldEngine:
         engine."""
         raise NotImplementedError
 
-    # -- plan-level BM iteration ------------------------------------------
     def bm_fold_plan(self, plan: FoldPlan, aux_plan,
-                     entry_labels, entry_weights, labels
+                     entry_labels, entry_weights, labels, *,
+                     selection: Optional[RoundSelection] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """νBM iteration core: fold round 0 into per-row weighted
         Boyer-Moore partial states (incumbent-initialized, paper Alg. 3
@@ -134,58 +198,13 @@ class FoldEngine:
         engine."""
         raise NotImplementedError
 
-    def dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
-        """Pallas kernel dispatches one MG iteration costs on this engine."""
-        raise NotImplementedError
-
-    def bm_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
-        """Pallas kernel dispatches one BM iteration costs on this engine."""
-        raise NotImplementedError
-
-    def rescan_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
-        """Pallas kernel dispatches one double-scan MG iteration costs."""
-        raise NotImplementedError
-
-    # -- sparse frontier path (DESIGN.md §8.5) ----------------------------
-    # ``frontier`` [N] bool marks the active vertices; ``cap_rows`` is the
-    # static per-round active-row capacity (LPAConfig.frontier_cap_rows).
-    # The caller (core.lpa's host loop) guarantees the concrete frontier
-    # fits the capacity (csr.fused_active_rows /
-    # csr.streamed_active_windows) and falls back to the dense gated
-    # methods on overflow, so the engine never sees an overflowing
-    # frontier. Contract on every engine: the returned wanted label is
-    # bit-identical to the dense method's on frontier vertices — lpa_move
-    # masks off-frontier moves either way.
-
-    def mg_select_sparse(self, plan: FoldPlan, aux_plan, entry_labels,
-                         entry_weights, labels, seed, frontier,
-                         cap_rows: int) -> jnp.ndarray:
-        """Frontier-compacted mg_select: fold only active rows."""
-        raise NotImplementedError
-
-    def mg_rescan_sparse(self, plan: FoldPlan, aux_plan, entry_labels,
-                         entry_weights, labels, seed, frontier,
-                         cap_rows: int) -> jnp.ndarray:
-        """Frontier-compacted double-scan iteration."""
-        raise NotImplementedError
-
-    def bm_fold_plan_sparse(self, plan: FoldPlan, aux_plan, entry_labels,
-                            entry_weights, labels, frontier, cap_rows: int
-                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Frontier-compacted νBM iteration core."""
-        raise NotImplementedError
-
-    def sparse_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
-        """Pallas dispatches one sparse MG iteration costs."""
-        raise NotImplementedError
-
-    def sparse_bm_dispatches_per_iter(self, plan: FoldPlan, aux_plan) -> int:
-        """Pallas dispatches one sparse BM iteration costs."""
-        raise NotImplementedError
-
-    def sparse_rescan_dispatches_per_iter(self, plan: FoldPlan,
-                                          aux_plan) -> int:
-        """Pallas dispatches one sparse double-scan iteration costs."""
+    def dispatches_per_iter(self, plan: FoldPlan, aux_plan,
+                            request: FoldRequest) -> int:
+        """Pallas kernel dispatches one ``request`` iteration costs on
+        this engine. Request-keyed like :meth:`run`; ``mode`` never
+        changes the count (sparse compacts grids inside the same
+        dispatches). Verified symbolically per request by kernelcheck
+        R3."""
         raise NotImplementedError
 
 
@@ -213,58 +232,26 @@ class JnpEngine(FoldEngine):
         return sketch_lib.scatter_rows(plan, s_k, s_v)
 
     def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
+        # selection ignored: dense bucketed fold, gate-masked in lpa_move
         s_k, s_v = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
                                           fold_tile=self.mg_fold_tile)
         return sketch_lib.select_best(plan, s_k, s_v, labels, seed)
 
     def mg_rescan(self, plan, fused_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         s_k, _ = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
                                         fold_tile=self.mg_fold_tile)
         return sketch_lib.rescan_candidates(plan, s_k, entry_labels,
                                             entry_weights, labels, seed)
 
     def bm_fold_plan(self, plan, fused_plan, entry_labels, entry_weights,
-                     labels):
+                     labels, *, selection=None):
         return sketch_lib.run_bm_plan(plan, entry_labels, entry_weights,
                                       labels, fold_tile=self.bm_fold_tile)
 
-    def dispatches_per_iter(self, plan, fused_plan):
-        return 0  # pure XLA — no pallas dispatches
-
-    def bm_dispatches_per_iter(self, plan, fused_plan):
-        return 0
-
-    def rescan_dispatches_per_iter(self, plan, fused_plan):
-        return 0
-
-    # The bucketed dense layout has no row compaction: the sparse entry
-    # points compute the dense fold (gate-masked in lpa_move) — correct but
-    # with zero FLOP savings. Only the fused/streamed engines skip rows.
-    def mg_select_sparse(self, plan, fused_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        return self.mg_select(plan, fused_plan, entry_labels, entry_weights,
-                              labels, seed)
-
-    def mg_rescan_sparse(self, plan, fused_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        return self.mg_rescan(plan, fused_plan, entry_labels, entry_weights,
-                              labels, seed)
-
-    def bm_fold_plan_sparse(self, plan, fused_plan, entry_labels,
-                            entry_weights, labels, frontier, cap_rows):
-        return self.bm_fold_plan(plan, fused_plan, entry_labels,
-                                 entry_weights, labels)
-
-    def sparse_dispatches_per_iter(self, plan, fused_plan):
-        return 0
-
-    def sparse_bm_dispatches_per_iter(self, plan, fused_plan):
-        return 0
-
-    def sparse_rescan_dispatches_per_iter(self, plan, fused_plan):
-        return 0
+    def dispatches_per_iter(self, plan, fused_plan, request):
+        return 0  # pure XLA — no pallas dispatches, whatever the request
 
 
 class PallasEngine(FoldEngine):
@@ -287,13 +274,14 @@ class PallasEngine(FoldEngine):
         return sketch_lib.scatter_rows(plan, s_k, s_v)
 
     def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
+        # selection ignored: dense bucketed fold, gate-masked in lpa_move
         s_k, s_v = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
                                           fold_tile=self.mg_fold_tile)
         return sketch_lib.select_best(plan, s_k, s_v, labels, seed)
 
     def mg_rescan(self, plan, fused_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         # the second (re-scoring) scan is an XLA pass over the bucketed
         # round-0 tiles; only the MG fold itself dispatches kernels here
         s_k, _ = sketch_lib.run_mg_plan(plan, entry_labels, entry_weights,
@@ -302,43 +290,15 @@ class PallasEngine(FoldEngine):
                                             entry_weights, labels, seed)
 
     def bm_fold_plan(self, plan, fused_plan, entry_labels, entry_weights,
-                     labels):
+                     labels, *, selection=None):
         return sketch_lib.run_bm_plan(plan, entry_labels, entry_weights,
                                       labels, fold_tile=self.bm_fold_tile)
 
-    def dispatches_per_iter(self, plan, fused_plan):
-        return plan_dispatches(plan)  # one per bucket per round
-
-    def bm_dispatches_per_iter(self, plan, fused_plan):
-        return plan_round0_dispatches(plan)  # one per round-0 bucket
-
-    def rescan_dispatches_per_iter(self, plan, fused_plan):
-        return plan_dispatches(plan)  # fold kernels; the rescan is XLA
-
-    # No row compaction in the bucketed layout (see JnpEngine): the sparse
-    # entry points run the dense fold, gate-masked in lpa_move.
-    def mg_select_sparse(self, plan, fused_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        return self.mg_select(plan, fused_plan, entry_labels, entry_weights,
-                              labels, seed)
-
-    def mg_rescan_sparse(self, plan, fused_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        return self.mg_rescan(plan, fused_plan, entry_labels, entry_weights,
-                              labels, seed)
-
-    def bm_fold_plan_sparse(self, plan, fused_plan, entry_labels,
-                            entry_weights, labels, frontier, cap_rows):
-        return self.bm_fold_plan(plan, fused_plan, entry_labels,
-                                 entry_weights, labels)
-
-    def sparse_dispatches_per_iter(self, plan, fused_plan):
-        return plan_dispatches(plan)  # dense fallback: same dispatches
-
-    def sparse_bm_dispatches_per_iter(self, plan, fused_plan):
-        return plan_round0_dispatches(plan)
-
-    def sparse_rescan_dispatches_per_iter(self, plan, fused_plan):
+    def dispatches_per_iter(self, plan, fused_plan, request):
+        if request.family == "bm":
+            return plan_round0_dispatches(plan)  # one per round-0 bucket
+        # mg, with or without rescan: one per bucket per round (the
+        # rescan's second scan is XLA, not a kernel dispatch)
         return plan_dispatches(plan)
 
 
@@ -366,68 +326,33 @@ class PallasFusedEngine(FoldEngine):
                                     fused_plan.row_to_vertex, s_k, s_v)
 
     def mg_select(self, plan, fused_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         from repro.kernels.mg_sketch.fused import select_best_fused
         _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
         return select_best_fused(fused_plan, entry_labels, entry_weights,
-                                 labels, seed)
+                                 labels, seed, selection=selection)
 
     def mg_rescan(self, plan, fused_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         from repro.kernels.mg_sketch.fused import rescan_select_fused
         _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
         return rescan_select_fused(fused_plan, entry_labels, entry_weights,
-                                   labels, seed)
+                                   labels, seed, selection=selection)
 
     def bm_fold_plan(self, plan, fused_plan, entry_labels, entry_weights,
-                     labels):
+                     labels, *, selection=None):
         from repro.kernels.mg_sketch.fused import run_bm_plan_fused
         _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
         return run_bm_plan_fused(fused_plan, entry_labels, entry_weights,
-                                 labels)
+                                 labels, selection=selection)
 
-    def dispatches_per_iter(self, plan, fused_plan):
+    def dispatches_per_iter(self, plan, fused_plan, request):
+        if request.family == "bm":
+            return 1  # the BM fold only ever walks round 0
+        if request.rescan:
+            # all fold rounds + one in-kernel rescan of round 0
+            return fused_dispatches(fused_plan) + 1
         return fused_dispatches(fused_plan)  # n_rounds (last one selects)
-
-    def bm_dispatches_per_iter(self, plan, fused_plan):
-        return 1  # the BM fold only ever walks round 0
-
-    def rescan_dispatches_per_iter(self, plan, fused_plan):
-        # all fold rounds + one in-kernel rescan of round 0
-        return fused_dispatches(fused_plan) + 1
-
-    def mg_select_sparse(self, plan, fused_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        from repro.kernels.mg_sketch.fused import select_best_fused_sparse
-        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
-        return select_best_fused_sparse(fused_plan, entry_labels,
-                                        entry_weights, labels, seed,
-                                        frontier, cap_rows)
-
-    def mg_rescan_sparse(self, plan, fused_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        from repro.kernels.mg_sketch.fused import rescan_select_fused_sparse
-        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
-        return rescan_select_fused_sparse(fused_plan, entry_labels,
-                                          entry_weights, labels, seed,
-                                          frontier, cap_rows)
-
-    def bm_fold_plan_sparse(self, plan, fused_plan, entry_labels,
-                            entry_weights, labels, frontier, cap_rows):
-        from repro.kernels.mg_sketch.fused import run_bm_plan_fused_sparse
-        _require_plan(fused_plan, 'pallas_fused', 'FusedFoldPlan')
-        return run_bm_plan_fused_sparse(fused_plan, entry_labels,
-                                        entry_weights, labels, frontier,
-                                        cap_rows)
-
-    def sparse_dispatches_per_iter(self, plan, fused_plan):
-        return fused_dispatches(fused_plan)  # same rounds, compacted grids
-
-    def sparse_bm_dispatches_per_iter(self, plan, fused_plan):
-        return 1
-
-    def sparse_rescan_dispatches_per_iter(self, plan, fused_plan):
-        return fused_dispatches(fused_plan) + 1
 
 
 def _scatter_padded_rows(n: int, k: int, row_to_vertex, s_k, s_v
@@ -476,71 +401,34 @@ class PallasStreamEngine(FoldEngine):
                                     stream_plan.row_to_vertex, s_k, s_v)
 
     def mg_select(self, plan, stream_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         from repro.kernels.mg_sketch.streaming import select_best_stream
         _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
         return select_best_stream(stream_plan, entry_labels, entry_weights,
-                                  labels, seed)
+                                  labels, seed, selection=selection)
 
     def mg_rescan(self, plan, stream_plan, entry_labels, entry_weights,
-                  labels, seed):
+                  labels, seed, *, selection=None):
         from repro.kernels.mg_sketch.streaming import rescan_select_stream
         _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
         return rescan_select_stream(stream_plan, entry_labels,
-                                    entry_weights, labels, seed)
+                                    entry_weights, labels, seed,
+                                    selection=selection)
 
     def bm_fold_plan(self, plan, stream_plan, entry_labels, entry_weights,
-                     labels):
+                     labels, *, selection=None):
         from repro.kernels.mg_sketch.streaming import run_bm_plan_stream
         _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
         return run_bm_plan_stream(stream_plan, entry_labels, entry_weights,
-                                  labels)
+                                  labels, selection=selection)
 
-    def dispatches_per_iter(self, plan, stream_plan):
+    def dispatches_per_iter(self, plan, stream_plan, request):
+        if request.family == "bm":
+            return 1  # one dispatch; the round-0 window grid lives inside
+        if request.rescan:
+            # all fold rounds + one windowed in-kernel rescan of round 0
+            return streamed_dispatches(stream_plan) + 1
         return streamed_dispatches(stream_plan)  # n_rounds (last selects)
-
-    def bm_dispatches_per_iter(self, plan, stream_plan):
-        return 1  # one dispatch; the round-0 window grid lives inside it
-
-    def rescan_dispatches_per_iter(self, plan, stream_plan):
-        # all fold rounds + one windowed in-kernel rescan of round 0
-        return streamed_dispatches(stream_plan) + 1
-
-    def mg_select_sparse(self, plan, stream_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        from repro.kernels.mg_sketch.streaming import \
-            select_best_stream_sparse
-        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
-        return select_best_stream_sparse(stream_plan, entry_labels,
-                                         entry_weights, labels, seed,
-                                         frontier, cap_rows)
-
-    def mg_rescan_sparse(self, plan, stream_plan, entry_labels,
-                         entry_weights, labels, seed, frontier, cap_rows):
-        from repro.kernels.mg_sketch.streaming import \
-            rescan_select_stream_sparse
-        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
-        return rescan_select_stream_sparse(stream_plan, entry_labels,
-                                           entry_weights, labels, seed,
-                                           frontier, cap_rows)
-
-    def bm_fold_plan_sparse(self, plan, stream_plan, entry_labels,
-                            entry_weights, labels, frontier, cap_rows):
-        from repro.kernels.mg_sketch.streaming import \
-            run_bm_plan_stream_sparse
-        _require_plan(stream_plan, 'pallas_stream', 'StreamedFoldPlan')
-        return run_bm_plan_stream_sparse(stream_plan, entry_labels,
-                                         entry_weights, labels, frontier,
-                                         cap_rows)
-
-    def sparse_dispatches_per_iter(self, plan, stream_plan):
-        return streamed_dispatches(stream_plan)  # compacted window grids
-
-    def sparse_bm_dispatches_per_iter(self, plan, stream_plan):
-        return 1
-
-    def sparse_rescan_dispatches_per_iter(self, plan, stream_plan):
-        return streamed_dispatches(stream_plan) + 1
 
 
 #: Concrete fold backends, resolvable by name. ``"auto"`` additionally

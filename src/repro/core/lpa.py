@@ -30,10 +30,11 @@ unprocessed-frontier of paper Alg. 1 l. 31 is tracked every iteration
 gates the move step so settled vertices (no changed neighbor) keep their
 label. ``frontier_sparse`` additionally *executes* the gate: each
 iteration the host checks the concrete frontier against a static row
-capacity and, when it fits, runs a second jitted mover whose engine
-compacts the active fold rows and grids only over them — the skipped-row
-savings the gate alone never bought (DESIGN.md §8.5;
-``LPAResult.work_rows_history`` records the rows each iteration folded).
+capacity and, when it fits, swaps the mover's static ``FoldRequest`` to
+``mode="sparse"`` so the engine compacts the active fold rows and grids
+only over them — the skipped-row savings the gate alone never bought
+(DESIGN.md §8.5/§14; ``LPAResult.work_rows_history`` records the rows
+each iteration folded).
 """
 from __future__ import annotations
 
@@ -47,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.core.exact import exact_choose
 from repro.core.fold_engine import get_engine, resolve_auto
+from repro.core.fold_program import FoldRequest
 from repro.graphs.csr import (CSRGraph, FoldPlan, FusedFoldPlan,
                               StreamedFoldPlan, build_fold_plan,
                               build_fused_fold_plan,
@@ -169,13 +171,13 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     the hash tie-breaking (DESIGN.md §8 — the synchronous stand-in for the
     async/hashtable-order tie randomness of the GPU implementation).
     ``frontier`` (optional bool [N]) gates moves to unprocessed vertices
-    (config.frontier_gate). ``sparse``/``cap_rows`` are static: they route
-    the fold through the engine's frontier-compacted entry points, which
-    only compute active rows — the caller must have verified on the host
-    that the frontier fits ``cap_rows`` (``lpa``'s loop falls back to the
-    dense mover on overflow). Sparse wanted labels are bit-identical to
-    dense ones on frontier vertices and the gate masks the rest, so the
-    two movers commute.
+    (config.frontier_gate). ``sparse``/``cap_rows`` are static: they put
+    ``mode="sparse"`` on the FoldRequest so the engine compacts the fold
+    to active rows — the caller must have verified on the host that the
+    frontier fits ``cap_rows`` (``lpa``'s loop swaps the request back to
+    dense on overflow). Sparse wanted labels are bit-identical to dense
+    ones on frontier vertices and the gate masks the rest, so the two
+    request modes commute.
     """
     graph, plan = ws.graph, ws.plan
     if sparse and frontier is None:
@@ -206,35 +208,24 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     if config.method == "exact":
         want = exact_choose(ws.edge_src, labels[graph.indices],
                             graph.weights, graph.n_nodes, labels, seed)
-    elif config.method == "mg":
-        if config.rescan:
-            # double-scan ablation (paper Fig. 5): the second, exact
-            # re-scoring pass runs in-engine — one fused/streamed kernel
-            # dispatch on the Pallas engines, never a per-bucket fallback.
-            if sparse:
-                want = engine.mg_rescan_sparse(plan, aux, nbr_labels,
-                                               nbr_weights, labels, seed,
-                                               frontier, cap_rows)
-            else:
-                want = engine.mg_rescan(plan, aux, nbr_labels, nbr_weights,
-                                        labels, seed)
-        elif sparse:
-            want = engine.mg_select_sparse(plan, aux, nbr_labels,
-                                           nbr_weights, labels, seed,
-                                           frontier, cap_rows)
-        else:
-            want = engine.mg_select(plan, aux, nbr_labels,
-                                    nbr_weights, labels, seed)
-    elif config.method == "bm":
-        # incumbency is built into the fold's initial carry (Alg. 3 l. 13)
-        if sparse:
-            best, _ = engine.bm_fold_plan_sparse(plan, aux, nbr_labels,
-                                                 nbr_weights, labels,
-                                                 frontier, cap_rows)
-        else:
-            best, _ = engine.bm_fold_plan(plan, aux, nbr_labels,
-                                          nbr_weights, labels)
-        want = jnp.where(best >= 0, best, labels)
+    elif config.method in ("mg", "bm"):
+        # One declarative request routes every sketch combo — family
+        # (incl. the rescan ablation's in-engine second pass, paper
+        # Fig. 5) and mode (the sparse request compacts the fold to the
+        # frontier) — through FoldEngine.run (DESIGN.md §14). Built under
+        # trace: the routing fields are Python statics, seed/frontier are
+        # the traced operands.
+        request = FoldRequest(
+            family=config.method,
+            mode="sparse" if sparse else "dense",
+            rescan=config.method == "mg" and config.rescan,
+            aligned=bool(engine.uses_stream_plan and aux is not None
+                         and aux.aligned),
+            seed=seed,
+            frontier=frontier if sparse else None,
+            cap_rows=cap_rows if sparse else 0)
+        want = engine.run(plan, aux, request, nbr_labels, nbr_weights,
+                          labels).want
     else:
         raise ValueError(f"unknown method {config.method!r}")
 
@@ -333,16 +324,15 @@ def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
     cap_rows = (config.frontier_cap_rows
                 if config.frontier_cap_rows is not None
                 else _default_cap_rows(ws))
-    move = functools.partial(lpa_move, config=config)
-    move_sparse = functools.partial(lpa_move, config=config, sparse=True,
-                                    cap_rows=cap_rows)
+    move = functools.partial(lpa_move, config=config, cap_rows=cap_rows)
     frontier_fn = mark_frontier
     if jit:
-        # two independent jit artifacts — the dense/sparse choice is made
+        # ONE mover; the dense/sparse choice is a static argument decided
         # per iteration on the host (the frontier is concrete between
-        # iterations), never as a traced branch.
-        move = jax.jit(move)
-        move_sparse = jax.jit(move_sparse)
+        # iterations), never a traced branch — the overflow fallback is a
+        # request swap between two cached specializations of the same
+        # artifact.
+        move = jax.jit(move, static_argnames=("sparse",))
         frontier_fn = jax.jit(mark_frontier)
     n = graph.n_nodes
     labels = jnp.arange(n, dtype=jnp.int32)
@@ -365,12 +355,8 @@ def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
                                             cap_rows)
             if fits:
                 sparse, work = True, sparse_work
-        if sparse:
-            labels, changed = move_sparse(ws, labels, jnp.asarray(pl), seed,
-                                          frontier=gate)
-        else:
-            labels, changed = move(ws, labels, jnp.asarray(pl), seed,
-                                   frontier=gate)
+        labels, changed = move(ws, labels, jnp.asarray(pl), seed,
+                               frontier=gate, sparse=sparse)
         work_rows_history.append(work)
         if need_marks:
             if config.track_frontier:

@@ -326,48 +326,92 @@ def fused_select_round(rnd: FusedRound, entry_labels: jnp.ndarray,
 
 def run_mg_plan_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
                       entry_weights: jnp.ndarray,
-                      interpret: bool | None = None
+                      interpret: bool | None = None, *, selection=None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All fold rounds, one dispatch each. Returns the final-round padded
-    sketches in fused row order (map to vertices via plan.row_to_vertex)."""
+    sketches in fused row order (map to vertices via plan.row_to_vertex).
+
+    With a ``selection`` (RoundSelection) each round grids only over the
+    frontier-compacted active rows and scatters its sketches back to dense
+    row order (inactive rows hold empty sketches), so the output layout is
+    selection-invariant.
+    """
     if interpret is None:
         interpret = _interpret_default()
     labels, weights = entry_labels, entry_weights
-    for rnd in plan.rounds:
-        s_k, s_v = fused_fold_round(rnd, labels, weights, k=plan.k,
-                                    chunk=plan.chunk, interpret=interpret)
-        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    if selection is None:
+        for rnd in plan.rounds:
+            s_k, s_v = fused_fold_round(rnd, labels, weights, k=plan.k,
+                                        chunk=plan.chunk,
+                                        interpret=interpret)
+            labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    else:
+        for rnd in plan.rounds:
+            sub, idx, _ = _sparse_fused_round(rnd, selection.frontier,
+                                              selection.cap_rows)
+            c_k, c_v = fused_fold_round(sub, labels, weights, k=plan.k,
+                                        chunk=plan.chunk,
+                                        interpret=interpret)
+            rows = rnd.row_vertex.shape[0]
+            s_k = _scatter_sparse_rows(idx, c_k, rows, jnp.int32(-1))
+            s_v = _scatter_sparse_rows(idx, c_v, rows, jnp.float32(0.0))
+            labels, weights = s_k.reshape(-1), s_v.reshape(-1)
     return s_k, s_v
 
 
 def select_best_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
                       entry_weights: jnp.ndarray, labels: jnp.ndarray,
-                      seed: jnp.ndarray, interpret: bool | None = None
-                      ) -> jnp.ndarray:
+                      seed: jnp.ndarray, interpret: bool | None = None,
+                      *, selection=None) -> jnp.ndarray:
     """Full fused MG iteration: ``n_rounds`` dispatches, the last one fused
     with move selection. Bit-identical to ``run_mg_plan`` + ``select_best``
-    on the reference backend."""
+    on the reference backend.
+
+    With a ``selection``, every round grids only over the compacted active
+    rows: off-frontier vertices keep their label verbatim (never computed),
+    and on the frontier the wanted label is bit-identical to the dense run
+    — the caller must have checked ``selection.cap_rows`` fits the
+    frontier (``csr.fused_active_rows``).
+    """
     if interpret is None:
         interpret = _interpret_default()
     if plan.n_nodes == 0:
         return labels
     el, ew = entry_labels, entry_weights
-    for rnd in plan.rounds[:-1]:
-        s_k, s_v = fused_fold_round(rnd, el, ew, k=plan.k, chunk=plan.chunk,
-                                    interpret=interpret)
-        el, ew = s_k.reshape(-1), s_v.reshape(-1)
+    if selection is None:
+        for rnd in plan.rounds[:-1]:
+            s_k, s_v = fused_fold_round(rnd, el, ew, k=plan.k,
+                                        chunk=plan.chunk,
+                                        interpret=interpret)
+            el, ew = s_k.reshape(-1), s_v.reshape(-1)
+        last, rv = plan.rounds[-1], plan.row_to_vertex
+    else:
+        for rnd in plan.rounds[:-1]:
+            sub, idx, _ = _sparse_fused_round(rnd, selection.frontier,
+                                              selection.cap_rows)
+            c_k, c_v = fused_fold_round(sub, el, ew, k=plan.k,
+                                        chunk=plan.chunk,
+                                        interpret=interpret)
+            rows = rnd.row_vertex.shape[0]
+            el = _scatter_sparse_rows(idx, c_k, rows,
+                                      jnp.int32(-1)).reshape(-1)
+            ew = _scatter_sparse_rows(idx, c_v, rows,
+                                      jnp.float32(0.0)).reshape(-1)
+        last, _, rv = _sparse_fused_round(plan.rounds[-1],
+                                          selection.frontier,
+                                          selection.cap_rows)
     n = plan.n_nodes
-    rtv = plan.row_to_vertex
-    real = rtv >= 0
-    incumbents = jnp.where(real, labels[jnp.maximum(rtv, 0)], -1)
-    choice = fused_select_round(plan.rounds[-1], el, ew, incumbents, seed,
+    real = rv >= 0
+    incumbents = jnp.where(real, labels[jnp.maximum(rv, 0)], -1)
+    choice = fused_select_round(last, el, ew, incumbents, seed,
                                 k=plan.k, chunk=plan.chunk,
                                 interpret=interpret)
-    # [N] scatter of per-row winners (pad rows land in the dump slot);
-    # vertices with no fold rows (degree 0) keep their label — identical to
-    # choose_from_candidates with an empty candidate set.
+    # [N] scatter of per-row winners (pad/sentinel rows land in the dump
+    # slot); vertices with no fold rows — degree 0, or off-frontier under a
+    # selection — keep their label, identical to choose_from_candidates
+    # with an empty candidate set.
     buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
-    buf = buf.at[jnp.where(real, rtv, n)].set(
+    buf = buf.at[jnp.where(real, rv, n)].set(
         jnp.where(real, choice, -1))
     return buf[:n]
 
@@ -446,7 +490,7 @@ def run_bm_plan_generic(plan, entry_labels: jnp.ndarray,
 
 def run_bm_plan_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
                       entry_weights: jnp.ndarray, cur_labels: jnp.ndarray,
-                      interpret: bool | None = None
+                      interpret: bool | None = None, *, selection=None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused νBM iteration core: ONE kernel dispatch (vs one per round-0
     width bucket) + the max-reduce merge of per-row partial states.
@@ -454,11 +498,30 @@ def run_bm_plan_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
     replay the same entry sequences, and the merge
     (``sketch.bm_merge_rows``) is an order-insensitive max/min scatter.
     Returns per-vertex (label [N], weight [N]); no-entry vertices get -1.
+
+    With a ``selection``, the single dispatch grids only over active
+    round-0 rows. ``bm_merge_rows`` is order-insensitive over whatever
+    rows it is handed, and activity is per-vertex (every row of an active
+    vertex is in the compacted set), so active vertices merge the complete
+    bit-identical partial set; vertices with no compacted rows come back
+    (-1, 0) — the gate masks them, like dense off-frontier moves.
     """
     if interpret is None:
         interpret = _interpret_default()
-    return run_bm_plan_generic(plan, entry_labels, entry_weights,
-                               cur_labels, bm_fold_round_fused, interpret)
+    if selection is None:
+        return run_bm_plan_generic(plan, entry_labels, entry_weights,
+                                   cur_labels, bm_fold_round_fused,
+                                   interpret)
+    from repro.core.sketch import bm_init_rows, bm_merge_rows
+    n = plan.n_nodes
+    if n == 0:
+        return (jnp.full((0,), -1, jnp.int32), jnp.zeros((0,), jnp.float32))
+    sub, _, rv_c = _sparse_fused_round(plan.rounds[0], selection.frontier,
+                                       selection.cap_rows)
+    init = bm_init_rows(rv_c, cur_labels)
+    ck, wk = bm_fold_round_fused(sub, entry_labels, entry_weights, init,
+                                 chunk=plan.chunk, interpret=interpret)
+    return bm_merge_rows(n, cur_labels, rv_c, ck, wk)
 
 
 # ---------------------------------------------------------------------------
@@ -537,18 +600,48 @@ def rescan_select_generic(plan, entry_labels: jnp.ndarray,
 
 def rescan_select_fused(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
                         entry_weights: jnp.ndarray, labels: jnp.ndarray,
-                        seed: jnp.ndarray, interpret: bool | None = None
-                        ) -> jnp.ndarray:
+                        seed: jnp.ndarray, interpret: bool | None = None,
+                        *, selection=None) -> jnp.ndarray:
     """Full double-scan MG iteration on the fused engine: ``n_rounds``
     fold dispatches + ONE rescan dispatch (vs a per-bucket second walk).
     Bit-identical to the reference ``run_mg_plan`` + ``rescan_candidates``
     — shared accumulate order and merge (see ``sketch.rescan_candidates``).
+
+    With a ``selection``, the fold rounds and the rescan dispatch grid
+    only over compacted active rows. Inactive vertices end with an
+    all-empty candidate set (zero accumulated weight), so
+    ``choose_from_candidates`` keeps their label — bit-identical on the
+    frontier to the dense run.
     """
     if interpret is None:
         interpret = _interpret_default()
-    return rescan_select_generic(plan, entry_labels, entry_weights, labels,
-                                 seed, run_mg_plan_fused,
-                                 rescan_round_fused, interpret)
+    if selection is None:
+        return rescan_select_generic(plan, entry_labels, entry_weights,
+                                     labels, seed, run_mg_plan_fused,
+                                     rescan_round_fused, interpret)
+    from repro.core.sketch import choose_from_candidates, merge_rescan_partials
+    n, k = plan.n_nodes, plan.k
+    if n == 0:
+        return labels
+    s_k, _ = run_mg_plan_fused(plan, entry_labels, entry_weights,
+                               interpret=interpret, selection=selection)
+    rtv = plan.row_to_vertex
+    cand = jnp.full((n + 1, k), -1, jnp.int32).at[
+        jnp.where(rtv >= 0, rtv, n)].set(s_k)[:n]
+    sub0, idx0, rv0_c = _sparse_fused_round(plan.rounds[0],
+                                            selection.frontier,
+                                            selection.cap_rows)
+    cand_ext = jnp.concatenate([cand, jnp.full((1, k), -1, jnp.int32)])
+    cand_rows = cand_ext[jnp.where(rv0_c >= 0, rv0_c, n)]
+    parts_c = rescan_round_fused(sub0, entry_labels, entry_weights,
+                                 cand_rows, k=k, chunk=plan.chunk,
+                                 interpret=interpret)
+    rows0 = plan.rounds[0].row_vertex.shape[0]
+    parts = _scatter_sparse_rows(idx0, parts_c, rows0, jnp.float32(0.0))
+    acc = merge_rescan_partials(n, k, plan.max_rows0, plan.row_to_vertex0,
+                                plan.row_rank0, parts)
+    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc,
+                                  labels, seed)
 
 
 # ---------------------------------------------------------------------------
@@ -612,132 +705,3 @@ def _scatter_sparse_rows(idx: jnp.ndarray, values: jnp.ndarray, rows: int,
     """
     buf = jnp.full((rows + 1,) + values.shape[1:], fill, values.dtype)
     return buf.at[idx].set(values)[:rows]
-
-
-def run_mg_plan_fused_sparse(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
-                             entry_weights: jnp.ndarray,
-                             frontier: jnp.ndarray, cap_rows: int,
-                             interpret: bool | None = None
-                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """All fold rounds over compacted active rows, one dispatch each.
-
-    Returns the final-round padded sketches in DENSE fused row order
-    (inactive rows hold empty sketches), so ``plan.row_to_vertex`` maps
-    them exactly like the dense driver's output.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    labels, weights = entry_labels, entry_weights
-    for rnd in plan.rounds:
-        sub, idx, _ = _sparse_fused_round(rnd, frontier, cap_rows)
-        c_k, c_v = fused_fold_round(sub, labels, weights, k=plan.k,
-                                    chunk=plan.chunk, interpret=interpret)
-        rows = rnd.row_vertex.shape[0]
-        s_k = _scatter_sparse_rows(idx, c_k, rows, jnp.int32(-1))
-        s_v = _scatter_sparse_rows(idx, c_v, rows, jnp.float32(0.0))
-        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
-    return s_k, s_v
-
-
-def select_best_fused_sparse(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
-                             entry_weights: jnp.ndarray,
-                             labels: jnp.ndarray, seed: jnp.ndarray,
-                             frontier: jnp.ndarray, cap_rows: int,
-                             interpret: bool | None = None) -> jnp.ndarray:
-    """Sparse MG iteration: ``n_rounds`` dispatches over active rows only.
-
-    Off-frontier vertices keep their label verbatim (never computed); on
-    the frontier the wanted label is bit-identical to
-    ``select_best_fused`` — the caller must have checked ``cap_rows``
-    fits the frontier (``csr.fused_active_rows``).
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    if plan.n_nodes == 0:
-        return labels
-    el, ew = entry_labels, entry_weights
-    for rnd in plan.rounds[:-1]:
-        sub, idx, _ = _sparse_fused_round(rnd, frontier, cap_rows)
-        c_k, c_v = fused_fold_round(sub, el, ew, k=plan.k, chunk=plan.chunk,
-                                    interpret=interpret)
-        rows = rnd.row_vertex.shape[0]
-        el = _scatter_sparse_rows(idx, c_k, rows, jnp.int32(-1)).reshape(-1)
-        ew = _scatter_sparse_rows(idx, c_v, rows,
-                                  jnp.float32(0.0)).reshape(-1)
-    n = plan.n_nodes
-    sub, _, rv_c = _sparse_fused_round(plan.rounds[-1], frontier, cap_rows)
-    real = rv_c >= 0
-    incumbents = jnp.where(real, labels[jnp.maximum(rv_c, 0)], -1)
-    choice = fused_select_round(sub, el, ew, incumbents, seed, k=plan.k,
-                                chunk=plan.chunk, interpret=interpret)
-    # scatter per-active-row winners over the incumbent labels (sentinel
-    # rows fold empty, choose their -1 incumbent and land in the dump slot)
-    buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
-    buf = buf.at[jnp.where(real, rv_c, n)].set(
-        jnp.where(real, choice, -1))
-    return buf[:n]
-
-
-def run_bm_plan_fused_sparse(plan: FusedFoldPlan, entry_labels: jnp.ndarray,
-                             entry_weights: jnp.ndarray,
-                             cur_labels: jnp.ndarray, frontier: jnp.ndarray,
-                             cap_rows: int, interpret: bool | None = None
-                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Sparse νBM iteration core: ONE dispatch over active round-0 rows.
-
-    ``sketch.bm_merge_rows`` is an order-insensitive scatter over whatever
-    rows it is handed, and activity is per-vertex (every row of an active
-    vertex is in the compacted set), so active vertices merge the complete
-    bit-identical partial set; vertices with no compacted rows come back
-    (-1, 0) — the gate masks them, like dense off-frontier moves.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    from repro.core.sketch import bm_init_rows, bm_merge_rows
-    n = plan.n_nodes
-    if n == 0:
-        return (jnp.full((0,), -1, jnp.int32), jnp.zeros((0,), jnp.float32))
-    sub, _, rv_c = _sparse_fused_round(plan.rounds[0], frontier, cap_rows)
-    init = bm_init_rows(rv_c, cur_labels)
-    ck, wk = bm_fold_round_fused(sub, entry_labels, entry_weights, init,
-                                 chunk=plan.chunk, interpret=interpret)
-    return bm_merge_rows(n, cur_labels, rv_c, ck, wk)
-
-
-def rescan_select_fused_sparse(plan: FusedFoldPlan,
-                               entry_labels: jnp.ndarray,
-                               entry_weights: jnp.ndarray,
-                               labels: jnp.ndarray, seed: jnp.ndarray,
-                               frontier: jnp.ndarray, cap_rows: int,
-                               interpret: bool | None = None) -> jnp.ndarray:
-    """Sparse double-scan MG iteration: ``n_rounds`` sparse fold dispatches
-    + ONE rescan dispatch over active round-0 rows. Inactive vertices end
-    with an all-empty candidate set (zero accumulated weight), so
-    ``choose_from_candidates`` keeps their label — bit-identical on the
-    frontier to ``rescan_select_fused``.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    from repro.core.sketch import choose_from_candidates, merge_rescan_partials
-    n, k = plan.n_nodes, plan.k
-    if n == 0:
-        return labels
-    s_k, _ = run_mg_plan_fused_sparse(plan, entry_labels, entry_weights,
-                                      frontier, cap_rows,
-                                      interpret=interpret)
-    rtv = plan.row_to_vertex
-    cand = jnp.full((n + 1, k), -1, jnp.int32).at[
-        jnp.where(rtv >= 0, rtv, n)].set(s_k)[:n]
-    sub0, idx0, rv0_c = _sparse_fused_round(plan.rounds[0], frontier,
-                                            cap_rows)
-    cand_ext = jnp.concatenate([cand, jnp.full((1, k), -1, jnp.int32)])
-    cand_rows = cand_ext[jnp.where(rv0_c >= 0, rv0_c, n)]
-    parts_c = rescan_round_fused(sub0, entry_labels, entry_weights,
-                                 cand_rows, k=k, chunk=plan.chunk,
-                                 interpret=interpret)
-    rows0 = plan.rounds[0].row_vertex.shape[0]
-    parts = _scatter_sparse_rows(idx0, parts_c, rows0, jnp.float32(0.0))
-    acc = merge_rescan_partials(n, k, plan.max_rows0, plan.row_to_vertex0,
-                                plan.row_rank0, parts)
-    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc,
-                                  labels, seed)

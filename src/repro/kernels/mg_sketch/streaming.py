@@ -196,7 +196,7 @@ def stream_select_round(rnd: StreamedRound, entry_labels: jnp.ndarray,
 
 def run_mg_plan_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
                        entry_weights: jnp.ndarray,
-                       interpret: bool | None = None
+                       interpret: bool | None = None, *, selection=None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """All fold rounds, one streamed dispatch each.
 
@@ -207,49 +207,91 @@ def run_mg_plan_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
     the final-round padded sketches ([last n_windows * tile_r, k] labels,
     weights) in window-slot order — map to vertices via
     ``plan.row_to_vertex``.
+
+    With a ``selection`` (RoundSelection) each round grids only over the
+    frontier-compacted active windows and scatters its sketches back to
+    dense window-slot order, so the output layout is selection-invariant.
     """
     if interpret is None:
         interpret = _interpret_default()
     labels, weights = entry_labels, entry_weights
-    for rnd in plan.rounds:
-        s_k, s_v = stream_fold_round(rnd, labels, weights, k=plan.k,
-                                     chunk=plan.chunk, interpret=interpret)
-        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    if selection is None:
+        for rnd in plan.rounds:
+            s_k, s_v = stream_fold_round(rnd, labels, weights, k=plan.k,
+                                         chunk=plan.chunk,
+                                         interpret=interpret)
+            labels, weights = s_k.reshape(-1), s_v.reshape(-1)
+    else:
+        for rnd in plan.rounds:
+            sub, widx, _ = _sparse_stream_round(rnd, selection.frontier,
+                                                selection.cap_rows)
+            c_k, c_v = stream_fold_round(sub, labels, weights, k=plan.k,
+                                         chunk=plan.chunk,
+                                         interpret=interpret)
+            s_k = _scatter_sparse_windows(widx, c_k, rnd.n_windows,
+                                          rnd.tile_r, jnp.int32(-1))
+            s_v = _scatter_sparse_windows(widx, c_v, rnd.n_windows,
+                                          rnd.tile_r, jnp.float32(0.0))
+            labels, weights = s_k.reshape(-1), s_v.reshape(-1)
     return s_k, s_v
 
 
 def select_best_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
                        entry_weights: jnp.ndarray, labels: jnp.ndarray,
-                       seed: jnp.ndarray, interpret: bool | None = None
-                       ) -> jnp.ndarray:
+                       seed: jnp.ndarray, interpret: bool | None = None,
+                       *, selection=None) -> jnp.ndarray:
     """Full streamed MG iteration: ``n_rounds`` dispatches, the last fused
     with move selection. Bit-identical to ``run_mg_plan`` + ``select_best``
     on the reference backend (and to ``fused.select_best_fused``).
 
     ``labels`` [N] int32 are the incumbent vertex labels; returns the
     wanted label per vertex [N] int32 (degree-0 vertices keep theirs).
+
+    With a ``selection``, every round grids only over the compacted active
+    windows: bit-identical on the frontier to the dense run; off-frontier
+    wanted labels may differ (inactive rows sharing an active window
+    compute, others carry through) — the frontier gate masks both, exactly
+    as it masks the dense mover's off-frontier moves.
     """
     if interpret is None:
         interpret = _interpret_default()
     if plan.n_nodes == 0:
         return labels
     el, ew = entry_labels, entry_weights
-    for rnd in plan.rounds[:-1]:
-        s_k, s_v = stream_fold_round(rnd, el, ew, k=plan.k, chunk=plan.chunk,
-                                     interpret=interpret)
-        el, ew = s_k.reshape(-1), s_v.reshape(-1)
+    if selection is None:
+        for rnd in plan.rounds[:-1]:
+            s_k, s_v = stream_fold_round(rnd, el, ew, k=plan.k,
+                                         chunk=plan.chunk,
+                                         interpret=interpret)
+            el, ew = s_k.reshape(-1), s_v.reshape(-1)
+        last, rv = plan.rounds[-1], plan.row_to_vertex
+    else:
+        for rnd in plan.rounds[:-1]:
+            sub, widx, _ = _sparse_stream_round(rnd, selection.frontier,
+                                                selection.cap_rows)
+            c_k, c_v = stream_fold_round(sub, el, ew, k=plan.k,
+                                         chunk=plan.chunk,
+                                         interpret=interpret)
+            el = _scatter_sparse_windows(widx, c_k, rnd.n_windows,
+                                         rnd.tile_r,
+                                         jnp.int32(-1)).reshape(-1)
+            ew = _scatter_sparse_windows(widx, c_v, rnd.n_windows,
+                                         rnd.tile_r,
+                                         jnp.float32(0.0)).reshape(-1)
+        last, _, rv = _sparse_stream_round(plan.rounds[-1],
+                                           selection.frontier,
+                                           selection.cap_rows)
     n = plan.n_nodes
-    rtv = plan.row_to_vertex
-    real = rtv >= 0
-    incumbents = jnp.where(real, labels[jnp.maximum(rtv, 0)], -1)
-    choice = stream_select_round(plan.rounds[-1], el, ew, incumbents, seed,
+    real = rv >= 0
+    incumbents = jnp.where(real, labels[jnp.maximum(rv, 0)], -1)
+    choice = stream_select_round(last, el, ew, incumbents, seed,
                                  k=plan.k, chunk=plan.chunk,
                                  interpret=interpret)
-    # [N] scatter of per-row winners (pad rows land in the dump slot);
-    # degree-0 vertices keep their label — identical to
-    # choose_from_candidates with an empty candidate set.
+    # [N] scatter of per-row winners (pad/sentinel rows land in the dump
+    # slot); degree-0 (or off-frontier) vertices keep their label —
+    # identical to choose_from_candidates with an empty candidate set.
     buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
-    buf = buf.at[jnp.where(real, rtv, n)].set(
+    buf = buf.at[jnp.where(real, rv, n)].set(
         jnp.where(real, choice, -1))
     return buf[:n]
 
@@ -326,7 +368,7 @@ def bm_fold_round_stream(rnd: StreamedRound, entry_labels: jnp.ndarray,
 
 def run_bm_plan_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
                        entry_weights: jnp.ndarray, cur_labels: jnp.ndarray,
-                       interpret: bool | None = None
+                       interpret: bool | None = None, *, selection=None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Streamed νBM iteration core: ONE dispatch (window grid inside) +
     the max-reduce merge of per-slot partial states. Bit-identical to
@@ -334,11 +376,29 @@ def run_bm_plan_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
     ``sketch.bm_merge_rows`` merge is order-insensitive). Per-step entry
     residency is the double-buffered window, independent of |E|. Returns
     per-vertex (label [N], weight [N]); no-entry vertices get -1.
+
+    With a ``selection``, the single dispatch grids only over active
+    round-0 windows. Active vertices merge their complete row set (every
+    row of an active vertex lives in an active window); vertices only
+    partially covered by active windows produce gate-masked off-frontier
+    values.
     """
     if interpret is None:
         interpret = _interpret_default()
-    return run_bm_plan_generic(plan, entry_labels, entry_weights,
-                               cur_labels, bm_fold_round_stream, interpret)
+    if selection is None:
+        return run_bm_plan_generic(plan, entry_labels, entry_weights,
+                                   cur_labels, bm_fold_round_stream,
+                                   interpret)
+    from repro.core.sketch import bm_init_rows, bm_merge_rows
+    n = plan.n_nodes
+    if n == 0:
+        return (jnp.full((0,), -1, jnp.int32), jnp.zeros((0,), jnp.float32))
+    sub, _, rv_c = _sparse_stream_round(plan.rounds[0], selection.frontier,
+                                        selection.cap_rows)
+    init = bm_init_rows(rv_c, cur_labels)
+    ck, wk = bm_fold_round_stream(sub, entry_labels, entry_weights, init,
+                                  chunk=plan.chunk, interpret=interpret)
+    return bm_merge_rows(n, cur_labels, rv_c, ck, wk)
 
 
 def rescan_round_stream(rnd: StreamedRound, entry_labels: jnp.ndarray,
@@ -378,18 +438,46 @@ def rescan_round_stream(rnd: StreamedRound, entry_labels: jnp.ndarray,
 
 def rescan_select_stream(plan: StreamedFoldPlan, entry_labels: jnp.ndarray,
                          entry_weights: jnp.ndarray, labels: jnp.ndarray,
-                         seed: jnp.ndarray, interpret: bool | None = None
-                         ) -> jnp.ndarray:
+                         seed: jnp.ndarray, interpret: bool | None = None,
+                         *, selection=None) -> jnp.ndarray:
     """Full double-scan MG iteration on the streaming engine: ``n_rounds``
     fold dispatches + ONE rescan dispatch, all with O(window) residency.
     Bit-identical to the reference ``run_mg_plan`` + ``rescan_candidates``
     (shared accumulate order and merge — see ``sketch.rescan_candidates``).
+
+    With a ``selection``, the fold rounds and the rescan dispatch grid
+    only over compacted active round-0 windows; off-frontier vertices keep
+    an all-empty candidate set and their label.
     """
     if interpret is None:
         interpret = _interpret_default()
-    return rescan_select_generic(plan, entry_labels, entry_weights, labels,
-                                 seed, run_mg_plan_stream,
-                                 rescan_round_stream, interpret)
+    if selection is None:
+        return rescan_select_generic(plan, entry_labels, entry_weights,
+                                     labels, seed, run_mg_plan_stream,
+                                     rescan_round_stream, interpret)
+    from repro.core.sketch import choose_from_candidates, merge_rescan_partials
+    n, k = plan.n_nodes, plan.k
+    if n == 0:
+        return labels
+    s_k, _ = run_mg_plan_stream(plan, entry_labels, entry_weights,
+                                interpret=interpret, selection=selection)
+    rtv = plan.row_to_vertex
+    cand = jnp.full((n + 1, k), -1, jnp.int32).at[
+        jnp.where(rtv >= 0, rtv, n)].set(s_k)[:n]
+    rnd0 = plan.rounds[0]
+    sub0, widx0, rv0_c = _sparse_stream_round(rnd0, selection.frontier,
+                                              selection.cap_rows)
+    cand_ext = jnp.concatenate([cand, jnp.full((1, k), -1, jnp.int32)])
+    cand_rows = cand_ext[jnp.where(rv0_c >= 0, rv0_c, n)]
+    parts_c = rescan_round_stream(sub0, entry_labels, entry_weights,
+                                  cand_rows, k=k, chunk=plan.chunk,
+                                  interpret=interpret)
+    parts = _scatter_sparse_windows(widx0, parts_c, rnd0.n_windows,
+                                    rnd0.tile_r, jnp.float32(0.0))
+    acc = merge_rescan_partials(n, k, plan.max_rows0, plan.row_to_vertex0,
+                                plan.row_rank0, parts)
+    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc,
+                                  labels, seed)
 
 
 # ---------------------------------------------------------------------------
@@ -464,127 +552,3 @@ def _scatter_sparse_windows(widx: jnp.ndarray, values: jnp.ndarray,
     buf = jnp.full(((n_win + 1) * tile_r,) + values.shape[1:], fill,
                    values.dtype)
     return buf.at[targets].set(values)[:n_win * tile_r]
-
-
-def run_mg_plan_stream_sparse(plan: StreamedFoldPlan,
-                              entry_labels: jnp.ndarray,
-                              entry_weights: jnp.ndarray,
-                              frontier: jnp.ndarray, cap_rows: int,
-                              interpret: bool | None = None
-                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """All fold rounds over compacted active windows, one dispatch each.
-    Returns the final-round padded sketches in DENSE window-slot order."""
-    if interpret is None:
-        interpret = _interpret_default()
-    labels, weights = entry_labels, entry_weights
-    for rnd in plan.rounds:
-        sub, widx, _ = _sparse_stream_round(rnd, frontier, cap_rows)
-        c_k, c_v = stream_fold_round(sub, labels, weights, k=plan.k,
-                                     chunk=plan.chunk, interpret=interpret)
-        s_k = _scatter_sparse_windows(widx, c_k, rnd.n_windows, rnd.tile_r,
-                                      jnp.int32(-1))
-        s_v = _scatter_sparse_windows(widx, c_v, rnd.n_windows, rnd.tile_r,
-                                      jnp.float32(0.0))
-        labels, weights = s_k.reshape(-1), s_v.reshape(-1)
-    return s_k, s_v
-
-
-def select_best_stream_sparse(plan: StreamedFoldPlan,
-                              entry_labels: jnp.ndarray,
-                              entry_weights: jnp.ndarray,
-                              labels: jnp.ndarray, seed: jnp.ndarray,
-                              frontier: jnp.ndarray, cap_rows: int,
-                              interpret: bool | None = None) -> jnp.ndarray:
-    """Sparse streamed MG iteration: ``n_rounds`` dispatches over active
-    windows only. Bit-identical on the frontier to ``select_best_stream``;
-    off-frontier wanted labels may differ (inactive rows sharing an active
-    window compute, others carry through) — the frontier gate masks both,
-    exactly as it masks the dense mover's off-frontier moves.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    if plan.n_nodes == 0:
-        return labels
-    el, ew = entry_labels, entry_weights
-    for rnd in plan.rounds[:-1]:
-        sub, widx, _ = _sparse_stream_round(rnd, frontier, cap_rows)
-        c_k, c_v = stream_fold_round(sub, el, ew, k=plan.k,
-                                     chunk=plan.chunk, interpret=interpret)
-        el = _scatter_sparse_windows(widx, c_k, rnd.n_windows, rnd.tile_r,
-                                     jnp.int32(-1)).reshape(-1)
-        ew = _scatter_sparse_windows(widx, c_v, rnd.n_windows, rnd.tile_r,
-                                     jnp.float32(0.0)).reshape(-1)
-    n = plan.n_nodes
-    sub, _, rv_c = _sparse_stream_round(plan.rounds[-1], frontier, cap_rows)
-    real = rv_c >= 0
-    incumbents = jnp.where(real, labels[jnp.maximum(rv_c, 0)], -1)
-    choice = stream_select_round(sub, el, ew, incumbents, seed, k=plan.k,
-                                 chunk=plan.chunk, interpret=interpret)
-    buf = jnp.concatenate([labels, jnp.zeros((1,), labels.dtype)])
-    buf = buf.at[jnp.where(real, rv_c, n)].set(
-        jnp.where(real, choice, -1))
-    return buf[:n]
-
-
-def run_bm_plan_stream_sparse(plan: StreamedFoldPlan,
-                              entry_labels: jnp.ndarray,
-                              entry_weights: jnp.ndarray,
-                              cur_labels: jnp.ndarray,
-                              frontier: jnp.ndarray, cap_rows: int,
-                              interpret: bool | None = None
-                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Sparse streamed νBM iteration core: ONE dispatch over active
-    round-0 windows + the order-insensitive ``sketch.bm_merge_rows``
-    merge. Active vertices merge their complete row set (every row of an
-    active vertex lives in an active window); vertices only partially
-    covered by active windows produce gate-masked off-frontier values.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    from repro.core.sketch import bm_init_rows, bm_merge_rows
-    n = plan.n_nodes
-    if n == 0:
-        return (jnp.full((0,), -1, jnp.int32), jnp.zeros((0,), jnp.float32))
-    sub, _, rv_c = _sparse_stream_round(plan.rounds[0], frontier, cap_rows)
-    init = bm_init_rows(rv_c, cur_labels)
-    ck, wk = bm_fold_round_stream(sub, entry_labels, entry_weights, init,
-                                  chunk=plan.chunk, interpret=interpret)
-    return bm_merge_rows(n, cur_labels, rv_c, ck, wk)
-
-
-def rescan_select_stream_sparse(plan: StreamedFoldPlan,
-                                entry_labels: jnp.ndarray,
-                                entry_weights: jnp.ndarray,
-                                labels: jnp.ndarray, seed: jnp.ndarray,
-                                frontier: jnp.ndarray, cap_rows: int,
-                                interpret: bool | None = None
-                                ) -> jnp.ndarray:
-    """Sparse streamed double-scan MG iteration: ``n_rounds`` sparse fold
-    dispatches + ONE rescan dispatch over active round-0 windows.
-    Off-frontier vertices keep an all-empty candidate set and their label.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    from repro.core.sketch import choose_from_candidates, merge_rescan_partials
-    n, k = plan.n_nodes, plan.k
-    if n == 0:
-        return labels
-    s_k, _ = run_mg_plan_stream_sparse(plan, entry_labels, entry_weights,
-                                       frontier, cap_rows,
-                                       interpret=interpret)
-    rtv = plan.row_to_vertex
-    cand = jnp.full((n + 1, k), -1, jnp.int32).at[
-        jnp.where(rtv >= 0, rtv, n)].set(s_k)[:n]
-    rnd0 = plan.rounds[0]
-    sub0, widx0, rv0_c = _sparse_stream_round(rnd0, frontier, cap_rows)
-    cand_ext = jnp.concatenate([cand, jnp.full((1, k), -1, jnp.int32)])
-    cand_rows = cand_ext[jnp.where(rv0_c >= 0, rv0_c, n)]
-    parts_c = rescan_round_stream(sub0, entry_labels, entry_weights,
-                                  cand_rows, k=k, chunk=plan.chunk,
-                                  interpret=interpret)
-    parts = _scatter_sparse_windows(widx0, parts_c, rnd0.n_windows,
-                                    rnd0.tile_r, jnp.float32(0.0))
-    acc = merge_rescan_partials(n, k, plan.max_rows0, plan.row_to_vertex0,
-                                plan.row_rank0, parts)
-    return choose_from_candidates(jnp.where(acc > 0, cand, -1), acc,
-                                  labels, seed)

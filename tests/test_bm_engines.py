@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.fold_engine import get_engine
+from repro.core.fold_program import FoldRequest
 from repro.core.lpa import LPAConfig, lpa
 from repro.core.sketch import run_bm_plan
 from repro.graphs.csr import (build_csr, build_fold_plan,
@@ -124,12 +125,14 @@ def test_bm_dispatch_economics():
     splan = build_streamed_fold_plan(degrees, k=8, chunk=128)
     n_buckets0 = len(plan.rounds[0].buckets)
     assert n_buckets0 >= 1
-    assert get_engine("pallas").bm_dispatches_per_iter(plan, None) \
+    req = FoldRequest(family="bm")
+    assert get_engine("pallas").dispatches_per_iter(plan, None, req) \
         == n_buckets0
-    assert get_engine("pallas_fused").bm_dispatches_per_iter(plan, fplan) == 1
-    assert get_engine("pallas_stream").bm_dispatches_per_iter(plan,
-                                                              splan) == 1
-    assert get_engine("jnp").bm_dispatches_per_iter(plan, None) == 0
+    assert get_engine("pallas_fused").dispatches_per_iter(plan, fplan,
+                                                          req) == 1
+    assert get_engine("pallas_stream").dispatches_per_iter(plan, splan,
+                                                           req) == 1
+    assert get_engine("jnp").dispatches_per_iter(plan, None, req) == 0
 
 
 def test_lpa_e2e_bm_all_backends():

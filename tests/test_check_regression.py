@@ -87,6 +87,29 @@ def test_error_rows_without_runtime_are_not_gateable():
     assert len(check(base2, cur2)) == 1
 
 
+def test_mode_suffix_keys_are_distinct_coverage_cells():
+    # rows key as (bench, graph, family, mode, backend): the sparse fold
+    # of a backend is its own coverage cell, distinct from the dense row
+    # of the same backend, so only IT goes missing when it drops out
+    base = [_calib(), _row(runtime=2.0),
+            _row(engine="pallas_fused+sparse", runtime=2.0),
+            _row(method="rescan", engine="pallas_stream", runtime=2.0)]
+    cur = [_calib(), _row(runtime=2.0),
+           _row(method="rescan", engine="pallas_stream", runtime=2.0)]
+    failures = check(base, cur)
+    assert len(failures) == 1
+    assert failures[0].startswith("MISSING")
+    assert "'sparse'" in failures[0] and "pallas_fused" in failures[0]
+
+
+def test_rescan_family_rows_are_gated():
+    base = [_calib(1.0), _row(method="rescan", engine="jnp", runtime=2.0)]
+    cur = [_calib(1.0), _row(method="rescan", engine="jnp", runtime=10.0)]
+    failures = check(base, cur)
+    assert len(failures) == 1 and failures[0].startswith("REGRESSED")
+    assert "'rescan'" in failures[0]
+
+
 def test_calibration_row_itself_is_never_gated():
     base = [_calib(1.0)]
     cur = [_calib(50.0)]

@@ -9,6 +9,7 @@ from jax.experimental import checkify
 
 from repro.core.checked import CheckedEngine
 from repro.core.fold_engine import ENGINES, get_engine
+from repro.core.fold_program import FoldRequest
 from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
                               build_streamed_fold_plan)
 
@@ -140,37 +141,47 @@ def test_dispatch_accounting_passes_through(backend):
     checked = get_engine(backend, checked=True)
     assert checked.uses_fused_plan == plain.uses_fused_plan
     assert checked.uses_stream_plan == plain.uses_stream_plan
-    assert checked.dispatches_per_iter(plan, aux[backend]) \
-        == plain.dispatches_per_iter(plan, aux[backend])
-    assert checked.sparse_dispatches_per_iter(plan, aux[backend]) \
-        == plain.sparse_dispatches_per_iter(plan, aux[backend])
+    for req in (FoldRequest(family="mg"), FoldRequest(family="bm"),
+                FoldRequest(family="mg", rescan=True)):
+        assert checked.dispatches_per_iter(plan, aux[backend], req) \
+            == plain.dispatches_per_iter(plan, aux[backend], req)
 
 
 @pytest.mark.parametrize("backend", ENGINES)
-def test_checked_sparse_entry_points_are_bit_identical(backend):
-    """The sparse methods get EXPLICIT contract wrappers (CheckedEngine's
-    __getattr__ would otherwise delegate them uncheck-wrapped)."""
+def test_checked_run_routes_sparse_requests_bit_identically(backend):
+    """run() gets ONE generic contract wrapper (CheckedEngine's
+    __getattr__ would otherwise delegate it uncheck-wrapped), and the
+    sparse lowering must pass through it unchanged."""
     plan, aux, el, ew, labels = _setup()
-    seed = jnp.int32(3)
     frontier = jnp.asarray([True, False, True, True, False])
-    plain = get_engine(backend, checked=False).mg_select_sparse(
-        plan, aux[backend], el, ew, labels, seed, frontier, 64)
-    checked = get_engine(backend, checked=True).mg_select_sparse(
-        plan, aux[backend], el, ew, labels, seed, frontier, 64)
-    np.testing.assert_array_equal(np.asarray(plain), np.asarray(checked))
+    req = FoldRequest(family="mg", mode="sparse", seed=jnp.int32(3),
+                      frontier=frontier, cap_rows=64)
+    plain = get_engine(backend, checked=False).run(
+        plan, aux[backend], req, el, ew, labels)
+    checked = get_engine(backend, checked=True).run(
+        plan, aux[backend], req, el, ew, labels)
+    np.testing.assert_array_equal(np.asarray(plain.want),
+                                  np.asarray(checked.want))
 
 
 @pytest.mark.parametrize("backend", ENGINES)
-def test_checked_sparse_catches_nan_weight(backend):
+def test_checked_run_catches_bad_inputs_on_sparse_requests(backend):
+    """The generic run() wrapper's contracts hold wherever the request
+    routes: a NaN entry weight on the BM route, a negative label on the
+    rescan route."""
     plan, aux, el, ew, labels = _setup()
     frontier = jnp.ones((5,), jnp.bool_)
     eng = get_engine(backend, checked=True)
+    bm_req = FoldRequest(family="bm", mode="sparse", frontier=frontier,
+                         cap_rows=64)
     with pytest.raises(checkify.JaxRuntimeError,
                        match="NaN/inf entry weight"):
-        eng.bm_fold_plan_sparse(plan, aux[backend], el,
-                                ew.at[0].set(jnp.nan), labels, frontier, 64)
+        eng.run(plan, aux[backend], bm_req, el, ew.at[0].set(jnp.nan),
+                labels)
+    rescan_req = FoldRequest(family="mg", rescan=True, mode="sparse",
+                             seed=jnp.int32(0), frontier=frontier,
+                             cap_rows=64)
     with pytest.raises(checkify.JaxRuntimeError,
                        match="negative input label"):
-        eng.mg_rescan_sparse(plan, aux[backend], el, ew,
-                             labels.at[0].set(-7), jnp.int32(0), frontier,
-                             64)
+        eng.run(plan, aux[backend], rescan_req, el, ew,
+                labels.at[0].set(-7))

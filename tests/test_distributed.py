@@ -241,6 +241,39 @@ def test_dist_aligned_layout_matches_unaligned():
 
 
 @pytest.mark.slow  # spawns a multi-device subprocess
+def test_dist_rescan_matches_single_host():
+    """dist_lpa(rescan=True) routes the MG double-scan (§4.4) through the
+    same FoldRequest the single-host mover keys on (DESIGN.md §14); the
+    second pass re-scores candidates against round 0 per shard and must be
+    bit-identical to single-host lpa(rescan=True) on every exchange mode
+    and engine."""
+    _run("""
+        import numpy as np, jax
+        from repro.graphs.generators import powerlaw_communities
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.core.lpa import lpa, LPAConfig
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("shard",))
+        g, _ = powerlaw_communities(768, p_in=0.5, mix=0.02, seed=5)
+        sh = lpa(g, LPAConfig(method="mg", rescan=True, rho=2))
+        ref = np.asarray(sh.labels)
+        ws = build_dist_workspace(g, 4)
+        got, _ = dist_lpa(mesh, ws, rho=2, rescan=True)
+        assert (np.asarray(got) == ref).all(), "bucketed rescan diverges"
+        fkw = dict(fused=True, tile_r=32)
+        skw = dict(stream=True, tile_r=32, window_entries=512)
+        for tag, kw, engine in (("fused", fkw, "pallas_fused"),
+                                ("stream", skw, "pallas_stream")):
+            for halo in (False, True):
+                w = build_dist_workspace(g, 4, halo=halo, **kw)
+                got, _ = dist_lpa(mesh, w, rho=2, engine=engine,
+                                  rescan=True)
+                assert (np.asarray(got) == ref).all(), (tag, halo)
+        print("dist rescan parity ok")
+    """, devices=4)
+
+
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_halo_exchange_matches_full_gather():
     """Hub+halo label exchange must be bit-identical to the full gather
     (EXPERIMENTS §Perf hillclimb 3) and strictly cheaper on the wire."""

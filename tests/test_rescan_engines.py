@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.fold_engine import get_engine
+from repro.core.fold_program import FoldRequest
 from repro.core.lpa import LPAConfig, lpa
 from repro.core.sketch import rescan_candidates, run_mg_plan
 from repro.graphs.csr import (build_csr, build_fold_plan,
@@ -164,13 +165,14 @@ def test_rescan_dispatch_economics():
     the fused/streamed engines (the second pass never re-buckets)."""
     g = FIXTURES["powerlaw"]()
     plan, aux = _plans(g)
+    req = FoldRequest(family="mg", rescan=True)
     fused = get_engine("pallas_fused")
     stream = get_engine("pallas_stream")
-    assert fused.rescan_dispatches_per_iter(plan, aux["pallas_fused"]) \
+    assert fused.dispatches_per_iter(plan, aux["pallas_fused"], req) \
         == aux["pallas_fused"].n_rounds + 1
-    assert stream.rescan_dispatches_per_iter(plan, aux["pallas_stream"]) \
+    assert stream.dispatches_per_iter(plan, aux["pallas_stream"], req) \
         == aux["pallas_stream"].n_rounds + 1
-    assert get_engine("jnp").rescan_dispatches_per_iter(plan, None) == 0
+    assert get_engine("jnp").dispatches_per_iter(plan, None, req) == 0
 
 
 def test_lpa_e2e_rescan_with_pickless_all_backends():

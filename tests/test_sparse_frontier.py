@@ -13,8 +13,9 @@ Contracts under test (DESIGN.md §8.5):
     (no changed neighbor) must stay queued, not frozen (§8.5 union rule).
   * **accounting** — ``work_rows_history`` matches the frontier fractions
     in ``frontier_history`` on one-row-per-vertex plans, and the engines'
-    ``sparse_*_dispatches_per_iter`` declarations match the plan helpers
-    (kernelcheck R3 verifies the same statically).
+    request-keyed ``dispatches_per_iter(plan, aux, request)`` matches the
+    plan helpers for every routable request, with ``mode="sparse"`` never
+    changing a count (kernelcheck R3 verifies the same statically).
   * **decoupling** — with ``frontier_gate`` and ``track_frontier`` both
     off, ``mark_frontier`` (the O(|E|) segment_max) is never called.
 """
@@ -29,6 +30,7 @@ from _propcheck import given, settings, st
 # name once the package re-exports it — resolve the module explicitly
 lpa_mod = importlib.import_module("repro.core.lpa")
 from repro.core.fold_engine import get_engine
+from repro.core.fold_program import FoldRequest
 from repro.core.lpa import (LPAConfig, build_workspace, lpa, lpa_move,
                             mark_frontier)
 from repro.graphs.csr import (CSRGraph, build_csr, compact_active_rows,
@@ -179,6 +181,22 @@ def test_compact_active_rows_properties(rows, cap, seed):
     assert (idx[len(want):] == rows).all()       # sentinel padding
 
 
+def test_compact_active_rows_all_empty_frontier():
+    """Zero active rows: the compaction is pure sentinel padding, so a
+    sparse round with an all-quiet frontier folds nothing (every slot
+    gathers the neutral pad entries)."""
+    idx = np.asarray(compact_active_rows(jnp.zeros(7, jnp.bool_), 4))
+    assert idx.shape == (4,)
+    assert (idx == 7).all()
+
+
+def test_compact_active_rows_exactly_full_cap():
+    """cap == active count: every active row lands, in order, with no
+    sentinel slot left over and no overflow truncation."""
+    idx = np.asarray(compact_active_rows(jnp.ones(5, jnp.bool_), 5))
+    assert idx.tolist() == [0, 1, 2, 3, 4]
+
+
 def test_pick_less_deferred_vertex_is_not_frozen():
     """§8.5 wrinkle: vertex 0 wants a *larger* label in the PL iteration
     (blocked) while its only neighbor is quiet — no changed neighbor, so
@@ -246,37 +264,44 @@ def test_bucketed_backends_fold_densely():
         assert len(set(res.work_rows_history)) == 1
 
 
-def test_sparse_dispatch_declarations_match_plan_helpers():
+def test_request_dispatch_table_is_golden():
+    """The full request-keyed dispatch table (DESIGN.md §14): one
+    ``dispatches_per_iter(plan, aux, request)`` per engine, checked for
+    every (backend, family, rescan) cell against the plan helpers — and
+    for both modes, because sparse compaction shrinks grids *inside* the
+    same dispatches and must never change a count."""
     g = _graph()
-    cfg = _config("pallas_fused")
-    ws = build_workspace(g, cfg)
-    eng = get_engine("pallas_fused")
-    assert (eng.sparse_dispatches_per_iter(ws.plan, ws.fused_plan)
-            == fused_dispatches(ws.fused_plan))
-    assert eng.sparse_bm_dispatches_per_iter(ws.plan, ws.fused_plan) == 1
-    assert (eng.sparse_rescan_dispatches_per_iter(ws.plan, ws.fused_plan)
-            == fused_dispatches(ws.fused_plan) + 1)
-
-    cfg_s = _config("pallas_stream")
-    ws_s = build_workspace(g, cfg_s)
-    eng_s = get_engine("pallas_stream")
-    assert (eng_s.sparse_dispatches_per_iter(ws_s.plan, ws_s.stream_plan)
-            == streamed_dispatches(ws_s.stream_plan))
-    assert eng_s.sparse_bm_dispatches_per_iter(ws_s.plan,
-                                               ws_s.stream_plan) == 1
-    assert (eng_s.sparse_rescan_dispatches_per_iter(ws_s.plan,
-                                                    ws_s.stream_plan)
-            == streamed_dispatches(ws_s.stream_plan) + 1)
-
-    # bucketed engines delegate to the dense fold: zero extra dispatches
-    # on jnp, the dense bucket dispatches on pallas
-    eng_j = get_engine("jnp")
-    assert eng_j.sparse_dispatches_per_iter(ws.plan, None) == 0
-    eng_p = get_engine("pallas")
-    assert (eng_p.sparse_dispatches_per_iter(ws.plan, None)
-            == plan_dispatches(ws.plan))
-    assert (eng_p.sparse_bm_dispatches_per_iter(ws.plan, None)
-            == plan_round0_dispatches(ws.plan))
+    ws_f = build_workspace(g, _config("pallas_fused"))
+    ws_s = build_workspace(g, _config("pallas_stream"))
+    frontier = jnp.ones(g.n_nodes, jnp.bool_)
+    plans = {"jnp": (ws_f.plan, None), "pallas": (ws_f.plan, None),
+             "pallas_fused": (ws_f.plan, ws_f.fused_plan),
+             "pallas_stream": (ws_s.plan, ws_s.stream_plan)}
+    r_fused = fused_dispatches(ws_f.fused_plan)
+    r_stream = streamed_dispatches(ws_s.stream_plan)
+    golden = {
+        ("jnp", "mg", False): 0,
+        ("jnp", "bm", False): 0,
+        ("jnp", "mg", True): 0,
+        ("pallas", "mg", False): plan_dispatches(ws_f.plan),
+        ("pallas", "bm", False): plan_round0_dispatches(ws_f.plan),
+        ("pallas", "mg", True): plan_dispatches(ws_f.plan),
+        ("pallas_fused", "mg", False): r_fused,
+        ("pallas_fused", "bm", False): 1,
+        ("pallas_fused", "mg", True): r_fused + 1,
+        ("pallas_stream", "mg", False): r_stream,
+        ("pallas_stream", "bm", False): 1,
+        ("pallas_stream", "mg", True): r_stream + 1,
+    }
+    for (backend, family, rescan), want in golden.items():
+        eng = get_engine(backend)
+        plan, aux = plans[backend]
+        dense = FoldRequest(family=family, rescan=rescan)
+        sparse = FoldRequest(family=family, rescan=rescan, mode="sparse",
+                             frontier=frontier, cap_rows=8)
+        for req in (dense, sparse):
+            got = eng.dispatches_per_iter(plan, aux, req)
+            assert got == want, (backend, family, rescan, req.mode)
 
 
 def test_fused_active_rows_tracks_the_frontier():

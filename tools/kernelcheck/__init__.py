@@ -7,12 +7,18 @@ engine registry (DESIGN.md §12):
       plan fields)
   R2  window/grid slice safety (guarded packers; 1-D kernel operands come
       from a pad/window producer)
-  R3  dispatch accounting (declared ``*_dispatches_per_iter`` match the
-      ``pl.pallas_call`` sites reachable per engine per iteration)
+  R3  dispatch accounting (each engine's request-keyed
+      ``dispatches_per_iter(plan, aux, request)`` matches the
+      ``pl.pallas_call`` sites reachable per FoldRequest combo)
   R4  purity of traced code (no host calls/branches in kernel bodies or
       index_maps; no mutable defaults in kernel modules)
   R5  registry closure (every engine ``get_engine`` claims resolves and
       has parity fixtures in tests/)
+  R6  aligned-layout gather accounting (aligned rounds skip the windowed
+      re-layout gather and the benchmarks' slot accounting reflects it)
+  R7  request-routing closure (every FoldRequest combo reaches an
+      executor in each engine's ``run`` — nothing falls off the routing
+      table)
 
 Run ``python -m tools.kernelcheck src/repro`` from the repo root.
 """

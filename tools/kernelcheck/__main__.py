@@ -17,7 +17,7 @@ def main(argv=None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m tools.kernelcheck",
         description="Static contract checker for the Pallas fold stack "
-                    "(rules R1-R6; see DESIGN.md §12).")
+                    "(rules R1-R7; see DESIGN.md §12).")
     parser.add_argument("target",
                         help="package directory or file to analyze "
                              "(e.g. src/repro)")

@@ -1,4 +1,4 @@
-"""kernelcheck rules R1-R6 (see DESIGN.md §12 for the catalog).
+"""kernelcheck rules R1-R7 (see DESIGN.md §12 for the catalog).
 
 Each ``check_rN(index, ...)`` returns a list of Findings. Rules are
 conservative by construction: anything unresolvable is treated as unknown
@@ -550,9 +550,22 @@ class _DispatchCounter:
     def _block(self, stmts: Sequence[ast.stmt], mi, cls, bindings,
                env: Dict[str, str]) -> Dict[str, int]:
         total: Dict[str, int] = {}
-        for stmt in stmts:
+        for i, stmt in enumerate(stmts):
+            if isinstance(stmt, ast.If) and not stmt.orelse \
+                    and self._terminates(stmt.body):
+                # early-return guard: the rest of the block is the implicit
+                # else-arm, so the two paths' dispatches are alternatives
+                body = self._block(stmt.body, mi, cls, bindings, dict(env))
+                rest = self._block(stmts[i + 1:], mi, cls, bindings, env)
+                return _merge(total,
+                              self._expr(stmt.test, mi, cls, bindings),
+                              _elem_max(body, rest))
             total = _merge(total, self._stmt(stmt, mi, cls, bindings, env))
         return total
+
+    @staticmethod
+    def _terminates(stmts: Sequence[ast.stmt]) -> bool:
+        return bool(stmts) and isinstance(stmts[-1], (ast.Return, ast.Raise))
 
     def _stmt(self, stmt, mi, cls, bindings, env) -> Dict[str, int]:
         if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
@@ -726,15 +739,62 @@ def _eval_helper_return(v: ast.AST) -> Optional[Dict[str, int]]:
     return None
 
 
-#: declared accounting method -> the measured per-iteration entry point
-_DISPATCH_PAIRS = (
-    ("dispatches_per_iter", "mg_select"),
-    ("bm_dispatches_per_iter", "bm_fold_plan"),
-    ("rescan_dispatches_per_iter", "mg_rescan"),
-    ("sparse_dispatches_per_iter", "mg_select_sparse"),
-    ("sparse_bm_dispatches_per_iter", "bm_fold_plan_sparse"),
-    ("sparse_rescan_dispatches_per_iter", "mg_rescan_sparse"),
+#: routable FoldRequest combos -> the family executor each resolves to
+#: (``mode`` never changes dispatch counts, so it does not key the table)
+_REQUEST_COMBOS = (
+    ({"family": "mg", "rescan": False}, "mg_select"),
+    ({"family": "bm", "rescan": False}, "bm_fold_plan"),
+    ({"family": "mg", "rescan": True}, "mg_rescan"),
 )
+
+
+def _fmt_combo(combo: Dict[str, object]) -> str:
+    return ", ".join(f"{k}={v!r}" for k, v in combo.items())
+
+
+def _request_test(test: ast.AST, combo: Dict[str, object]) -> Optional[bool]:
+    """Decide a branch test under a request combo: True/False if the test
+    reads only ``request.<field>`` truthiness or (in)equality against a
+    constant for fields the combo pins; None when undecidable."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        inner = _request_test(test.operand, combo)
+        return None if inner is None else (not inner)
+    if isinstance(test, ast.Attribute) and isinstance(test.value, ast.Name) \
+            and test.value.id == "request" and test.attr in combo:
+        return bool(combo[test.attr])
+    if isinstance(test, ast.Compare) and len(test.ops) == 1 \
+            and len(test.comparators) == 1 \
+            and isinstance(test.left, ast.Attribute) \
+            and isinstance(test.left.value, ast.Name) \
+            and test.left.value.id == "request" \
+            and test.left.attr in combo \
+            and isinstance(test.comparators[0], ast.Constant):
+        eq = combo[test.left.attr] == test.comparators[0].value
+        if isinstance(test.ops[0], ast.Eq):
+            return eq
+        if isinstance(test.ops[0], ast.NotEq):
+            return not eq
+    return None
+
+
+def _resolve_request_return(stmts: Sequence[ast.stmt],
+                            combo: Dict[str, object]) -> Optional[ast.AST]:
+    """The Return expression ``combo`` reaches through the declaration's
+    request if-tree; None when an undecidable branch hides a Return."""
+    for stmt in stmts:
+        if isinstance(stmt, ast.Return):
+            return stmt.value
+        if isinstance(stmt, ast.If):
+            taken = _request_test(stmt.test, combo)
+            if taken is None:
+                if any(isinstance(n, ast.Return) for n in ast.walk(stmt)):
+                    return None
+                continue
+            ret = _resolve_request_return(
+                stmt.body if taken else stmt.orelse, combo)
+            if ret is not None:
+                return ret
+    return None
 
 
 def check_r3(index: RepoIndex) -> List[Finding]:
@@ -742,25 +802,42 @@ def check_r3(index: RepoIndex) -> List[Finding]:
     counter = _DispatchCounter(index)
     for mi in index.modules.values():
         for cname in mi.classes:
-            for decl_name, meas_name in _DISPATCH_PAIRS:
-                decl = mi.functions.get(f"{cname}.{decl_name}")
+            decl = mi.functions.get(f"{cname}.dispatches_per_iter")
+            if decl is None or _raise_only(decl):
+                continue
+            d_args = decl.args
+            takes_request = any(
+                a.arg == "request"
+                for a in d_args.posonlyargs + d_args.args + d_args.kwonlyargs)
+            for combo, meas_name in _REQUEST_COMBOS:
                 meas = mi.functions.get(f"{cname}.{meas_name}")
-                if decl is None or meas is None:
+                if meas is None or _raise_only(meas):
                     continue
-                if _raise_only(decl) or _raise_only(meas):
-                    continue
-                ret = next((n for n in ast.walk(decl)
-                            if isinstance(n, ast.Return)
-                            and n.value is not None), None)
-                if ret is None:
+                if takes_request:
+                    ret_value = _resolve_request_return(decl.body, combo)
+                else:  # legacy single-count declaration: one return for all
+                    ret = next((n for n in ast.walk(decl)
+                                if isinstance(n, ast.Return)
+                                and n.value is not None), None)
+                    ret_value = ret.value if ret is not None else None
+                if ret_value is None:
+                    findings.append(Finding(
+                        "R3", mi.path, decl.lineno,
+                        f"`{cname}.dispatches_per_iter` has no return "
+                        f"kernelcheck can resolve for the request combo "
+                        f"({_fmt_combo(combo)})",
+                        "branch only on request.family / request.rescan "
+                        "(==, !=, truthiness) and return an int literal, "
+                        "a sum, or one of the csr.py accounting helpers"))
                     continue
                 declared = _eval_declared(index, counter, mi, cname,
-                                          ret.value)
+                                          ret_value)
                 if declared is None:
                     findings.append(Finding(
                         "R3", mi.path, decl.lineno,
-                        f"`{cname}.{decl_name}` returns an expression "
-                        "kernelcheck cannot evaluate symbolically",
+                        f"`{cname}.dispatches_per_iter` returns an "
+                        f"expression kernelcheck cannot evaluate "
+                        f"symbolically for ({_fmt_combo(combo)})",
                         "return an int literal, a sum of literals, or one "
                         "of the csr.py accounting helpers"))
                     continue
@@ -768,11 +845,11 @@ def check_r3(index: RepoIndex) -> List[Finding]:
                 if declared != measured:
                     findings.append(Finding(
                         "R3", mi.path, decl.lineno,
-                        f"`{cname}.{decl_name}` declares "
-                        f"{_fmt_sym(declared)} dispatches/iter but "
-                        f"`{meas_name}` reaches {_fmt_sym(measured)} "
-                        "pl.pallas_call sites",
-                        "fix the declared constant (or remove the stray "
+                        f"`{cname}.dispatches_per_iter` declares "
+                        f"{_fmt_sym(declared)} dispatches/iter for "
+                        f"({_fmt_combo(combo)}) but `{meas_name}` reaches "
+                        f"{_fmt_sym(measured)} pl.pallas_call sites",
+                        "fix the declared count (or remove the stray "
                         "dispatch) so the bench regression gate stays "
                         "honest"))
     return findings
@@ -1100,6 +1177,73 @@ def check_r6(index: RepoIndex) -> List[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# R7 — request-routing closure
+# ---------------------------------------------------------------------------
+
+
+def _reachable_nodes(stmts: Sequence[ast.stmt],
+                     combo: Dict[str, object]) -> List[ast.AST]:
+    """Nodes ``combo`` can reach through a router body: a decidable
+    request test prunes its dead arm, everything else (tests included)
+    stays reachable — conservative in the clean direction."""
+    out: List[ast.AST] = []
+    for stmt in stmts:
+        if isinstance(stmt, ast.If):
+            out.append(stmt.test)
+            taken = _request_test(stmt.test, combo)
+            if taken is None or taken:
+                out.extend(_reachable_nodes(stmt.body, combo))
+            if taken is None or not taken:
+                out.extend(_reachable_nodes(stmt.orelse, combo))
+        else:
+            out.append(stmt)
+    return out
+
+
+def _is_self_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    func = node.func
+    while isinstance(func, ast.Attribute):
+        func = func.value
+    return isinstance(func, ast.Name) and func.id == "self"
+
+
+def check_r7(index: RepoIndex) -> List[Finding]:
+    """Request-routing closure: every ``run(...)`` that routes a request
+    must reach an executor (a ``self.*`` call — a family method, or an
+    unconditional delegate like a wrapper's ``self._inner.run``) for
+    every routable request combo. A combo that silently falls off the
+    routing table returns garbage instead of raising."""
+    findings: List[Finding] = []
+    for mi in index.modules.values():
+        for cname in mi.classes:
+            run = mi.functions.get(f"{cname}.run")
+            if run is None or _raise_only(run):
+                continue
+            r_args = run.args
+            params = [a.arg for a in r_args.posonlyargs + r_args.args
+                      + r_args.kwonlyargs]
+            if "request" not in params:
+                continue
+            for combo, _ in _REQUEST_COMBOS:
+                reachable = _reachable_nodes(run.body, combo)
+                routed = any(_is_self_call(sub)
+                             for node in reachable
+                             for sub in ast.walk(node))
+                if not routed:
+                    findings.append(Finding(
+                        "R7", mi.path, run.lineno,
+                        f"`{cname}.run` routes no executor for the request "
+                        f"combo ({_fmt_combo(combo)}) — the combo falls "
+                        "off the routing table",
+                        "route every FoldRequest combo to a family "
+                        "executor (or reject it in the request's "
+                        "__post_init__ so it cannot be built)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -1113,5 +1257,6 @@ def run_all(index: RepoIndex, tests_dir: Optional[str] = None
     findings.extend(check_r4(index))
     findings.extend(check_r5(index, tests_dir))
     findings.extend(check_r6(index))
+    findings.extend(check_r7(index))
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings

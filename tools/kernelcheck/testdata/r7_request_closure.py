@@ -1,0 +1,23 @@
+"""Seeded R7 violation: the request router drops the BM combo."""
+
+
+class ToyRouterEngine:
+    name = "toy-router"
+
+    def run(self, plan, aux_plan, request, entry_labels, entry_weights,
+            labels):
+        # BUG: only the MG family is routed; family="bm" requests fall
+        # through to the bare `return None` below instead of reaching
+        # an executor (or being rejected at request construction).
+        if request.family == "mg":
+            if request.rescan:
+                return self.mg_rescan(plan, entry_labels, entry_weights,
+                                      labels)
+            return self.mg_select(plan, entry_labels, entry_weights, labels)
+        return None
+
+    def mg_select(self, plan, entry_labels, entry_weights, labels):
+        return labels
+
+    def mg_rescan(self, plan, entry_labels, entry_weights, labels):
+        return labels
