@@ -29,7 +29,8 @@ from __future__ import annotations
 
 from benchmarks.common import (engine_list, fold_engine_stats, layout_list,
                                lpa_working_set_bytes,
-                               measured_step_temp_bytes, sketch_list, suite)
+                               measured_step_temp_bytes, plan_build_seconds,
+                               sketch_list, suite)
 from repro.core.lpa import LPAConfig, lpa
 from repro.core.modularity import modularity
 
@@ -120,6 +121,11 @@ def run(scale: str = "small", engines: str | None = None,
                         "bytes_per_edge": round(
                             ws["algo_bytes"] / max(g.n_edges, 1), 2),
                     }
+                    if method != "exact":
+                        # one-time host-side plan-build cost for this
+                        # (family, mode, backend) row's bundle
+                        row["plan_build_s"] = round(
+                            plan_build_seconds(g, cfg), 4)
                     if backend == "jnp" and not aligned:
                         # XLA's own temp accounting; measured once per
                         # method (lowering every Pallas engine would
@@ -150,7 +156,7 @@ def _frontier_rows(gname, g, method: str, swept: tuple, base: float | None):
     """
     import time
 
-    from repro.core.lpa import _dense_work_rows, build_workspace
+    from repro.core.lpa import build_workspace
 
     rows = []
     for i, backend in enumerate(swept):
@@ -173,9 +179,10 @@ def _frontier_rows(gname, g, method: str, swept: tuple, base: float | None):
                 "modularity": round(float(modularity(g, res.labels)), 4),
                 "fold_rows_total": int(sum(work)),
                 "fold_rows_after_iter2": int(sum(work[2:])),
+                "plan_build_s": round(plan_build_seconds(g, cfg), 4),
             }
             if sparse:
-                per_iter = _dense_work_rows(build_workspace(g, cfg))
+                per_iter = build_workspace(g, cfg).bundle.dense_work_rows()
                 dense2 = per_iter * max(0, res.iterations - 2)
                 row["dense_fold_rows_after_iter2"] = int(dense2)
                 row["fold_rows_saved_frac"] = round(

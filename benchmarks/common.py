@@ -77,6 +77,17 @@ def fold_work_volume(graph: CSRGraph, config: LPAConfig) -> int:
     return plan_padded_entries(ws.plan)
 
 
+def plan_build_seconds(graph: CSRGraph, config: LPAConfig) -> float:
+    """Host wall-clock of one ``build_plan_bundle(graph, spec_for(config))``
+    call — the one-time plan-construction cost a consumer pays before the
+    first fold (DESIGN.md §15). Reported per benchmark row so plan-build
+    regressions are visible next to the fold runtimes they amortize into."""
+    from repro.core.plan_bundle import build_plan_bundle, spec_for
+    t0 = time.perf_counter()
+    build_plan_bundle(graph, spec_for(config))
+    return time.perf_counter() - t0
+
+
 def engine_list(spec: str | None = None) -> tuple:
     """Parse an ``--engines`` spec against the fold-engine registry.
 
@@ -186,27 +197,30 @@ def fold_engine_stats(graph: CSRGraph, config: LPAConfig) -> dict:
     the drivers by kernelcheck R3); the request ``mode`` never changes a
     count, so sparse rows share their dense column.
     """
+    import dataclasses
+
     import numpy as np
     from repro.core.fold_engine import get_engine, resolve_auto
     from repro.core.fold_program import FoldRequest
-    from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
-                                  build_streamed_fold_plan,
-                                  fused_hbm_entries,
+    from repro.core.plan_bundle import build_plan_bundle, spec_for
+    from repro.graphs.csr import (fused_hbm_entries,
                                   streamed_gather_slots,
                                   streamed_peak_window_bytes,
                                   streamed_window_slots)
     degrees = np.asarray(graph.degrees)
-    plan = build_fold_plan(degrees, k=config.k, chunk=config.chunk)
-    fused_plan = build_fused_fold_plan(degrees, k=config.k,
-                                       chunk=config.chunk)
-    stream_plan = build_streamed_fold_plan(
-        degrees, k=config.k, chunk=config.chunk,
-        window_entries=config.stream_window)
-    aligned_plan = build_streamed_fold_plan(
-        degrees, k=config.k, chunk=config.chunk,
-        window_entries=config.stream_window,
-        indices=np.asarray(graph.indices),
-        weights=np.asarray(graph.weights), aligned=True)
+    # every engine's plan comes from the same build layer the drivers use
+    # (DESIGN.md §15): one bundle per backend the stats compare
+    base = spec_for(config)
+    fused_b = build_plan_bundle(graph, dataclasses.replace(
+        base, backend="pallas_fused", aligned=False))
+    stream_b = build_plan_bundle(graph, dataclasses.replace(
+        base, backend="pallas_stream", aligned=False))
+    aligned_b = build_plan_bundle(graph, dataclasses.replace(
+        base, backend="pallas_stream", aligned=True))
+    plan = fused_b.plan
+    fused_plan = fused_b.fused_plan
+    stream_plan = stream_b.stream_plan
+    aligned_plan = aligned_b.stream_plan
     gather_slots = streamed_gather_slots(stream_plan)
     gather_slots_aligned = streamed_gather_slots(aligned_plan)
     pallas = get_engine("pallas")

@@ -180,16 +180,18 @@ class CheckedEngine:
 
     # -- the routed entry point --------------------------------------------
 
-    def run(self, plan, aux_plan, request, entry_labels, entry_weights,
+    def run(self, bundle, request, entry_labels, entry_weights,
             labels):
         """ONE generic contract wrapper around the routed fold: pre/post
         contracts do not depend on where the request routes (sparse mode
         only changes which rows fold — the frontier itself is a plain
-        bool mask), so a single wrapper covers every combo. Delegates to
-        the wrapped engine's own routing."""
-        self._pre(plan, aux_plan, entry_labels, entry_weights)
+        bool mask), so a single wrapper covers every combo. Plan lookups
+        key off the bundle exactly like the wrapped engine's run does;
+        delegates to the wrapped engine's own routing."""
+        self._pre(bundle.plan, bundle.aux_for(self._inner),
+                  entry_labels, entry_weights)
         _throw(_labels_contract(labels))
-        outcome = self._inner.run(plan, aux_plan, request, entry_labels,
+        outcome = self._inner.run(bundle, request, entry_labels,
                                   entry_weights, labels)
         _throw(_selection_contract(outcome.want))
         if outcome.bm_label is not None:

@@ -32,6 +32,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import sketch as sketch_lib
 from repro.core.fold_program import FoldRequest
+from repro.core.plan_bundle import (PlanSpec, ShardSlice, build_plan_bundle,
+                                    stack_aligned_windows,
+                                    stack_shard_bundles,
+                                    uniform_round_count)
 from repro.compat import shard_map
 
 PAD = -1
@@ -57,32 +61,32 @@ class DistLPAWorkspace:
     round_gathers: Tuple[jnp.ndarray, ...]  # per round: [P, R_pad_r, chunk] int32
     final_row_vertex: jnp.ndarray  # [P, R_last] int32 — local vertex per final row (-1 pad)
     init_labels: jnp.ndarray   # [P, V_pad] int32 — real global ids (-1 on pad slots)
-    n_nodes: int
-    v_pad: int
-    k: int
-    chunk: int
-    send_idx: jnp.ndarray | None = None  # [P(owner), P(dest), H_pad] local slots
-    h_pad: int = 0
-    hub_idx: jnp.ndarray | None = None   # [P, HUB_pad] local slots of hubs
-    hub_pad: int = 0
+    n_nodes: int               # |V| — real (unpadded) global vertex count
+    v_pad: int                 # per-shard label-slot count (max shard size)
+    k: int                     # sketch width (candidate slots per vertex)
+    chunk: int                 # fold-plan row width (entries per chunk row)
+    send_idx: jnp.ndarray | None = None  # [P(owner), P(dest), H_pad] int32 local slots
+    h_pad: int = 0             # halo-exchange pad width (slots per shard pair)
+    hub_idx: jnp.ndarray | None = None   # [P, HUB_pad] int32 local slots of hubs
+    hub_pad: int = 0           # hub all-gather pad width (hubs per shard)
     # fused-engine metadata (same (start, count) range encoding as
     # repro.graphs.csr.build_fused_fold_plan; rows in the gather row order):
-    fused_starts: Tuple[jnp.ndarray, ...] | None = None  # per round [P, S_r, tile_r]
-    fused_counts: Tuple[jnp.ndarray, ...] | None = None  # per round [P, S_r, tile_r]
-    fused_dmax: Tuple[jnp.ndarray, ...] | None = None    # per round [P, S_r, 1]
+    fused_starts: Tuple[jnp.ndarray, ...] | None = None  # per round [P, S_r, tile_r] int32
+    fused_counts: Tuple[jnp.ndarray, ...] | None = None  # per round [P, S_r, tile_r] int32
+    fused_dmax: Tuple[jnp.ndarray, ...] | None = None    # per round [P, S_r, 1] int32
     fused_entries: Tuple[int, ...] = ()  # per round: flat entry-array length
     # streaming-engine metadata (windowed layout per
     # repro.graphs.csr.build_streamed_rounds, padded across shards):
-    stream_gathers: Tuple[jnp.ndarray, ...] | None = None  # per round [P, n_win_r, W_r]
-    stream_starts: Tuple[jnp.ndarray, ...] | None = None   # per round [P, n_win_r, tile_r]
-    stream_counts: Tuple[jnp.ndarray, ...] | None = None   # per round [P, n_win_r, tile_r]
-    stream_dmax: Tuple[jnp.ndarray, ...] | None = None     # per round [P, n_win_r, 1]
-    stream_final_rv: jnp.ndarray | None = None  # [P, n_win_last * tile_r] local vertex (-1 pad)
+    stream_gathers: Tuple[jnp.ndarray, ...] | None = None  # per round [P, n_win_r, W_r] int32
+    stream_starts: Tuple[jnp.ndarray, ...] | None = None   # per round [P, n_win_r, tile_r] int32
+    stream_counts: Tuple[jnp.ndarray, ...] | None = None   # per round [P, n_win_r, tile_r] int32
+    stream_dmax: Tuple[jnp.ndarray, ...] | None = None     # per round [P, n_win_r, 1] int32
+    stream_final_rv: jnp.ndarray | None = None  # [P, n_win_last * tile_r] int32 local vertex (-1 pad)
     # round-0 row -> local vertex maps, one per plan encoding (the BM fold
     # and the rescan second pass walk only round 0; -1 on pad rows/slots):
-    row_vertex0: jnp.ndarray | None = None  # [P, R_pad_0] bucketed rows
-    fused_rv0: jnp.ndarray | None = None    # [P, S_0 * tile_r] fused rows
-    stream_rv0: jnp.ndarray | None = None   # [P, n_win_0 * tile_r] slots
+    row_vertex0: jnp.ndarray | None = None  # [P, R_pad_0] int32 bucketed rows
+    fused_rv0: jnp.ndarray | None = None    # [P, S_0 * tile_r] int32 fused rows
+    stream_rv0: jnp.ndarray | None = None   # [P, n_win_0 * tile_r] int32 slots
     # round-0 row -> chunk-rank maps matching the rv0 maps above (0 on pad
     # rows; the rescan merge reduces each row's exact partial at its static
     # (vertex, rank) coordinate — sketch.merge_rescan_partials):
@@ -209,27 +213,29 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
     m_pad = int(max(offsets[bounds[p + 1]] - offsets[bounds[p]]
                     for p in range(n_shards))) if n else 1
 
-    # per-shard, per-round row counts (single width = chunk)
-    shard_counts = []
-    for p in range(n_shards):
-        shard_counts.append(degrees[bounds[p]:bounds[p + 1]])
-    n_rounds = 1
-    tmp = [c.copy() for c in shard_counts]
-    while True:
-        chunks = [np.ceil(c / chunk).astype(np.int64) for c in tmp]
-        if all((ch <= 1).all() for ch in chunks):
-            break
-        tmp = [ch * k for ch in chunks]
-        n_rounds += 1
+    # ONE declarative plan build per shard (DESIGN.md §15): the spec names
+    # the fold backend the caller's requests will run on, and every
+    # stacked per-engine plan array comes out of stack_shard_bundles —
+    # nothing is hand-assembled here anymore.
+    if fused and stream:
+        raise ValueError("fused=True and stream=True are mutually "
+                         "exclusive (one fold backend per workspace)")
+    backend = ("pallas_stream" if stream
+               else "pallas_fused" if fused else "jnp")
+    spec = PlanSpec(backend=backend, k=k, chunk=chunk, tile_r=tile_r,
+                    aligned=aligned, stream_window=window_entries)
+    shard_counts = [degrees[bounds[p]:bounds[p + 1]]
+                    for p in range(n_shards)]
+    n_rounds = uniform_round_count(shard_counts, k=k, chunk=chunk)
+    bundles = [build_plan_bundle(
+        ShardSlice(counts=c, n_entries=m_pad, n_rounds=n_rounds), spec)
+        for c in shard_counts]
+    plans = stack_shard_bundles(bundles)
 
     nbr_pos = np.full((n_shards, m_pad), PAD, dtype=np.int32)
     wgts = np.zeros((n_shards, m_pad), dtype=np.float32)
     entry_vertex = np.full((n_shards, m_pad), PAD, dtype=np.int32)
     init_labels = np.full((n_shards, v_pad), PAD, dtype=np.int32)
-    per_round_gathers = [[] for _ in range(n_rounds)]
-    per_round_rows = np.zeros((n_shards, n_rounds), dtype=np.int64)
-
-    shard_plans = []
     for p in range(n_shards):
         lo, hi = bounds[p], bounds[p + 1]
         e0, e1 = offsets[lo], offsets[hi]
@@ -238,141 +244,6 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
         entry_vertex[p, :e1 - e0] = np.repeat(
             np.arange(hi - lo, dtype=np.int64), degrees[lo:hi])
         init_labels[p, :hi - lo] = np.arange(lo, hi)
-        counts = degrees[lo:hi].copy()
-        starts = np.zeros(hi - lo, dtype=np.int64)
-        starts[1:] = np.cumsum(counts)[:-1]
-        plan_rounds = []
-        for r in range(n_rounds):
-            n_chunks = np.ceil(counts / chunk).astype(np.int64)
-            total_rows = int(n_chunks.sum())
-            row_vertex = np.repeat(np.arange(hi - lo, dtype=np.int64), n_chunks)
-            row_rank = np.arange(total_rows) - np.repeat(
-                np.cumsum(n_chunks) - n_chunks, n_chunks)
-            row_start = starts[row_vertex] + row_rank * chunk
-            row_count = np.minimum(counts[row_vertex] - row_rank * chunk, chunk)
-            gather = row_start[:, None] + np.arange(chunk)[None, :]
-            gather = np.where(np.arange(chunk)[None, :] < row_count[:, None],
-                              gather, PAD).astype(np.int32)
-            plan_rounds.append((gather, row_vertex.astype(np.int32),
-                                row_start.astype(np.int64),
-                                row_count.astype(np.int64),
-                                row_rank.astype(np.int32)))
-            per_round_rows[p, r] = total_rows
-            counts = n_chunks * k
-            starts = np.zeros(hi - lo, dtype=np.int64)
-            starts[1:] = np.cumsum(counts)[:-1]
-        shard_plans.append(plan_rounds)
-
-    r_pads = per_round_rows.max(axis=0).clip(min=1)
-    round_gathers = []
-    final_row_vertex = np.full((n_shards, int(r_pads[-1])), PAD, dtype=np.int32)
-    row_vertex0 = np.full((n_shards, int(r_pads[0])), PAD, dtype=np.int32)
-    bucket_rank0 = np.zeros((n_shards, int(r_pads[0])), dtype=np.int32)
-    for r in range(n_rounds):
-        g = np.full((n_shards, int(r_pads[r]), chunk), PAD, dtype=np.int32)
-        for p in range(n_shards):
-            gather, row_vertex = shard_plans[p][r][:2]
-            g[p, :len(gather)] = gather
-            if r == 0:
-                row_vertex0[p, :len(row_vertex)] = row_vertex
-                bucket_rank0[p, :len(row_vertex)] = shard_plans[p][r][4]
-            if r == n_rounds - 1:
-                final_row_vertex[p, :len(row_vertex)] = row_vertex
-        round_gathers.append(jnp.asarray(g))
-    # rank-table depth of the rescan merge: max round-0 chunk rows any
-    # vertex owns — identical to the single-host plans' max_rows0, so the
-    # merge reduces through the same shapes in the same order
-    max_rows0 = max(1, int(-(-int(degrees.max()) // chunk))) if n else 1
-
-    fused_starts = fused_counts = fused_dmax = None
-    fused_entries: tuple = ()
-    fused_rv0 = fused_rank0 = None
-    if fused:
-        fused_starts, fused_counts, fused_dmax, entries = [], [], [], []
-        n_entries = m_pad
-        for r in range(n_rounds):
-            rows = int(r_pads[r])
-            n_steps = -(-rows // tile_r)
-            rs = np.zeros((n_shards, n_steps * tile_r), np.int32)
-            rc = np.zeros((n_shards, n_steps * tile_r), np.int32)
-            if r == 0:  # fused round-0 rows share the bucketed row order
-                fv = np.full((n_shards, n_steps * tile_r), PAD, np.int32)
-                fv[:, :row_vertex0.shape[1]] = row_vertex0
-                fused_rv0 = jnp.asarray(fv)
-                fr = np.zeros((n_shards, n_steps * tile_r), np.int32)
-                fr[:, :bucket_rank0.shape[1]] = bucket_rank0
-                fused_rank0 = jnp.asarray(fr)
-            for p in range(n_shards):
-                row_start, row_count = shard_plans[p][r][2:4]
-                rs[p, :len(row_start)] = row_start
-                rc[p, :len(row_count)] = row_count
-            rs = rs.reshape(n_shards, n_steps, tile_r)
-            rc = rc.reshape(n_shards, n_steps, tile_r)
-            fused_starts.append(jnp.asarray(rs))
-            fused_counts.append(jnp.asarray(rc))
-            fused_dmax.append(jnp.asarray(rc.max(axis=2, keepdims=True)))
-            entries.append(n_entries)
-            n_entries = n_steps * tile_r * k  # next round's flat source
-        fused_starts = tuple(fused_starts)
-        fused_counts = tuple(fused_counts)
-        fused_dmax = tuple(fused_dmax)
-        fused_entries = tuple(entries)
-
-    stream_gathers = stream_starts = stream_counts = stream_dmax = None
-    stream_final_rv = stream_rv0 = stream_rank0 = None
-    if stream:
-        from repro.graphs.csr import build_streamed_rounds
-        per_shard = []
-        for p in range(n_shards):
-            lo, hi = bounds[p], bounds[p + 1]
-            counts0 = degrees[lo:hi]
-            starts0 = np.zeros(hi - lo, dtype=np.int64)
-            starts0[1:] = np.cumsum(counts0)[:-1]
-            per_shard.append(build_streamed_rounds(
-                counts0, starts0, m_pad, k=k, chunk=chunk, tile_r=tile_r,
-                window_cap=window_entries, min_rounds=n_rounds))
-        sg, ss, sc, sd = [], [], [], []
-        for r in range(n_rounds):
-            n_win = max(pr[0][r]["row_start"].shape[0] for pr in per_shard)
-            w_max = max(pr[0][r]["window_entries"] for pr in per_shard)
-            g = np.full((n_shards, n_win, w_max), PAD, dtype=np.int32)
-            rs = np.zeros((n_shards, n_win, tile_r), dtype=np.int32)
-            rc = np.zeros((n_shards, n_win, tile_r), dtype=np.int32)
-            dm = np.zeros((n_shards, n_win, 1), dtype=np.int32)
-            for p, (rounds_np, _) in enumerate(per_shard):
-                rr = rounds_np[r]
-                nw, w_s = rr["row_start"].shape[0], rr["window_entries"]
-                # widening the window stride / appending all-pad windows
-                # never moves a real row's slot, so later rounds' slot-based
-                # gathers stay valid
-                g[p, :nw, :w_s] = rr["entry_gather"].reshape(nw, w_s)
-                rs[p, :nw] = rr["row_start"]
-                rc[p, :nw] = rr["row_count"]
-                dm[p, :nw] = rr["step_dmax"]
-            sg.append(jnp.asarray(g))
-            ss.append(jnp.asarray(rs))
-            sc.append(jnp.asarray(rc))
-            sd.append(jnp.asarray(dm))
-        stream_gathers, stream_starts = tuple(sg), tuple(ss)
-        stream_counts, stream_dmax = tuple(sc), tuple(sd)
-        n_slots_last = sg[-1].shape[1] * tile_r
-        frv = np.full((n_shards, n_slots_last), PAD, dtype=np.int32)
-        for p, (_, rtv) in enumerate(per_shard):
-            frv[p, :len(rtv)] = rtv
-        stream_final_rv = jnp.asarray(frv)
-        # round-0 window slot -> local vertex + chunk rank (appending
-        # all-pad windows never moves a real slot, so the per-shard slot
-        # maps pad safely: vertex -1, rank 0)
-        n_slots0 = sg[0].shape[1] * tile_r
-        srv0 = np.full((n_shards, n_slots0), PAD, dtype=np.int32)
-        srk0 = np.zeros((n_shards, n_slots0), dtype=np.int32)
-        for p, (rounds_np, _) in enumerate(per_shard):
-            rv = rounds_np[0]["row_to_vertex"]
-            srv0[p, :len(rv)] = rv
-            rk = rounds_np[0]["row_rank"]
-            srk0[p, :len(rk)] = rk
-        stream_rv0 = jnp.asarray(srv0)
-        stream_rank0 = jnp.asarray(srk0)
 
     send_idx = hub_idx_arr = None
     h_pad = hub_pad = 0
@@ -441,43 +312,33 @@ def build_dist_workspace(graph, n_shards: int, k: int = 8, chunk: int = 128,
 
     stream_apos = stream_aw = None
     if stream and aligned:
-        # Pre-gather each shard's round-0 (label position, weight) pairs
-        # into the windowed layout. Runs after the halo remap above so the
-        # stored positions index the exchange mode's actual label table.
-        n_win0, w_max0 = stream_gathers[0].shape[1], stream_gathers[0].shape[2]
-        ap = np.full((n_shards, n_win0, w_max0), PAD, dtype=np.int32)
-        aw = np.zeros((n_shards, n_win0, w_max0), dtype=np.float32)
-        for p, (rounds_np, _) in enumerate(per_shard):
-            rr = rounds_np[0]
-            nw, w_s = rr["row_start"].shape[0], rr["window_entries"]
-            g0 = rr["entry_gather"].reshape(nw, w_s)
-            valid = g0 >= 0
-            safe = np.maximum(g0, 0)
-            ap[p, :nw, :w_s] = np.where(valid, nbr_pos[p][safe], PAD)
-            aw[p, :nw, :w_s] = np.where(valid, wgts[p][safe], 0.0)
-        stream_apos = jnp.asarray(ap.reshape(n_shards, -1))
-        stream_aw = jnp.asarray(aw.reshape(n_shards, -1))
+        # Each shard bundle's remap_labels transform, applied AFTER the
+        # halo remap above so the stored positions index the exchange
+        # mode's actual label table (padded-global or local+halo).
+        stream_apos, stream_aw = stack_aligned_windows(bundles, nbr_pos,
+                                                       wgts)
 
     return DistLPAWorkspace(
         nbr_pos=jnp.asarray(nbr_pos), weights=jnp.asarray(wgts),
-        round_gathers=tuple(round_gathers),
-        final_row_vertex=jnp.asarray(final_row_vertex),
+        round_gathers=plans.round_gathers,
+        final_row_vertex=plans.final_row_vertex,
         init_labels=jnp.asarray(init_labels),
         n_nodes=int(n), v_pad=int(v_pad), k=int(k), chunk=int(chunk),
         send_idx=None if send_idx is None else jnp.asarray(send_idx),
         h_pad=int(h_pad),
         hub_idx=None if hub_idx_arr is None else jnp.asarray(hub_idx_arr),
         hub_pad=int(hub_pad),
-        fused_starts=fused_starts, fused_counts=fused_counts,
-        fused_dmax=fused_dmax, fused_entries=fused_entries,
-        stream_gathers=stream_gathers, stream_starts=stream_starts,
-        stream_counts=stream_counts, stream_dmax=stream_dmax,
-        stream_final_rv=stream_final_rv,
-        row_vertex0=jnp.asarray(row_vertex0), fused_rv0=fused_rv0,
-        stream_rv0=stream_rv0, entry_vertex=jnp.asarray(entry_vertex),
+        fused_starts=plans.fused_starts, fused_counts=plans.fused_counts,
+        fused_dmax=plans.fused_dmax, fused_entries=plans.fused_entries,
+        stream_gathers=plans.stream_gathers,
+        stream_starts=plans.stream_starts,
+        stream_counts=plans.stream_counts, stream_dmax=plans.stream_dmax,
+        stream_final_rv=plans.stream_final_rv,
+        row_vertex0=plans.row_vertex0, fused_rv0=plans.fused_rv0,
+        stream_rv0=plans.stream_rv0, entry_vertex=jnp.asarray(entry_vertex),
         stream_aligned_pos=stream_apos, stream_aligned_w=stream_aw,
-        bucket_rank0=jnp.asarray(bucket_rank0), fused_rank0=fused_rank0,
-        stream_rank0=stream_rank0, max_rows0=max_rows0)
+        bucket_rank0=plans.bucket_rank0, fused_rank0=plans.fused_rank0,
+        stream_rank0=plans.stream_rank0, max_rows0=plans.max_rows0)
 
 
 def _shard_move(nbr_pos, edge_w, round_gathers, final_row_vertex, labels,

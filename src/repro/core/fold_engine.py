@@ -62,9 +62,12 @@ tests/test_rescan_engines.py and tests/test_kernels.py).
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
 
 import jax.numpy as jnp
+
+if TYPE_CHECKING:  # import-time cycle guard: plan_bundle imports this module
+    from repro.core.plan_bundle import PlanBundle
 
 from repro.core import sketch as sketch_lib
 from repro.core.fold_program import FoldOutcome, FoldRequest, RoundSelection
@@ -109,10 +112,15 @@ class FoldEngine:
     #: does mg_select consume the StreamedFoldPlan?
     uses_stream_plan: bool = False
 
-    # -- the routed entry point (DESIGN.md §14) ---------------------------
-    def run(self, plan: FoldPlan, aux_plan, request: FoldRequest,
+    # -- the routed entry point (DESIGN.md §14/§15) -----------------------
+    def run(self, bundle: "PlanBundle", request: FoldRequest,
             entry_labels, entry_weights, labels) -> FoldOutcome:
         """Execute one fold iteration described by ``request``.
+
+        Plans are keyed off the :class:`~repro.core.plan_bundle.PlanBundle`
+        (the bucketed plan plus whichever aux plan this engine consumes,
+        via :meth:`PlanBundle.aux_for`) — consumers stopped threading
+        loose (plan, aux_plan) pairs in the PlanBundle refactor.
 
         Routing is total over the request space (kernelcheck R7):
         ``family="bm"`` -> :meth:`bm_fold_plan` (with the -1 sentinel
@@ -126,6 +134,8 @@ class FoldEngine:
         bit-identical to the dense request's on frontier vertices —
         lpa_move masks off-frontier moves either way.
         """
+        plan = bundle.plan
+        aux_plan = bundle.aux_for(self)
         selection = None
         if request.mode == "sparse":
             selection = RoundSelection(frontier=request.frontier,

@@ -9,8 +9,11 @@ function per (family x mode x backend) cell, every consumer builds a
 
     request = FoldRequest(family="mg", mode="sparse", rescan=True,
                           frontier=marks, seed=seed, cap_rows=cap)
-    outcome = engine.run(plan, aux_plan, request, entry_labels,
+    outcome = engine.run(bundle, request, entry_labels,
                          entry_weights, labels)
+
+where ``bundle`` is the :class:`repro.core.plan_bundle.PlanBundle` the
+spec's plans were built into (DESIGN.md §15).
 
 ``run`` routes the request to the backend's family executor, threading a
 :class:`RoundSelection` (the runtime half of the request: which rows or

@@ -22,6 +22,13 @@ engine keeps the fused dispatch structure while bounding VMEM residency
 to fixed entry windows (DESIGN.md §10); "auto" picks between fused and
 streamed from the round-0 entry volume vs ``vmem_budget_bytes``.
 
+Plan construction is one declarative call (DESIGN.md §15):
+``build_workspace`` derives a :class:`repro.core.plan_bundle.PlanSpec`
+from the config and hands it to ``build_plan_bundle``, which builds
+exactly the plans the config's FoldRequests need; the host-side sizing
+policy (dense row counts, sparse-overflow checks, the default row cap)
+lives on the bundle so this driver and ``dist_lpa`` share one copy.
+
 Deviation from the paper (documented in DESIGN.md §8): iterations are
 synchronous (pure-functional JAX) rather than asynchronous in-place. The
 unprocessed-frontier of paper Alg. 1 l. 31 is tracked every iteration
@@ -47,21 +54,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.exact import exact_choose
-from repro.core.fold_engine import get_engine, resolve_auto
+from repro.core.fold_engine import get_engine
 from repro.core.fold_program import FoldRequest
-from repro.graphs.csr import (CSRGraph, FoldPlan, FusedFoldPlan,
-                              StreamedFoldPlan, build_fold_plan,
-                              build_fused_fold_plan,
-                              build_streamed_fold_plan, fused_active_rows,
-                              fused_work_rows, streamed_active_windows,
-                              streamed_work_rows)
+from repro.core.plan_bundle import PlanBundle, build_plan_bundle, spec_for
+from repro.graphs.csr import CSRGraph
 
 Method = Literal["exact", "mg", "bm"]
 
 
 @dataclasses.dataclass(frozen=True)
 class LPAConfig:
-    method: Method = "mg"
+    method: Method = "mg"      # "exact" | "mg" | "bm" (paper §4)
     k: int = 8                 # MG sketch slots (paper: 8)
     chunk: int = 128           # virtual-vertex chunk width (paper D_H: 128)
     rho: int = 8               # Pick-Less cadence (paper: 8)
@@ -111,53 +114,46 @@ class LPAConfig:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class LPAWorkspace:
-    """Graph + static fold plan(s) + CSR-expanded edge sources.
+    """Graph + its plan bundle + CSR-expanded edge sources.
 
-    ``fused_plan``/``stream_plan`` are only built when the config selects
-    the corresponding backend ("auto" resolves first, then builds exactly
-    one of them); the aux plan serves every sketch — MG, BM and the rescan
-    ablation all fold through it on the fused/streamed engines. The
-    bucketed ``plan`` is always present (the jnp/pallas engines and the
-    reference oracles consume it).
+    The bundle holds the static fold plans the config's requests need
+    (``build_plan_bundle``): the bucketed plan always, plus exactly one
+    aux plan when the resolved backend is fused/streamed — the aux plan
+    serves every sketch (MG, BM and the rescan ablation all fold through
+    it). The legacy ``plan``/``fused_plan``/``stream_plan`` reads stay
+    available as properties delegating to the bundle.
     """
 
-    graph: CSRGraph
-    plan: FoldPlan
-    edge_src: jnp.ndarray  # [M] int32
-    fused_plan: Optional[FusedFoldPlan] = None
-    stream_plan: Optional[StreamedFoldPlan] = None
+    graph: CSRGraph        # the CSR graph the plans were built from
+    bundle: PlanBundle     # static fold plans + resolved PlanSpec
+    edge_src: jnp.ndarray  # [M] int32 CSR-expanded edge source vertices
 
     def tree_flatten(self):
-        return (self.graph, self.plan, self.edge_src, self.fused_plan,
-                self.stream_plan), ()
+        return (self.graph, self.bundle, self.edge_src), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
 
+    @property
+    def plan(self):
+        return self.bundle.plan
+
+    @property
+    def fused_plan(self):
+        return self.bundle.fused_plan
+
+    @property
+    def stream_plan(self):
+        return self.bundle.stream_plan
+
 
 def build_workspace(graph: CSRGraph, config: LPAConfig) -> LPAWorkspace:
-    degrees = np.asarray(graph.degrees)
-    plan = build_fold_plan(degrees, k=config.k, chunk=config.chunk)
-    backend = config.fold_backend
-    if backend == "auto":
-        backend = resolve_auto(int(degrees.sum()), config.vmem_budget_bytes)
-    fused_plan = stream_plan = None
-    if backend == "pallas_fused":
-        fused_plan = build_fused_fold_plan(degrees, k=config.k,
-                                           chunk=config.chunk)
-    elif backend == "pallas_stream":
-        # aligned_layout pre-materializes round 0's windowed entries from
-        # the CSR — "auto" runs through here too, so budget-forced
-        # streaming prefers the aligned layout whenever the config asks
-        stream_plan = build_streamed_fold_plan(
-            degrees, k=config.k, chunk=config.chunk,
-            window_entries=config.stream_window,
-            indices=np.asarray(graph.indices),
-            weights=np.asarray(graph.weights),
-            aligned=config.aligned_layout)
-    return LPAWorkspace(graph=graph, plan=plan, edge_src=graph.sources(),
-                        fused_plan=fused_plan, stream_plan=stream_plan)
+    """Thin wrapper over the bundle layer: spec the config, build the
+    bundle, attach the driver's edge-source expansion."""
+    return LPAWorkspace(graph=graph,
+                        bundle=build_plan_bundle(graph, spec_for(config)),
+                        edge_src=graph.sources())
 
 
 def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
@@ -179,20 +175,18 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
     ones on frontier vertices and the gate masks the rest, so the two
     request modes commute.
     """
-    graph, plan = ws.graph, ws.plan
+    graph, bundle = ws.graph, ws.bundle
     if sparse and frontier is None:
         raise ValueError("sparse=True needs a frontier (the compacted fold "
                          "is defined by the active vertex set)")
-    # "auto" resolves from the round-0 entry volume (a static plan field),
-    # deterministically matching the plan build_workspace constructed.
+    # the bundle's spec carries the RESOLVED backend ("auto" was decided
+    # at plan-build time), so the engine always finds its plan.
     # checked=False: lpa_move is traced/jitted and the checkify contract
     # proxy throws eagerly (REPRO_CHECKED must not leak into the jit path)
-    engine = get_engine(config.fold_backend, mg_variant=config.mg_variant,
-                        n_entries=plan.rounds[0].n_entries_in,
-                        vmem_budget_bytes=config.vmem_budget_bytes,
+    engine = get_engine(bundle.spec.backend, mg_variant=config.mg_variant,
                         checked=False)
 
-    aux = ws.stream_plan if engine.uses_stream_plan else ws.fused_plan
+    aux = bundle.aux_for(engine)
     if engine.uses_stream_plan and aux is not None and aux.aligned:
         # window-aligned layout (DESIGN.md §13): ONE O(window slots) gather
         # straight into window-slot order replaces labels[graph.indices]
@@ -224,7 +218,7 @@ def lpa_move(ws: LPAWorkspace, labels: jnp.ndarray, pick_less: jnp.ndarray,
             seed=seed,
             frontier=frontier if sparse else None,
             cap_rows=cap_rows if sparse else 0)
-        want = engine.run(plan, aux, request, nbr_labels, nbr_weights,
+        want = engine.run(bundle, request, nbr_labels, nbr_weights,
                           labels).want
     else:
         raise ValueError(f"unknown method {config.method!r}")
@@ -252,10 +246,10 @@ def mark_frontier(ws: LPAWorkspace, changed: jnp.ndarray) -> jnp.ndarray:
 
 @dataclasses.dataclass
 class LPAResult:
-    labels: jnp.ndarray
-    iterations: int
-    changed_history: list
-    converged: bool
+    labels: jnp.ndarray    # [N] int32 final label per vertex
+    iterations: int        # iterations actually run (<= config.max_iters)
+    changed_history: list  # per-iteration count of vertices that moved
+    converged: bool        # changed fraction fell below tau (non-PL iter)
     #: unprocessed-frontier fraction entering each iteration (diagnostics;
     #: the gate only acts on it when config.frontier_gate is set)
     frontier_history: list = dataclasses.field(default_factory=list)
@@ -264,48 +258,6 @@ class LPAResult:
     #: active rows (fused) or rows in active windows (streamed) — the
     #: skipped-row savings are visible as the gap to the dense entries.
     work_rows_history: list = dataclasses.field(default_factory=list)
-
-
-def _dense_work_rows(ws: LPAWorkspace) -> int:
-    """Real (non-padding) fold rows one dense iteration computes."""
-    if ws.fused_plan is not None:
-        return fused_work_rows(ws.fused_plan)
-    if ws.stream_plan is not None:
-        return streamed_work_rows(ws.stream_plan)
-    return sum(r.n_rows_total for r in ws.plan.rounds)
-
-
-def _sparse_fit(ws: LPAWorkspace, frontier_np: np.ndarray,
-                cap_rows: int) -> tuple[bool, int]:
-    """Host-side overflow check for the sparse mover.
-
-    Returns (fits, work_rows): whether every round's active unit count is
-    within ``cap_rows`` (rows for the fused layout, windows for the
-    streamed one — a window is the stream grid's dispatch unit), and the
-    rows the sparse fold would actually compute. Bucketed backends have no
-    compacted path, so they always 'fit' at the dense cost.
-    """
-    if ws.fused_plan is not None:
-        counts = fused_active_rows(ws.fused_plan, frontier_np)
-        return all(c <= cap_rows for c in counts), sum(counts)
-    if ws.stream_plan is not None:
-        stats = streamed_active_windows(ws.stream_plan, frontier_np)
-        return (all(w <= cap_rows for w, _ in stats),
-                sum(r for _, r in stats))
-    return True, _dense_work_rows(ws)
-
-
-def _default_cap_rows(ws: LPAWorkspace) -> int:
-    """Half the largest round's real rows — sparse only pays off once the
-    frontier has thinned below the compaction overhead's break-even."""
-    if ws.fused_plan is not None:
-        worst = max(int(np.count_nonzero(np.asarray(r.row_vertex) >= 0))
-                    for r in ws.fused_plan.rounds)
-    elif ws.stream_plan is not None:
-        worst = max(r.row_start.shape[0] for r in ws.stream_plan.rounds)
-    else:
-        worst = max(r.n_rows_total for r in ws.plan.rounds)
-    return max(1, worst // 2)
 
 
 def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
@@ -321,9 +273,7 @@ def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
             raise ValueError("frontier_sparse does not apply to the exact "
                              "method (no fold plan to compact)")
     ws = ws if ws is not None else build_workspace(graph, config)
-    cap_rows = (config.frontier_cap_rows
-                if config.frontier_cap_rows is not None
-                else _default_cap_rows(ws))
+    cap_rows = ws.bundle.cap_rows()
     move = functools.partial(lpa_move, config=config, cap_rows=cap_rows)
     frontier_fn = mark_frontier
     if jit:
@@ -341,7 +291,7 @@ def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
     history = []
     frontier_history = []
     work_rows_history = []
-    dense_rows = _dense_work_rows(ws)
+    dense_rows = ws.bundle.dense_work_rows()
     converged = False
     it = 0
     for it in range(config.max_iters):
@@ -351,8 +301,8 @@ def lpa(graph: CSRGraph, config: Optional[LPAConfig] = None,
         sparse = False
         work = dense_rows
         if config.frontier_sparse:
-            fits, sparse_work = _sparse_fit(ws, np.asarray(frontier),
-                                            cap_rows)
+            fits, sparse_work = ws.bundle.sparse_fit(np.asarray(frontier),
+                                                     cap_rows)
             if fits:
                 sparse, work = True, sparse_work
         labels, changed = move(ws, labels, jnp.asarray(pl), seed,

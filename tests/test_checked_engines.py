@@ -10,6 +10,7 @@ from jax.experimental import checkify
 from repro.core.checked import CheckedEngine
 from repro.core.fold_engine import ENGINES, get_engine
 from repro.core.fold_program import FoldRequest
+from repro.core.plan_bundle import PlanBundle, PlanSpec
 from repro.graphs.csr import (build_fold_plan, build_fused_fold_plan,
                               build_streamed_fold_plan)
 
@@ -34,6 +35,19 @@ def _setup(n=5, seed=0):
                                                   window_entries=WINDOW),
     }
     return plan, aux, el, ew, labels
+
+
+def _bundle(plan, aux, backend):
+    """run() keys its plan lookups off a PlanBundle; wrap the fixture's
+    plans into one per backend (golden parity with build_plan_bundle is
+    covered by tests/test_plan_bundle.py)."""
+    spec = PlanSpec(backend=backend, k=K, chunk=CHUNK, tile_r=TILE_R,
+                    stream_window=WINDOW)
+    return PlanBundle(
+        plan=plan,
+        fused_plan=aux[backend] if backend == "pallas_fused" else None,
+        stream_plan=aux[backend] if backend == "pallas_stream" else None,
+        spec=spec)
 
 
 @pytest.mark.parametrize("backend", ENGINES)
@@ -153,13 +167,14 @@ def test_checked_run_routes_sparse_requests_bit_identically(backend):
     __getattr__ would otherwise delegate it uncheck-wrapped), and the
     sparse lowering must pass through it unchanged."""
     plan, aux, el, ew, labels = _setup()
+    bundle = _bundle(plan, aux, backend)
     frontier = jnp.asarray([True, False, True, True, False])
     req = FoldRequest(family="mg", mode="sparse", seed=jnp.int32(3),
                       frontier=frontier, cap_rows=64)
     plain = get_engine(backend, checked=False).run(
-        plan, aux[backend], req, el, ew, labels)
+        bundle, req, el, ew, labels)
     checked = get_engine(backend, checked=True).run(
-        plan, aux[backend], req, el, ew, labels)
+        bundle, req, el, ew, labels)
     np.testing.assert_array_equal(np.asarray(plain.want),
                                   np.asarray(checked.want))
 
@@ -170,18 +185,19 @@ def test_checked_run_catches_bad_inputs_on_sparse_requests(backend):
     routes: a NaN entry weight on the BM route, a negative label on the
     rescan route."""
     plan, aux, el, ew, labels = _setup()
+    bundle = _bundle(plan, aux, backend)
     frontier = jnp.ones((5,), jnp.bool_)
     eng = get_engine(backend, checked=True)
     bm_req = FoldRequest(family="bm", mode="sparse", frontier=frontier,
                          cap_rows=64)
     with pytest.raises(checkify.JaxRuntimeError,
                        match="NaN/inf entry weight"):
-        eng.run(plan, aux[backend], bm_req, el, ew.at[0].set(jnp.nan),
+        eng.run(bundle, bm_req, el, ew.at[0].set(jnp.nan),
                 labels)
     rescan_req = FoldRequest(family="mg", rescan=True, mode="sparse",
                              seed=jnp.int32(0), frontier=frontier,
                              cap_rows=64)
     with pytest.raises(checkify.JaxRuntimeError,
                        match="negative input label"):
-        eng.run(plan, aux[backend], rescan_req, el, ew,
+        eng.run(bundle, rescan_req, el, ew,
                 labels.at[0].set(-7))

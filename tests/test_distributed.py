@@ -45,6 +45,34 @@ def test_dist_lpa_matches_single_device():
 
 
 @pytest.mark.slow  # spawns a multi-device subprocess
+def test_dist_bundle_workspace_matches_single_host_plain_and_halo():
+    """The collapsed workspace builder (edge-balanced partition ->
+    per-shard build_plan_bundle -> halo remap) stays bit-identical to
+    single-host lpa() on BOTH exchange modes for both sketches — the
+    distributed half of the PlanBundle golden-parity contract
+    (tests/test_plan_bundle.py covers the single-host half)."""
+    _run("""
+        import numpy as np, jax
+        from repro.graphs.generators import powerlaw_communities
+        from repro.core.distributed import build_dist_workspace, dist_lpa
+        from repro.core.lpa import lpa, LPAConfig
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("shard",))
+        g, _ = powerlaw_communities(768, p_in=0.5, mix=0.02, seed=7)
+        ws = build_dist_workspace(g, 4)
+        ws_h = build_dist_workspace(g, 4, halo=True)
+        for method in ("mg", "bm"):
+            ref = lpa(g, LPAConfig(method=method, rho=2))
+            for tag, w in (("plain", ws), ("halo", ws_h)):
+                got, it = dist_lpa(mesh, w, rho=2, method=method)
+                assert it == ref.iterations, (method, tag)
+                assert (np.asarray(got) == np.asarray(ref.labels)).all(), \\
+                    (method, tag)
+        print("bundle dist parity ok")
+    """, devices=4)
+
+
+@pytest.mark.slow  # spawns a multi-device subprocess
 def test_dist_lpa_2d_mesh_with_partitioner():
     """Distributed LPA over a 2-D mesh (flattened axes) with the
     LPA-community locality reorder feeding the shard layout."""

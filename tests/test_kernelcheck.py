@@ -23,7 +23,7 @@ def test_corpus_triggers_every_rule_exactly_once():
     # compaction operand fed to a kernel raw (rule b).
     counts = collections.Counter(f.rule for f in _corpus_findings())
     assert counts == {"R1": 1, "R2": 2, "R3": 1, "R4": 1, "R5": 1,
-                      "R6": 1, "R7": 1}, \
+                      "R6": 1, "R7": 1, "R8": 1}, \
         [f.format() for f in _corpus_findings()]
 
 
@@ -39,6 +39,7 @@ def test_corpus_findings_point_at_the_seeded_files():
         "R5": {"r5_registry.py"},
         "R6": {"r6_aligned_gather.py"},
         "R7": {"r7_request_closure.py"},
+        "R8": {"r8_bundle_dead_field.py"},
     }
 
 

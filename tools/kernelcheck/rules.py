@@ -1,4 +1,4 @@
-"""kernelcheck rules R1-R7 (see DESIGN.md §12 for the catalog).
+"""kernelcheck rules R1-R8 (see DESIGN.md §12 for the catalog).
 
 Each ``check_rN(index, ...)`` returns a list of Findings. Rules are
 conservative by construction: anything unresolvable is treated as unknown
@@ -64,12 +64,14 @@ def _raise_only(fn: ast.FunctionDef) -> bool:
 # ---------------------------------------------------------------------------
 
 
-def _plan_classes(index: RepoIndex) -> Dict[str, Dict[str, ast.AnnAssign]]:
-    """class name -> {field name -> AnnAssign} for plan dataclasses."""
+def _field_classes(index: RepoIndex, suffixes: Tuple[str, ...]
+                   ) -> Dict[str, Dict[str, ast.AnnAssign]]:
+    """class name -> {field name -> AnnAssign} for dataclasses whose name
+    ends with one of ``suffixes``."""
     plans: Dict[str, Dict[str, ast.AnnAssign]] = {}
     for mi in index.modules.values():
         for cname, cnode in mi.classes.items():
-            if not cname.endswith(_PLAN_SUFFIXES) or not _is_dataclass(cnode):
+            if not cname.endswith(suffixes) or not _is_dataclass(cnode):
                 continue
             fields = {}
             for item in cnode.body:
@@ -79,6 +81,11 @@ def _plan_classes(index: RepoIndex) -> Dict[str, Dict[str, ast.AnnAssign]]:
             if fields:
                 plans[cname] = fields
     return plans
+
+
+def _plan_classes(index: RepoIndex) -> Dict[str, Dict[str, ast.AnnAssign]]:
+    """class name -> {field name -> AnnAssign} for plan dataclasses."""
+    return _field_classes(index, _PLAN_SUFFIXES)
 
 
 def _ann_type(ann: ast.AST, plans) -> Optional[Tuple[str, str]]:
@@ -1063,6 +1070,59 @@ def check_r5(index: RepoIndex, tests_dir: Optional[str]) -> List[Finding]:
         # (d) every claimed non-reference backend has parity fixtures
         if tests_dir and os.path.isdir(tests_dir):
             findings.extend(_check_fixtures(engines, tests_dir, mi))
+
+        # (e) PlanSpec build closure: the declarative plan-build layer must
+        # construct plans for every registered backend, and must not build
+        # for backends the registry does not claim ("auto" resolves before
+        # the branch chain, so it is the one extra name allowed)
+        findings.extend(_check_spec_closure(index, engines))
+    return findings
+
+
+def _check_spec_closure(index: RepoIndex, engines: List[str]
+                        ) -> List[Finding]:
+    findings: List[Finding] = []
+    for pmi in index.modules.values():
+        if "PlanSpec" not in pmi.classes:
+            continue
+        bpb = pmi.functions.get("build_plan_bundle")
+        if bpb is None:
+            continue
+        resolved: Set[str] = set()
+        for node in ast.walk(bpb):
+            if not (isinstance(node, ast.If)
+                    and isinstance(node.test, ast.Compare)
+                    and isinstance(node.test.left, ast.Name)
+                    and node.test.left.id == "backend"
+                    and len(node.test.comparators) == 1):
+                continue
+            comp = node.test.comparators[0]
+            if isinstance(comp, ast.Constant) and isinstance(comp.value,
+                                                             str):
+                resolved.add(comp.value)
+            elif isinstance(comp, (ast.Tuple, ast.List)):
+                resolved.update(e.value for e in comp.elts
+                                if isinstance(e, ast.Constant)
+                                and isinstance(e.value, str))
+        for eng in engines:
+            if eng not in resolved:
+                findings.append(Finding(
+                    "R5", pmi.path, bpb.lineno,
+                    f"registry claims backend `{eng}` but "
+                    "build_plan_bundle has no plan-construction branch "
+                    "for it — a PlanSpec naming it cannot be built",
+                    "add the `backend == ...` branch building the plans "
+                    "that engine's requests consume (or drop the entry "
+                    "from ENGINES)"))
+        for bname in sorted(resolved):
+            if bname not in engines and bname != "auto":
+                findings.append(Finding(
+                    "R5", pmi.path, bpb.lineno,
+                    f"build_plan_bundle builds plans for `{bname}` which "
+                    "ENGINES does not claim — no get_engine call can ever "
+                    "consume them",
+                    "add the backend to ENGINES (and a get_engine branch) "
+                    "or delete the dead build branch"))
     return findings
 
 
@@ -1086,6 +1146,7 @@ def _check_fixtures(engines: List[str], tests_dir: str,
         evidence.append((path, consts, idents))
 
     findings = []
+    bundle_tokens = ("build_plan_bundle", "PlanSpec")
     for eng in engines:
         if eng in ("jnp", "auto"):
             continue  # jnp IS the reference oracle
@@ -1099,6 +1160,17 @@ def _check_fixtures(engines: List[str], tests_dir: str,
                     f"under {tests_dir}/ exercising it by name",
                     "add a test that resolves the engine via get_engine "
                     "and bit-compares against the jnp reference"))
+        # fixture closure keyed on the plan-build layer: every backend a
+        # PlanSpec can name needs a golden plan-equality fixture
+        ok = any(eng in consts and any(t in idents for t in bundle_tokens)
+                 for _, consts, idents in evidence)
+        if not ok:
+            findings.append(Finding(
+                "R5", mi.path, 1,
+                f"backend `{eng}` has no plan-bundle golden fixture under "
+                f"{tests_dir}/ building it through build_plan_bundle",
+                "add a golden plan-equality test keyed on PlanSpec "
+                "(build_plan_bundle output vs the csr.py builders)"))
     return findings
 
 
@@ -1244,6 +1316,88 @@ def check_r7(index: RepoIndex) -> List[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# R8 — dead bundle fields
+# ---------------------------------------------------------------------------
+
+#: bundle container classes are dataclasses named *Bundle — the build-time
+#: counterpart of the *Plan/*Round/*Bucket containers R1 covers
+_BUNDLE_SUFFIXES = ("Bundle",)
+#: pytree plumbing: reads here keep a field alive structurally without a
+#: real consumer, so they do not count as consumption
+_PYTREE_METHODS = ("tree_flatten", "tree_unflatten")
+
+
+def check_r8(index: RepoIndex) -> List[Finding]:
+    """Dead bundle fields: every field of a ``*Bundle`` dataclass must be
+    consumed by an attribute read outside the pytree plumbing
+    (``tree_flatten``/``tree_unflatten``). R1's dead-plan-field rule,
+    generalized to the plan-build layer: a field only the
+    flatten/unflatten round-trip touches rides every bundle for nothing.
+    Unlike R1, ``self.<field>`` reads inside the bundle's own methods DO
+    count — the shared sizing policy lives on the bundle."""
+    bundles = _field_classes(index, _BUNDLE_SUFFIXES)
+    if not bundles:
+        return []
+    # type through plan AND bundle classes so e.g. `bundle.plan.rounds`
+    # resolves the same way R1's receiver typing does
+    classes = {**_plan_classes(index), **bundles}
+    field_types: Dict[Tuple[str, str], Tuple[str, str]] = {}
+    for cname, fields in classes.items():
+        for fname, node in fields.items():
+            t = _ann_type(node.annotation, classes)
+            if t is not None:
+                field_types[(cname, fname)] = t
+
+    consumed: Set[Tuple[str, str]] = set()
+    any_names: Set[str] = set()
+    for mi in index.modules.values():
+        for qual, fn in mi.functions.items():
+            if qual.rsplit(".", 1)[-1] in _PYTREE_METHODS:
+                continue
+            cls = qual.split(".")[0] if "." in qual else None
+            typing = _Typing(classes, field_types, fn)
+            if cls in bundles:
+                typing.env.setdefault("self", ("inst", cls))
+                # re-propagate so locals assigned from self.* fields type
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Assign) \
+                            and len(node.targets) == 1 \
+                            and isinstance(node.targets[0], ast.Name):
+                        t = typing.type_of(node.value)
+                        if t is not None:
+                            typing.env[node.targets[0].id] = t
+            for node in ast.walk(fn):
+                if not (isinstance(node, ast.Attribute)
+                        and isinstance(node.ctx, ast.Load)):
+                    continue
+                base = node.value
+                if isinstance(base, ast.Name) and base.id in mi.imports:
+                    continue  # module attributes
+                t = typing.type_of(base)
+                if t is not None and t[0] == "inst" and t[1] in bundles:
+                    if node.attr in bundles[t[1]]:
+                        consumed.add((t[1], node.attr))
+                elif not (isinstance(base, ast.Name) and base.id == "self"):
+                    any_names.add(node.attr)
+
+    findings = []
+    for cname in sorted(bundles):
+        fields = bundles[cname]
+        mi = next(m for m in index.modules.values() if cname in m.classes)
+        for fname in fields:
+            if (cname, fname) in consumed or fname in any_names:
+                continue
+            findings.append(Finding(
+                "R8", mi.path, fields[fname].lineno,
+                f"dead bundle field: `{cname}.{fname}` is materialized by "
+                "the plan-build layer but never consumed outside the "
+                "pytree plumbing",
+                "drop the field (and its tree_flatten slot) or wire the "
+                "engine/driver lookup that should key off it"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -1258,5 +1412,6 @@ def run_all(index: RepoIndex, tests_dir: Optional[str] = None
     findings.extend(check_r5(index, tests_dir))
     findings.extend(check_r6(index))
     findings.extend(check_r7(index))
+    findings.extend(check_r8(index))
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings

@@ -1,0 +1,24 @@
+"""Seeded R8 violation: a bundle field only the pytree plumbing reads."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class ToyPlanBundle:
+    plan: int
+    debug_rows: int  # BUG: carried through tree_flatten, never consumed
+
+    def tree_flatten(self):
+        return (self.plan, self.debug_rows), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class ToyBundleEngine:
+    name = "toy-bundle"
+
+    def run(self, bundle: "ToyPlanBundle", req):
+        # only `plan` is ever keyed off the bundle; `debug_rows` rides
+        # every pytree for nothing
+        return bundle.plan + req
